@@ -1,0 +1,65 @@
+"""Paper Fig. 3 — simple-syscall latency ⇒ per-step dispatch overhead.
+
+The paper's claim: replacing the boundary *instruction* (syscall→call; here
+eager→jit) wins little, but bypassing the boundary *software* (entry/exit
+checks; here donation + in-graph multi-step) wins a lot for small requests.
+We measure a deliberately tiny step so the boundary dominates — the analogue
+of getppid().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OPTS, SMALL, block, row, timeit
+from repro.core import (L0_EAGER, L1_BASE, L2_BYP, L3_NSS, LinkageConfig,
+                        build_train_step, init_train_state)
+from repro.data import DataConfig, Pipeline
+from repro.optim import AdamWConfig
+
+OCFG = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10 ** 6)
+
+
+def run():
+    cfg = SMALL
+    pipe = Pipeline(cfg, DataConfig(global_batch=1, seq_len=8))
+    results = {}
+    for name, lk, iters in [
+        ("linux(L0_eager)", LinkageConfig(level=L0_EAGER), 3),
+        ("base(L1_jit)", LinkageConfig(level=L1_BASE), 30),
+        ("byp(L2_donate)", LinkageConfig(level=L2_BYP), 30),
+        ("nss(L3_scan8)", LinkageConfig(level=L3_NSS, nss_steps=8), 10),
+    ]:
+        state = init_train_state(jax.random.PRNGKey(0), cfg, OCFG)
+        step = build_train_step(cfg, OPTS, OCFG, lk)
+        k = lk.steps_per_call
+        batch = jax.tree.map(jnp.asarray,
+                             pipe.stacked_at(0, k) if k > 1 else pipe.batch_at(0))
+
+        def call(state=state, step=step, batch=batch):
+            # fresh state each call at donation levels (state is consumed)
+            s, m = step.fn(state, batch)
+            return s, m
+
+        # measure steady-state per-OPTIMIZER-STEP latency
+        s = state
+        for _ in range(2):
+            s, _ = step.fn(s, batch)          # warm compile
+        import time
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            s, m = step.fn(s, batch)
+            block(m)
+            times.append((time.perf_counter() - t0) / k)
+        times.sort()
+        us = times[len(times) // 2] * 1e6
+        results[name] = us
+        base = results.get("linux(L0_eager)", us)
+        row(f"fig3_dispatch_{name}", us,
+            f"speedup_vs_L0={base / us:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Table 7 — perf counters for Redis ⇒ compiled-program counters.
+
+perf gave the paper instructions/cycles/cache-miss counts; the compiled-XLA
+analogue is HLO FLOPs / HBM bytes / instruction & collective counts. We
+compare the *generic* lowering (materialized attention scores, whole-vocab
+logits) against the *shortcut* lowering (blockwise attention, chunked xent)
+for the same prefill program — the paper's signature Table-7 effect is fewer
+bytes touched at identical semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SMALL, row
+from repro.launch import hlo_analysis
+from repro.models import ModelOptions, init_params, prefill
+
+
+def _counters(cfg, opts, B=2, S=1024):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((B, S), jnp.int32)
+
+    def fn(params, toks):
+        return prefill(params, toks, cfg, opts, max_len=S)
+
+    compiled = jax.jit(fn).lower(params, toks).compile()
+    txt = compiled.as_text()
+    st = hlo_analysis.analyze(txt)
+    ca = compiled.cost_analysis() or {}
+    n_ops = sum(len(c.instructions) for c in
+                hlo_analysis.parse_computations(txt)[0].values())
+    return {"flops": st.flops, "hbm_bytes": st.hbm_bytes,
+            "xla_bytes": float(ca.get("bytes accessed", 0.0)),
+            "hlo_instructions": n_ops}
+
+
+def run():
+    cfg = SMALL
+    generic = ModelOptions(attn_impl="ref", scan_impl="ref",
+                           dtype=jnp.float32)
+    shortcut = dataclasses.replace(generic, attn_impl="chunked",
+                                   q_chunk=64, kv_chunk=64)
+    base = None
+    for name, opts in [("generic", generic), ("shortcut", shortcut)]:
+        c = _counters(cfg, opts)
+        if base is None:
+            base = c
+        row(f"table7_counters_{name}", 0.0,
+            f"flops={c['flops']:.3e};hbm_bytes={c['hbm_bytes']:.3e};"
+            f"xla_bytes={c['xla_bytes']:.3e};"
+            f"hlo_instructions={c['hlo_instructions']};"
+            f"xla_bytes_vs_generic={c['xla_bytes'] / base['xla_bytes']:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

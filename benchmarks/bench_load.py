@@ -1,0 +1,29 @@
+"""Paper Table 8 — Memcached tail latency under increasing load.
+
+Increase concurrent connections (batch size) and measure p99 request latency
+for the baseline vs the optimized spectrum point — the paper's claim: the
+gain persists under load.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.launch.serve import run_server
+
+
+def run():
+    for batch in (1, 2, 4, 8):
+        base = run_server("tinyllama-1.1b", "base", batch=batch,
+                          prompt_len=16, gen_len=16, requests=6)
+        opt = run_server("tinyllama-1.1b", "nss_shortcut", batch=batch,
+                         prompt_len=16, gen_len=16, requests=6)
+        imp = 100 * (base["p99_latency_s"] - opt["p99_latency_s"]) \
+            / base["p99_latency_s"]
+        row(f"table8_load_batch{batch}", base["p99_latency_s"] * 1e6,
+            f"opt_p99_us={opt['p99_latency_s'] * 1e6:.0f};"
+            f"improvement={imp:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

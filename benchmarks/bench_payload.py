@@ -1,0 +1,54 @@
+"""Paper Fig. 4 — system-call latency vs payload size.
+
+Sweep the step payload (tokens per step) and report L2/L3 gain over L1 — the
+paper's finding: the % gain shrinks with payload but stays significant.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import OPTS, SMALL, block, row
+from repro.core import (L1_BASE, L3_NSS, LinkageConfig, build_train_step,
+                        init_train_state)
+from repro.data import DataConfig, Pipeline
+from repro.optim import AdamWConfig
+
+OCFG = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10 ** 6)
+
+
+def _per_step_us(lk, cfg, batch_size, seq, iters=12):
+    pipe = Pipeline(cfg, DataConfig(global_batch=batch_size, seq_len=seq))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, OCFG)
+    step = build_train_step(cfg, OPTS, OCFG, lk)
+    k = lk.steps_per_call
+    batch = jax.tree.map(jnp.asarray,
+                         pipe.stacked_at(0, k) if k > 1 else pipe.batch_at(0))
+    s = state
+    for _ in range(3):
+        s, _ = step.fn(s, batch)
+    times = []
+    for _ in range(max(iters, 20)):
+        t0 = time.perf_counter()
+        s, m = step.fn(s, batch)
+        block(m)
+        times.append((time.perf_counter() - t0) / k)
+    return min(times) * 1e6   # min: robust to CPU scheduling noise
+
+
+def run():
+    cfg = SMALL
+    for tokens, (b, s) in [(8, (1, 8)), (64, (2, 32)), (256, (4, 64)),
+                           (1024, (8, 128))]:
+        us_l1 = _per_step_us(LinkageConfig(level=L1_BASE), cfg, b, s)
+        us_l3 = _per_step_us(LinkageConfig(level=L3_NSS, nss_steps=8), cfg, b, s)
+        gain = (us_l1 - us_l3) / us_l1 * 100
+        row(f"fig4_payload_{tokens}tok_L1", us_l1, "")
+        row(f"fig4_payload_{tokens}tok_L3", us_l3,
+            f"gain_vs_L1={gain:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Tables 4–6 — Redis throughput/latency across the UKL spectrum.
+
+Serve batched requests (prefill + decode) on a small LM at each linkage
+preset; report req/s, tokens/s, mean and p99 latency. The paper's ordering
+under test: base ≈ Linux < RET_BYP < RET_BYP(shortcut); incremental effort,
+incremental gain.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.launch.serve import run_server
+
+PRESETS = ["base", "byp", "ret_byp", "ret_byp_shortcut", "nss_shortcut"]
+
+
+def run():
+    base_tput = None
+    for preset in PRESETS:
+        rep = run_server("tinyllama-1.1b", preset, batch=4, prompt_len=32,
+                         gen_len=32, requests=8)
+        tput = rep["tokens_per_s"]
+        if base_tput is None:
+            base_tput = tput
+        row(f"table4_serving_{preset}",
+            rep["mean_latency_s"] * 1e6,
+            f"tokens_per_s={tput:.0f};p99_s={rep['p99_latency_s']:.3f};"
+            f"tput_vs_base={tput / base_tput:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Shared benchmark helpers. All benchmarks print ``name,us_per_call,derived``
+CSV rows (assignment contract) and run on whatever device exists (CPU here;
+the *relative* spectrum shape is the paper's claim under test)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import ModelOptions
+
+SMALL = get_config("tinyllama-1.1b").smoke()
+OPTS = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+
+
+def timeit(fn: Callable, *args, iters: int = 20, warmup: int = 3,
+           sync=None) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    if sync is not None:
+        sync(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if sync is not None:
+            sync(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def block(tree):
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, tree)
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

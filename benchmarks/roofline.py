@@ -1,0 +1,74 @@
+"""Roofline report (assignment deliverable g): reads the dry-run records and
+prints the per-(arch × shape × mesh) table used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import row
+
+DEFAULT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun_baseline.json")
+
+
+def load(path=DEFAULT):
+    with open(path) as f:
+        records = json.load(f)
+    return [enrich(r) for r in records]
+
+
+def enrich(r):
+    """Recompute the analytic MODEL_FLOPS (attention-aware) and derived
+    ratios from the stored measurements — keeps old dry-run records
+    consistent with the current accounting."""
+    from repro.configs import SHAPES, get_config
+    from repro.launch.cells import PEAK_FLOPS, model_flops_per_device
+    ndev = 512 if r.get("mesh_tag") == "2x16x16" else 256
+    mf = model_flops_per_device(get_config(r["arch"]), SHAPES[r["shape"]], ndev)
+    r["model_flops_per_device"] = mf
+    flops = r.get("flops_per_device") or 0.0
+    r["useful_flops_ratio"] = mf / flops if flops else 0.0
+    rf = r["roofline"]
+    bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    rf["step_time_lower_bound_s"] = bound
+    rf["roofline_fraction"] = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return r
+
+
+def markdown_table(records, mesh_tag="16x16") -> str:
+    lines = [
+        "| arch | shape | mem/dev GiB | compute s | memory s | collective s "
+        "| dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("mesh_tag") != mesh_tag:
+            continue
+        rf = r["roofline"]
+        mem = r["memory"].get("total_bytes_per_device", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.2f} "
+            f"| {rf['compute_s']:.4g} | {rf['memory_s']:.4g} "
+            f"| {rf['collective_s']:.4g} | {rf['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {rf['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def run(path=DEFAULT):
+    if not os.path.exists(path):
+        row("roofline_missing", 0.0, f"run dryrun first: {path}")
+        return
+    records = load(path)
+    for r in records:
+        rf = r["roofline"]
+        row(f"roofline_{r['mesh_tag']}_{r['arch']}_{r['shape']}",
+            rf["step_time_lower_bound_s"] * 1e6,
+            f"dominant={rf['dominant']};frac={rf['roofline_fraction']:.4f};"
+            f"useful={r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(load(sys.argv[1] if len(sys.argv) > 1 else DEFAULT),
+                         mesh_tag=sys.argv[2] if len(sys.argv) > 2 else "16x16"))

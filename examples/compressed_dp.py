@@ -1,0 +1,61 @@
+"""Beyond-paper distributed trick: int8-compressed gradient all-reduce for
+the data-parallel axis, inside shard_map (see repro/optim/compress.py).
+
+With one real device we build a 1-wide mesh: the point is the *program* —
+the same shard_map lowers to int8 all-gather + local reduce on a real pod,
+cutting cross-pod gradient bytes 8x (fp32 ring all-reduce ≈ 8 B/elem vs
+int8 gather ≈ (N-1)/N B/elem at N=2 pods).
+
+    PYTHONPATH=src python examples/compressed_dp.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs import get_config
+from repro.data import DataConfig, Pipeline
+from repro.models import ModelOptions, init_params, loss_fn
+from repro.optim import compress
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pipe = Pipeline(cfg, DataConfig(global_batch=4, seq_len=32))
+    batch = jax.tree.map(jnp.asarray, pipe.batch_at(0))
+
+    mesh = make_host_mesh(data=jax.device_count(), model=1)
+
+    def local_grads(params, batch):
+        return jax.grad(lambda p: loss_fn(p, batch, cfg, opts)[0])(params)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), {"inputs": P("data"), "labels": P("data")}),
+        out_specs=(P(), P()),
+        check_rep=False)
+    def dp_step(params, batch):
+        g = local_grads(params, batch)
+        g_fp32 = compress.psum_mean(g, "data")           # baseline
+        g_int8 = compress.compressed_psum_mean(g, "data")  # compressed
+        return g_fp32, g_int8
+
+    g_fp32, g_int8 = jax.jit(dp_step)(params, batch)
+    errs = []
+    for a, b in zip(jax.tree.leaves(g_fp32), jax.tree.leaves(g_int8)):
+        denom = float(jnp.max(jnp.abs(a))) or 1.0
+        errs.append(float(jnp.max(jnp.abs(a - b))) / denom)
+    print(f"leaves={len(errs)}  max relative error={max(errs):.4%} "
+          f"(int8 bound: 1/254 = {1/254:.4%} of per-tensor max)")
+    assert max(errs) <= 1 / 254 + 1e-3
+    print("compressed DP all-reduce OK — 8x fewer wire bytes at <0.4% error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Elastic-scaling example: train, checkpoint, then restart the same job on a
+*different* data-parallel width — the checkpoint re-shards on restore.
+
+On this 1-device container the meshes are (1,1)->(1,1) but the code path is
+identical to 256->512 chips: logically-saved arrays + device_put under the
+new mesh's NamedShardings (see repro/checkpoint/ckpt.py).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.core import L2_BYP, LinkageConfig, build_train_step, init_train_state
+from repro.data import DataConfig, Pipeline
+from repro.models import ModelOptions
+from repro.optim import AdamWConfig
+from repro.sharding.rules import ArchSharding, named
+from repro.launch.mesh import make_host_mesh
+
+CKPT = "/tmp/repro_elastic_ckpt"
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=60)
+    pipe = Pipeline(cfg, DataConfig(global_batch=4, seq_len=32))
+    lk = LinkageConfig(level=L2_BYP)
+    shutil.rmtree(CKPT, ignore_errors=True)
+
+    # ---- phase 1: train 20 steps on "mesh A", checkpoint
+    state = init_train_state(jax.random.PRNGKey(0), cfg, ocfg)
+    step = build_train_step(cfg, opts, ocfg, lk)
+    for s in range(20):
+        state, m = step.fn(state, jax.tree.map(jnp.asarray, pipe.batch_at(s)))
+    snap = jax.tree.map(lambda x: x.copy(), state)
+    ckpt.save(CKPT, 20, jax.tree.map(lambda x: np.asarray(jax.device_get(x)), snap))
+    loss_a = float(jax.device_get(m["loss"]))
+    print(f"mesh A: trained to step 20, loss={loss_a:.4f}, checkpointed")
+
+    # ---- phase 2: relaunch on "mesh B" with explicit (re)shardings
+    mesh_b = make_host_mesh(data=1, model=1)
+    sh = ArchSharding(cfg, mesh_b)
+    state_b_like = init_train_state(jax.random.PRNGKey(1), cfg, ocfg)
+    pspecs = sh.param_specs(state_b_like.params)
+    from repro.core.step import TrainState
+    from repro.optim.adamw import AdamWState
+    from jax.sharding import PartitionSpec as P
+    specs = TrainState(params=pspecs,
+                       opt=AdamWState(count=P(), mu=pspecs, nu=pspecs),
+                       step=P())
+    restored = ckpt.restore(CKPT, 20, state_b_like,
+                            shardings=named(mesh_b, specs))
+    step_b = build_train_step(cfg, opts, ocfg, lk)
+    state = restored
+    for s in range(20, 40):
+        state, m = step_b.fn(state, jax.tree.map(jnp.asarray, pipe.batch_at(s)))
+    loss_b = float(jax.device_get(m["loss"]))
+    print(f"mesh B: resumed at step 20 with resharded state, "
+          f"trained to 40, loss={loss_b:.4f}")
+    assert loss_b < loss_a, "loss should keep decreasing after elastic restart"
+    print("elastic restart OK: training continued seamlessly on the new mesh")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: train a small LM across the whole UKL linkage spectrum.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's configuration spectrum on one model (the incremental-effort
+story of UKL §3): identical semantics at every level, progressively cheaper
+boundaries. Takes ~2 minutes on CPU.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (L0_EAGER, L1_BASE, L2_BYP, L3_NSS, LinkageConfig,
+                        build_train_step, init_train_state)
+from repro.data import DataConfig, Pipeline
+from repro.models import ModelOptions
+from repro.optim import AdamWConfig
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    pipe = Pipeline(cfg, DataConfig(global_batch=8, seq_len=64))
+
+    spectrum = [
+        ("linux   (L0: op-at-a-time, every op a 'syscall')",
+         LinkageConfig(level=L0_EAGER), 4),
+        ("base    (L1: app linked into one XLA program)",
+         LinkageConfig(level=L1_BASE), 24),
+        ("byp     (L2: + donated buffers, no entry/exit software)",
+         LinkageConfig(level=L2_BYP), 24),
+        ("nss     (L3: + 8 steps fused in-graph, zero host transitions)",
+         LinkageConfig(level=L3_NSS, nss_steps=8), 24),
+    ]
+
+    print(f"model: {cfg.name}  params={cfg.param_count():,}")
+    for name, lk, steps in spectrum:
+        state = init_train_state(jax.random.PRNGKey(0), cfg, ocfg)
+        step = build_train_step(cfg, opts, ocfg, lk)
+        k = lk.steps_per_call
+        # warmup/compile
+        batch = jax.tree.map(jnp.asarray,
+                             pipe.stacked_at(0, k) if k > 1 else pipe.batch_at(0))
+        state, m = step.fn(state, batch)
+        jax.tree.map(lambda x: x.block_until_ready(), m)
+        t0 = time.perf_counter()
+        s = k
+        while s < steps:
+            batch = jax.tree.map(
+                jnp.asarray,
+                pipe.stacked_at(s, k) if k > 1 else pipe.batch_at(s))
+            state, m = step.fn(state, batch)
+            s += k
+        jax.tree.map(lambda x: x.block_until_ready(), m)
+        dt = time.perf_counter() - t0
+        print(f"  {name}")
+        print(f"      {1e3 * dt / (s - k):8.2f} ms/step   "
+              f"loss@{s}={float(jax.device_get(m['loss'])):.4f}")
+
+
+if __name__ == "__main__":
+    main()

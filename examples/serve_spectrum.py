@@ -1,0 +1,39 @@
+"""Serving example (the paper's Redis evaluation, §5.5): batched requests
+against a small LM at each linkage preset — base model, BYP, RET_BYP,
+RET_BYP(shortcut), NSS(shortcut) — reporting throughput and tail latency.
+
+    PYTHONPATH=src python examples/serve_spectrum.py [--arch rwkv6-7b]
+"""
+import argparse
+import json
+
+from repro.launch.serve import run_server
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="tinyllama-1.1b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=48)
+    p.add_argument("--gen-len", type=int, default=48)
+    p.add_argument("--requests", type=int, default=6)
+    args = p.parse_args()
+
+    base = None
+    print(f"{'preset':20s} {'tok/s':>10s} {'mean lat':>10s} {'p99 lat':>10s} "
+          f"{'vs base':>8s}")
+    for preset in ("base", "byp", "ret_byp", "ret_byp_shortcut",
+                   "nss_shortcut"):
+        rep = run_server(args.arch, preset, batch=args.batch,
+                         prompt_len=args.prompt_len, gen_len=args.gen_len,
+                         requests=args.requests)
+        if base is None:
+            base = rep["tokens_per_s"]
+        print(f"{preset:20s} {rep['tokens_per_s']:10.0f} "
+              f"{rep['mean_latency_s'] * 1e3:9.1f}ms "
+              f"{rep['p99_latency_s'] * 1e3:9.1f}ms "
+              f"{rep['tokens_per_s'] / base:7.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Embed the roofline markdown tables into EXPERIMENTS.md markers."""
+import sys
+sys.path.insert(0, "src")
+from benchmarks.roofline import load, markdown_table
+
+exp = open("EXPERIMENTS.md").read()
+base = markdown_table(load("results/dryrun_baseline.json"), "16x16")
+opt = markdown_table(load("results/dryrun_optimized.json"), "16x16")
+base_mp = markdown_table(load("results/dryrun_baseline.json"), "2x16x16")
+opt_mp = markdown_table(load("results/dryrun_optimized.json"), "2x16x16")
+exp = exp.replace("<!-- ROOFLINE_BASELINE -->",
+                  "**16×16 (single pod):**\n\n" + base +
+                  "\n\n**2×16×16 (multi-pod):**\n\n" + base_mp)
+exp = exp.replace("<!-- ROOFLINE_OPTIMIZED -->",
+                  "**16×16 (single pod):**\n\n" + opt +
+                  "\n\n**2×16×16 (multi-pod):**\n\n" + opt_mp)
+open("EXPERIMENTS.md", "w").write(exp)
+print("embedded")

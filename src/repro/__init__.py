@@ -1,0 +1,7 @@
+"""UKL-JAX: Unikernel-Linux-style linkage spectrum for JAX training/serving.
+
+The paper's contribution (progressively erasing the application/kernel
+boundary on one codebase) lives in ``repro.core``; everything else is the
+substrate a production framework needs.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import latest_step, list_steps, prune, restore, save
+
+__all__ = ["latest_step", "list_steps", "prune", "restore", "save"]

@@ -1,0 +1,61 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, LayerSpec, MambaConfig, MoEConfig,
+                                ShapeConfig, SHAPES, shape_applicable)
+
+_ARCH_MODULES = {
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen2-7b": "qwen2_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "mistral-large-123b": "mistral_large_123b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "musicgen-medium": "musicgen_medium",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+# beyond the assigned pool — selectable but excluded from the assigned
+# dry-run cell matrix (all_cells) so the deliverable counts stay exact
+_EXTRA_MODULES = {
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+
+def list_archs(include_extras: bool = False) -> List[str]:
+    names = list(_ARCH_MODULES)
+    if include_extras:
+        names += list(_EXTRA_MODULES)
+    return names
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).smoke()
+    modname = _ARCH_MODULES.get(name) or _EXTRA_MODULES.get(name)
+    if modname is None:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs(True)}")
+    mod = importlib.import_module(f"repro.configs.{modname}")
+    return mod.ARCH
+
+
+def all_cells() -> List[tuple]:
+    """All runnable (arch, shape) dry-run cells, with skips applied."""
+    cells = []
+    for a in list_archs():
+        arch = get_config(a)
+        for s in SHAPES.values():
+            if shape_applicable(arch, s):
+                cells.append((a, s.name))
+    return cells
+
+
+__all__ = [
+    "ArchConfig", "LayerSpec", "MoEConfig", "MambaConfig", "ShapeConfig",
+    "SHAPES", "shape_applicable", "get_config", "list_archs", "all_cells",
+]

@@ -1,0 +1,127 @@
+"""Co-running "processes" next to the linked step — UKL's multi-process model.
+
+UKL's key departure from classic unikernels is that ordinary processes keep
+running beside the kernel-linked application, communicating over standard
+IPC. Here the linked (compiled) step co-runs with ordinary host-side workers
+on standard Python/JAX "IPC":
+
+  * ``PrefetchWorker``  — the data pipeline stages batches onto device ahead
+    of the step (the NSS_PS pinned buffer feeder);
+  * ``AsyncCheckpointer`` — serializes state snapshots off the critical path;
+  * ``MetricWriter``    — drains RET-mode metric futures without blocking
+    the dispatch thread.
+
+None of them ever blocks the step dispatch; all are plain threads + queues,
+exactly the "tooling keeps working" property the paper insists on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+
+class PrefetchWorker:
+    """Stages batches from a host iterator onto device, ``depth`` ahead."""
+
+    def __init__(self, it: Iterator, put_fn: Callable[[Any], Any],
+                 depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def run():
+            try:
+                for item in it:
+                    if self._stop.is_set():
+                        return
+                    self._q.put(put_fn(item))
+            finally:
+                self._q.put(None)
+
+        self._t = threading.Thread(target=run, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        while True:  # drain so the producer can exit
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+
+class AsyncCheckpointer:
+    """Runs ``save_fn(state, step)`` on a worker thread; never blocks a step.
+
+    The state is snapshotted to host *asynchronously* via device_get inside
+    the worker — callers at L2 (donation) must pass an un-donated reference,
+    which the driver guarantees by checkpointing before dispatching the step.
+    """
+
+    def __init__(self, save_fn: Callable[[Any, int], None]):
+        self._save_fn = save_fn
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            state, step = item
+            try:
+                host_state = jax.tree.map(lambda x: jax.device_get(x), state)
+                self._save_fn(host_state, step)
+            except BaseException as e:  # surfaced on next submit/close
+                self._err = e
+
+    def submit(self, state, step: int):
+        if self._err is not None:
+            raise self._err
+        self._q.put((state, step))
+
+    def close(self, wait: bool = True):
+        self._q.put(None)
+        if wait:
+            self._t.join()
+        if self._err is not None:
+            raise self._err
+
+
+class MetricWriter:
+    """Drains metric futures on a worker thread (RET-mode companion)."""
+
+    def __init__(self, sink: Callable[[int, dict], None]):
+        self._sink = sink
+        self._q: "queue.Queue" = queue.Queue()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, metrics = item
+            self._sink(step, jax.tree.map(lambda x: jax.device_get(x), metrics))
+
+    def submit(self, step: int, metrics):
+        self._q.put((step, metrics))
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()

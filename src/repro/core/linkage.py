@@ -1,0 +1,133 @@
+"""The UKL linkage spectrum — the paper's contribution, adapted to JAX/TPU.
+
+UKL (Unikernel Linux, EuroSys'23) shows that a single codebase can expose a
+*configuration spectrum* between a general-purpose OS and a specialized
+unikernel, by progressively erasing the application/kernel boundary for one
+"linked" application:
+
+    Linux  →  base model (link, syscall→call)  →  BYP (skip entry/exit
+    software)  →  RET (cheap returns)  →  NSS (shared stacks)  →  shortcuts
+    (call the specialized internal path directly)
+
+This module is the same spectrum for the host-Python ⇄ XLA ⇄ device boundary:
+
+    L0_EAGER    op-at-a-time dispatch — every kernel service is a "syscall".
+    L1_BASE     the whole step is traced & *linked* into one XLA program
+                (``jax.jit``). The boundary instruction is gone; the per-call
+                software (arg validation, sharding inference, output alloc)
+                remains. Paper analogue: base model, <5% win expected.
+    L2_BYP      bypass the boundary software: donated input buffers (no
+                alloc/copy on entry), static in/out shardings (no re-
+                inference). Paper analogue: UKL_BYP.
+    L3_NSS      no host transition between steps at all: K microsteps fused
+                in-graph with ``lax.scan`` over a pre-staged ("pinned",
+                NSS_PS) device batch. Paper analogue: UKL_NSS/NSS_PS.
+
+  Orthogonal flags (combinable, like the paper's Kconfig options):
+    ret_async   "ret vs iret": don't synchronize on step return; metrics stay
+                on device as futures, the host blocks only every
+                ``sync_every`` steps. Paper analogue: UKL_RET.
+    shortcut    replace generic polymorphic lowerings with the specialized
+                path: Pallas kernels (flash attention, fused RMSNorm, fused
+                recurrences) on TPU, blockwise-jnp forms elsewhere. Paper
+                analogue: the 10-LOC Redis tcp_sendmsg shortcut.
+
+Exactly as in the paper, L0/L1 preserve every invariant (any model runs
+unmodified), while higher levels impose app-visible constraints: L2 donation
+invalidates the caller's state reference, L3 requires the data for K steps to
+be staged on device (the "pinned stack"), shortcuts change numerics at the
+kernel-tolerance level. ``validate()`` enforces what each level may assume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.layers import ModelOptions
+
+L0_EAGER = "L0_EAGER"
+L1_BASE = "L1_BASE"
+L2_BYP = "L2_BYP"
+L3_NSS = "L3_NSS"
+
+LEVELS = (L0_EAGER, L1_BASE, L2_BYP, L3_NSS)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkageConfig:
+    level: str = L2_BYP
+    nss_steps: int = 4            # microsteps fused in-graph at L3
+    ret_async: bool = False       # UKL_RET analogue: async metric return
+    sync_every: int = 16          # host sync cadence when ret_async
+    shortcut: bool = False        # specialized kernels for hot paths
+    decode_steps: int = 32        # serving L3: tokens decoded per program
+
+    def validate(self) -> None:
+        if self.level not in LEVELS:
+            raise ValueError(f"unknown linkage level {self.level!r}")
+        if self.level == L3_NSS and self.nss_steps < 1:
+            raise ValueError("L3_NSS needs nss_steps >= 1")
+        if self.level == L0_EAGER and self.shortcut:
+            raise ValueError(
+                "shortcuts require a linked (jit) program — like calling "
+                "tcp_sendmsg from userspace, L0 cannot take them")
+
+    @property
+    def donate(self) -> bool:
+        """L2+ donates the state buffers (BYP: no alloc/copy on entry)."""
+        return self.level in (L2_BYP, L3_NSS)
+
+    @property
+    def explicit_shardings(self) -> bool:
+        """L2+ pins in/out shardings (BYP: no per-call inference)."""
+        return self.level in (L2_BYP, L3_NSS)
+
+    @property
+    def steps_per_call(self) -> int:
+        return self.nss_steps if self.level == L3_NSS else 1
+
+    def model_options(self, base: Optional[ModelOptions] = None,
+                      on_tpu: bool = False, lowering_only: bool = False
+                      ) -> ModelOptions:
+        """Resolve ModelOptions for this linkage level.
+
+        shortcut=True selects the specialized implementations. On TPU that is
+        the Pallas kernels; for CPU execution the same kernels run under
+        interpret=True; for *lowering-only* paths (the dry-run / roofline) the
+        blockwise-jnp forms are used so the HLO stays clean.
+        """
+        base = base or ModelOptions()
+        if not self.shortcut:
+            return base
+        # On TPU the shortcut is the compiled Pallas kernel; everywhere else
+        # (CPU execution, host-platform dry-run lowering) it is the blockwise
+        # jnp form of the same algorithm. interpret=True Pallas is reserved
+        # for correctness tests — it is an interpreter, not a fast path.
+        impl = "pallas" if on_tpu else "chunked"
+        return dataclasses.replace(
+            base,
+            attn_impl=impl,
+            scan_impl=impl,
+            fused_norm=on_tpu,
+        )
+
+
+# Named presets mirroring the paper's evaluated configurations -------------
+PRESETS = {
+    "linux": LinkageConfig(level=L0_EAGER),
+    "base": LinkageConfig(level=L1_BASE),
+    "byp": LinkageConfig(level=L2_BYP),
+    "ret_byp": LinkageConfig(level=L2_BYP, ret_async=True),
+    "nss": LinkageConfig(level=L3_NSS),
+    "ret_byp_shortcut": LinkageConfig(level=L2_BYP, ret_async=True,
+                                      shortcut=True),
+    "nss_shortcut": LinkageConfig(level=L3_NSS, ret_async=True, shortcut=True),
+}
+
+
+def preset(name: str) -> LinkageConfig:
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; known: {list(PRESETS)}")
+    return PRESETS[name]

@@ -1,0 +1,207 @@
+"""Step builders: train / prefill / decode programs at a given linkage level.
+
+``build_train_step`` / ``build_decode_step`` return ``LinkedStep`` objects —
+the "vmlinux binary" of UKL: the application (model) and the kernel (runtime:
+optimizer, collectives, caches) linked into one compiled program, with the
+boundary behavior dictated by ``LinkageConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.linkage import L0_EAGER, L3_NSS, LinkageConfig
+from repro.models import init_params, loss_fn, decode_step as model_decode
+from repro.models.layers import ModelOptions
+from repro.optim import adamw
+from repro.sharding.rules import ArchSharding, named
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def init_train_state(key, cfg: ArchConfig, ocfg: adamw.AdamWConfig,
+                     param_dtype=jnp.float32) -> TrainState:
+    params = init_params(key, cfg, param_dtype)
+    return TrainState(params=params, opt=adamw.init(ocfg, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ArchConfig, opts: ModelOptions,
+                    ocfg: adamw.AdamWConfig) -> Callable:
+    """The pure single-step function (microstep of every linkage level)."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        def lf(p):
+            return loss_fn(p, batch, cfg, opts)
+
+        grads, metrics = jax.grad(lf, has_aux=True)(state.params)
+        new_params, new_opt, om = adamw.update(ocfg, grads, state.opt,
+                                               state.params)
+        metrics = dict(metrics, **om)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class LinkedStep:
+    """A step program linked at some point of the UKL spectrum."""
+    fn: Callable                   # python callable (jit'd unless L0)
+    linkage: LinkageConfig
+    in_shardings: Any = None
+    out_shardings: Any = None
+    _pending: Any = None           # RET: last un-synced metrics future
+
+    def __call__(self, state, batch):
+        state, metrics = self.fn(state, batch)
+        if self.linkage.ret_async:
+            # "ret": return without synchronizing; keep the future
+            self._pending = metrics
+            return state, None
+        # "iret": full synchronization on every return
+        metrics = jax.tree.map(lambda x: x.block_until_ready(), metrics)
+        return state, metrics
+
+    def sync(self):
+        """RET mode: block on the most recent metrics future."""
+        if self._pending is None:
+            return None
+        out = jax.tree.map(lambda x: jax.device_get(x), self._pending)
+        self._pending = None
+        return out
+
+
+def build_train_step(cfg: ArchConfig, opts: ModelOptions,
+                     ocfg: adamw.AdamWConfig, linkage: LinkageConfig,
+                     mesh: Optional[Mesh] = None,
+                     global_batch: Optional[int] = None) -> LinkedStep:
+    linkage.validate()
+    micro = make_train_step(cfg, opts, ocfg)
+
+    if linkage.level == L3_NSS:
+        # K microsteps fused in-graph: zero host transitions between steps.
+        # batch leaves carry a leading K dim (the pre-staged NSS_PS buffer).
+        def fused(state, batch_k):
+            def body(s, b):
+                s, m = micro(s, b)
+                return s, m
+            state, ms = lax.scan(body, state, batch_k)
+            # return last-step metrics (cheap; full history stays on device)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+            return state, metrics
+        step_fn = fused
+    else:
+        step_fn = micro
+
+    if linkage.level == L0_EAGER:
+        # op-at-a-time: every primitive is its own dispatch ("syscall")
+        def eager(state, batch):
+            with jax.disable_jit():
+                return step_fn(state, batch)
+        return LinkedStep(fn=eager, linkage=linkage)
+
+    jit_kwargs: Dict[str, Any] = {}
+    if linkage.donate:
+        jit_kwargs["donate_argnums"] = (0,)
+    fn = jax.jit(step_fn, **jit_kwargs)
+    return LinkedStep(fn=fn, linkage=linkage)
+
+
+def build_sharded_train_step(cfg: ArchConfig, opts: ModelOptions,
+                             ocfg: adamw.AdamWConfig, linkage: LinkageConfig,
+                             mesh: Mesh, state_like, global_batch: int,
+                             ep_resident: bool = False):
+    """Distributed variant: explicit in/out shardings over ``mesh``.
+
+    ``state_like`` may be a TrainState of arrays *or* of ShapeDtypeStructs —
+    only the tree structure and shapes are read, so the dry-run can build the
+    fully-sharded program without allocating a single parameter.
+    Returns (jitted_fn, state_shardings, batch_shardings).
+    """
+    linkage.validate()
+    sh = ArchSharding(cfg, mesh, ep_resident=ep_resident)
+    pspecs = sh.param_specs(state_like.params)
+    state_specs = TrainState(
+        params=pspecs,
+        opt=adamw.AdamWState(count=P(), mu=pspecs, nu=pspecs),
+        step=P(),
+    )
+    bspecs = sh.train_batch_specs(global_batch)
+    if linkage.level == L3_NSS:
+        bspecs = {k: P(None, *v) for k, v in bspecs.items()}
+    metric_specs = None  # replicated outputs
+
+    micro = make_train_step(cfg, opts, ocfg)
+    if linkage.level == L3_NSS:
+        def step_fn(state, batch_k):
+            def body(s, b):
+                return micro(s, b)
+            state, ms = lax.scan(body, state, batch_k)
+            return state, jax.tree.map(lambda m: m[-1], ms)
+    else:
+        step_fn = micro
+
+    jit_kwargs: Dict[str, Any] = {}
+    if linkage.donate:
+        jit_kwargs["donate_argnums"] = (0,)
+    fn = jax.jit(
+        step_fn,
+        in_shardings=(named(mesh, state_specs), named(mesh, bspecs)),
+        out_shardings=(named(mesh, state_specs), None),
+        **jit_kwargs,
+    )
+    return fn, state_specs, bspecs
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_decode_fn(cfg: ArchConfig, opts: ModelOptions, linkage: LinkageConfig,
+                   sample_greedy: bool = True) -> Callable:
+    """Decode ``linkage.decode_steps`` tokens per program at L3, else one."""
+
+    def one(params, cache, tokens):
+        logits, cache = model_decode(params, cache, tokens, cfg, opts)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, nxt
+
+    if linkage.level == L3_NSS:
+        def many(params, cache, tokens):
+            def body(carry, _):
+                cache, toks = carry
+                cache, nxt = one(params, cache, toks)
+                return (cache, nxt), nxt
+            (cache, last), seq = lax.scan(body, (cache, tokens), None,
+                                          length=linkage.decode_steps)
+            return cache, seq.swapaxes(0, 1)     # (B, K)
+        return many
+
+    def single(params, cache, tokens):
+        cache, nxt = one(params, cache, tokens)
+        return cache, nxt[:, None]
+    return single
+
+
+def build_decode_step(cfg: ArchConfig, opts: ModelOptions,
+                      linkage: LinkageConfig) -> Callable:
+    linkage.validate()
+    fn = make_decode_fn(cfg, opts, linkage)
+    if linkage.level == L0_EAGER:
+        def eager(params, cache, tokens):
+            with jax.disable_jit():
+                return fn(params, cache, tokens)
+        return eager
+    kwargs = {"donate_argnums": (1,)} if linkage.donate else {}
+    return jax.jit(fn, **kwargs)

@@ -1,0 +1,101 @@
+"""One-token decode attention Pallas kernel (flash-decode style).
+
+The single query token attends to the whole KV cache. The cache axis is the
+inner ("arbitrary") grid dimension; online-softmax state persists in VMEM
+scratch. All query heads of one KV head (the GQA group) are processed together
+so each cache tile is read exactly once — decode attention is purely
+memory-bound, and this keeps the kernel at one pass over the cache (the
+roofline minimum). Slot validity (circular-buffer occupancy + sliding-window
+bounds) is precomputed by the wrapper into a (T,) mask.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, msk_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, nt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bt, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    live = msk_ref[0] != 0                             # (bt,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(live[None, :], s, NEG_INF)           # (G, bt)
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.where(live[None, :], jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q, k, v, valid, *, block_t: int = 512,
+                     interpret: bool = False):
+    """q:(B,HQ,dh); k,v:(B,T,HKV,dh); valid:(T,) bool. -> (B,HQ,dh)."""
+    B, HQ, dh = q.shape
+    T, HKV = k.shape[1], k.shape[2]
+    G = HQ // HKV
+    scale = 1.0 / math.sqrt(dh)
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    padf = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else t
+    kT = padf(k.transpose(0, 2, 1, 3))                 # (B,HKV,T,dh)
+    vT = padf(v.transpose(0, 2, 1, 3))
+    dhp = (-dh) % 128
+    if dhp:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, dhp)))
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+    else:
+        qp = q
+    dhf = dh + dhp
+    qg = qp.reshape(B, HKV, G, dhf)
+    mask = jnp.pad(valid.astype(jnp.int32), (0, pad)).reshape(1, -1)
+    nt = (T + pad) // bt
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, nt=nt),
+        grid=(B, HKV, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dhf), lambda b, h, ti: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bt, dhf), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, bt, dhf), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, bt), lambda b, h, ti: (0, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dhf), lambda b, h, ti: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, HKV, G, dhf), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, dhf), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, kT, vT, mask)
+    return out.reshape(B, HQ, dhf)[..., :dh]

@@ -1,0 +1,64 @@
+"""Fused MoE router Pallas kernel: logits → softmax → iterative top-k.
+
+One pass over the token tile in VMEM computes the routing matmul, the fp32
+softmax, and k rounds of max+mask top-k selection without materializing the
+(N, E) probability tensor in HBM. The router weight matrix (D×E) is small
+enough to stay VMEM-resident across the whole grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _route_kernel(x_ref, w_ref, g_ref, i_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)                 # (bn, D)
+    w = w_ref[...].astype(jnp.float32)                 # (D, E)
+    logits = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / p.sum(axis=-1, keepdims=True)          # (bn, E)
+    E = probs.shape[-1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    work = probs
+    for j in range(k):
+        best = work.max(axis=-1)                       # (bn,)
+        bidx = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        g_ref[:, j] = best
+        i_ref[:, j] = bidx
+        work = jnp.where(cols == bidx[:, None], NEG_INF, work)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def moe_route(x, router, k: int, *, block_n: int = 1024,
+              interpret: bool = False):
+    """x: (N,D); router: (D,E). Returns (gates (N,k) fp32, idx (N,k) int32)."""
+    N, D = x.shape
+    E = router.shape[1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    gates, idx = pl.pallas_call(
+        functools.partial(_route_kernel, k=k),
+        grid=((N + pad) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, E), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N + pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((N + pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, router)
+    return gates[:N], idx[:N]

@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels — the UKL "shortcut" entry
+points.
+
+Backend dispatch mirrors the paper's spectrum discipline: on TPU the compiled
+Mosaic kernel runs; off-TPU (this CPU container, and any host-platform
+dry-run) the same kernel body runs under ``interpret=True`` so tests exercise
+the real kernel logic, while *lowering* paths that need clean HLO (the
+dry-run) use the chunked-jnp formulations in ``repro.models.layers`` instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (decode_attention as _dec, flash_attention as _fa,
+                           mamba_ssm as _mamba, moe_route as _route,
+                           rmsnorm as _rms, rwkv6 as _rwkv)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+def decode_attention(q, ck, cv, slot_pos, pos, *, window: int = 0,
+                     block_t: int = 512):
+    """q: (B,1,HQ,dh) fresh query; ck/cv: cache; slot_pos: (T,) positions."""
+    valid = (slot_pos <= pos) & (slot_pos >= 0)
+    if window > 0:
+        valid &= pos - slot_pos < window
+    out = _dec.decode_attention(q[:, 0], ck, cv, valid, block_t=block_t,
+                                interpret=_interpret())
+    return out[:, None]
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256):
+    return _rms.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                        interpret=_interpret())
+
+
+def mamba_scan(a_unused, bx_unused, C_unused):  # pragma: no cover
+    raise NotImplementedError(
+        "use mamba_scan_fused(x, dt, A, Bv, Cv); the fused kernel computes "
+        "the discretized gates internally")
+
+
+def mamba_scan_fused(x, dt, A, Bv, Cv, *, chunk: int = 64, di_tile: int = 256):
+    return _mamba.mamba_scan(x, dt, A, Bv, Cv, chunk=chunk, di_tile=di_tile,
+                             interpret=_interpret())
+
+
+def rwkv_scan(r, k, v, w, u, *, chunk: int = 256):
+    return _rwkv.rwkv_scan(r, k, v, w, u, chunk=chunk, interpret=_interpret())
+
+
+def moe_route(x, router, k: int, *, block_n: int = 1024):
+    return _route.moe_route(x, router, k, block_n=block_n,
+                            interpret=_interpret())

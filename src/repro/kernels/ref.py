@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose against these."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q:(B,Sq,HQ,dh) k,v:(B,Sk,HKV,dh) -> (B,Sq,HQ,dh). GQA by head grouping."""
+    B, Sq, HQ, dh = q.shape
+    Sk, HKV = k.shape[1], k.shape[2]
+    G = HQ // HKV
+    qg = q.reshape(B, Sq, HKV, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) / math.sqrt(dh)
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window > 0:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(q.dtype), v)
+    return out.reshape(B, Sq, HQ, dh)
+
+
+def decode_attention_ref(q, k, v, valid, *, scale=None):
+    """q:(B,HQ,dh); k,v:(B,T,HKV,dh); valid:(T,) bool mask of live cache slots."""
+    B, HQ, dh = q.shape
+    HKV = k.shape[2]
+    G = HQ // HKV
+    scale = scale or 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, HKV, G, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v)
+    return out.reshape(B, HQ, dh)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_scan_ref(x, dt, A, Bv, Cv):
+    """Fused selective-scan oracle.
+
+    x, dt: (B,S,di); A: (di,ds); Bv, Cv: (B,S,ds).  Returns y: (B,S,di).
+    h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ;  y_t = h_t · C_t
+    """
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    bx = (dt * x).astype(jnp.float32)[..., None] * Bv.astype(jnp.float32)[..., None, :]
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = lax.associative_scan(comb, (a, bx), axis=1)
+    return jnp.einsum("bsdn,bsn->bsd", h, Cv.astype(jnp.float32))
+
+
+def rwkv_scan_ref(r, k, v, w, u):
+    """RWKV6 oracle. r,k,v,w:(B,S,nh,hd) fp32; u:(nh,hd). Returns (B,S,nh,hd)."""
+    B, S, nh, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for t in (r, k, v, w))
+
+    def step(Sst, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, Sst + u[None, :, :, None] * kv)
+        Sst = wt[..., :, None] * Sst + kv
+        return Sst, y
+
+    S0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    _, ys = lax.scan(step, S0, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def moe_route_ref(x, router, k: int):
+    """x:(N,D), router:(D,E) -> (gates (N,k) fp32 softmax probs, idx (N,k))."""
+    logits = (x @ router.astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, k)
+    return gates, idx

@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first initialization. Only the dry-run sees
+# 512 placeholder devices; tests and benchmarks keep the real device count.
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape) cell, lower + compile the step program
+on the production mesh — 16x16 single-pod and 2x16x16 multi-pod — and record
+memory_analysis / cost_analysis / collective schedule for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun_mp.json
+"""
+import argparse
+import json
+import sys
+import traceback
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--out", default=None)
+    p.add_argument("--set", action="append", default=[],
+                   help="ModelOptions override, e.g. --set q_chunk=1024")
+    args = p.parse_args()
+
+    from repro.configs import SHAPES, all_cells, get_config, shape_applicable
+    from repro.launch.cells import analyze_cell
+    from repro.launch.mesh import make_production_mesh
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            overrides[k] = v
+
+    if args.all:
+        cells = all_cells()
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
+
+    records = []
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tag = "2x16x16" if multi_pod else "16x16"
+        for arch, shape in cells:
+            cfg = get_config(arch)
+            if not shape_applicable(cfg, SHAPES[shape]):
+                print(f"SKIP  {tag} {arch} × {shape} (noted in DESIGN.md)")
+                continue
+            try:
+                rec = analyze_cell(arch, shape, mesh, overrides or None)
+                rec["mesh_tag"] = tag
+                records.append(rec)
+                r = rec["roofline"]
+                mem = rec["memory"].get("total_bytes_per_device", 0)
+                print(f"OK    {tag} {arch} × {shape}: "
+                      f"compile={rec['compile_s']}s "
+                      f"mem/dev={mem/2**30:.2f}GiB "
+                      f"flops/dev={rec['flops_per_device']:.3e} "
+                      f"terms(c/m/coll)={r['compute_s']:.4f}/"
+                      f"{r['memory_s']:.4f}/{r['collective_s']:.4f}s "
+                      f"dominant={r['dominant']} "
+                      f"roofline_frac={r['roofline_fraction']:.3f}")
+                sys.stdout.flush()
+            except Exception as e:
+                failures += 1
+                print(f"FAIL  {tag} {arch} × {shape}: {e}")
+                traceback.print_exc()
+                sys.stdout.flush()
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+        print(f"wrote {len(records)} records to {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede every other import — see dryrun.py.
+
+"""§Perf hillclimb runner: re-lower a cell with option overrides, print the
+roofline-term deltas vs the stored baseline, and append the iteration record
+to results/hillclimb.json.
+
+  python -m repro.launch.hillclimb --arch qwen2-7b --shape prefill_32k \
+      --tag causal_skip --set causal_skip=1 [--multi-pod]
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--tag", required=True)
+    p.add_argument("--set", action="append", default=[])
+    p.add_argument("--baseline", default="results/dryrun_baseline.json")
+    p.add_argument("--out", default="results/hillclimb.json")
+    args = p.parse_args()
+
+    from repro.launch.cells import analyze_cell
+    from repro.launch.mesh import make_production_mesh
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            overrides[k] = v
+    # booleans arrive as ints
+    for k in ("causal_skip", "norm_bf16_grad", "remat", "scan_blocks",
+              "serve_replicate_params", "ep_resident"):
+        if k in overrides:
+            overrides[k] = bool(overrides[k])
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tag = "2x16x16" if args.multi_pod else "16x16"
+    rec = analyze_cell(args.arch, args.shape, mesh, overrides or None)
+    rec["mesh_tag"] = tag
+    rec["hillclimb_tag"] = args.tag
+    rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+
+    base = None
+    if os.path.exists(args.baseline):
+        for b in json.load(open(args.baseline)):
+            if (b["arch"] == args.arch and b["shape"] == args.shape
+                    and b.get("mesh_tag") == tag):
+                base = b
+                break
+
+    r = rec["roofline"]
+    line = (f"{args.tag}: terms(c/m/coll)="
+            f"{r['compute_s']:.4f}/{r['memory_s']:.4f}/{r['collective_s']:.4f}s"
+            f" dominant={r['dominant']}"
+            f" mem/dev={rec['memory'].get('total_bytes_per_device', 0)/2**30:.2f}GiB")
+    if base:
+        br = base["roofline"]
+        def delta(k):
+            if br[k] <= 0:
+                return "n/a"
+            return f"{(br[k] - r[k]) / br[k] * 100:+.1f}%"
+        line += (f" | vs baseline: compute {delta('compute_s')},"
+                 f" memory {delta('memory_s')},"
+                 f" collective {delta('collective_s')}")
+    print(line)
+
+    recs = []
+    if os.path.exists(args.out):
+        recs = json.load(open(args.out))
+    recs.append(rec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    json.dump(recs, open(args.out, "w"), indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

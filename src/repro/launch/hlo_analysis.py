@@ -1,0 +1,404 @@
+"""Post-SPMD HLO analysis for the roofline: FLOPs, HBM bytes, collective bytes.
+
+Why not just ``compiled.cost_analysis()``? Because XLA's HloCostAnalysis
+counts a ``while`` body **once**, and every production model here scans over
+layers (and blockwise attention scans over chunks) — the real per-step cost is
+body × trip-count. This module parses the optimized HLO text into its
+computation tree, recovers while-loop trip counts from their condition
+computations, and walks the tree with multipliers:
+
+  * **FLOPs** — 2·M·N·K for every ``dot`` (shapes resolved through the
+    per-computation symbol table; batch dims included). Elementwise/transcend-
+    ental FLOPs are ignored (dots dominate at these shapes; the deliberate
+    undercount makes the reported compute term a lower bound).
+  * **HBM bytes** — Σ (operand + result bytes) over *top-level* instructions
+    of kinds that move HBM data (fusion, dot, convert, copy, collectives,
+    dynamic-slice/update, reduce, scatter/gather, parameter-feeding ops).
+    Fusion internals live in registers/VMEM and are not double counted.
+  * **collective wire bytes** — per-device ring conventions:
+        all-reduce          2 · size · (g-1)/g
+        all-gather          out · (g-1)/g
+        reduce-scatter      in · (g-1)/g  (= out·(g-1) on the result shape)
+        all-to-all          size · (g-1)/g
+        collective-permute  size
+    with g the replica-group size parsed from the instruction.
+
+Cross-checked against ``cost_analysis()`` on loop-free programs (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# instruction kinds whose operands/results cross HBM at top level
+# (on CPU/TPU dumps, elementwise chains arrive as `fusion` wrappers, so raw
+# elementwise opcodes are intentionally absent to avoid double counting)
+_HBM_OPS = ("fusion", "dot", "convolution", "copy", "convert", "reduce",
+            "transpose", "slice", "dynamic-slice", "dynamic-update-slice",
+            "gather", "scatter", "concatenate", "pad",
+            ) + _COLLECTIVES
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_CALLED = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_PAIR = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result: str            # result portion of the line (shape text)
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    shapes: Dict[str, str]         # instr name -> result shape text
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(2), [], {})
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # split "<result> <opcode>(<operands...>)" — find the opcode token
+        om = re.search(r"([\w\-]+)\(", rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        result = rest[: om.start()].strip()
+        # operand names: %name tokens inside the first (...) group
+        depth = 0
+        args_text = ""
+        for ch in rest[om.end() - 1:]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args_text += ch
+        operands = re.findall(r"%([\w.\-]+)", args_text)
+        if not operands:
+            # operands may be given without % (newer dumps): name.123, name
+            operands = [t.strip().split(" ")[-1] for t in args_text.split(",")
+                        if t.strip()]
+        cur.instructions.append(Instruction(name, opcode, result, operands, line))
+        cur.shapes[name] = result
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = []
+    for ins in cond.instructions:
+        m = _CONST_RE.search(ins.line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_PAIR.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+def _dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(contracted dims of lhs)."""
+    res = _shape_list(ins.result)
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    out = 1.0
+    for d in rdims:
+        out *= d
+    # contracted size: lhs total / (lhs batch+free dims present in result)
+    lhs = shapes.get(ins.operands[0]) if ins.operands else None
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if lhs and cdims is not None:
+        lshapes = _shape_list(lhs)
+        if lshapes:
+            _, ldims = lshapes[0]
+            contracted = 1.0
+            for idx in cdims.group(1).split(","):
+                if idx and int(idx) < len(ldims):
+                    contracted *= ldims[int(idx)]
+            return 2.0 * out * contracted
+    return 2.0 * out  # fallback: unknown contraction
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0        # calibrated (see finalize)
+    hbm_bytes_raw: float = 0.0    # uncalibrated producer+consumer sum
+    coll_wire_bytes: float = 0.0
+    coll_by_type: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: defaultdict(
+            lambda: {"count": 0.0, "wire_bytes": 0.0}))
+    while_loops: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+
+    def finalize(self):
+        self.coll_by_type = {k: dict(v) for k, v in self.coll_by_type.items()}
+        # Calibration: our per-instruction operand+result accounting counts
+        # every producer→consumer edge twice relative to XLA's own
+        # "bytes accessed". Measured factor on loop-free programs: 2.02x,
+        # 1.91x (tests pin it). Halving makes the loop-corrected number
+        # directly comparable to cost_analysis on loop-free graphs.
+        self.hbm_bytes_raw = self.hbm_bytes
+        self.hbm_bytes *= 0.5
+        return self
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> HloStats:
+    comps, marked_entry = parse_computations(hlo)
+    if not comps:
+        return HloStats().finalize()
+    if entry is None:
+        entry = marked_entry
+    if entry is None:
+        # fallback: a computation never referenced by any other
+        called = set()
+        for c in comps.values():
+            for ins in c.instructions:
+                called.update(_CALLED.findall(ins.line))
+                for m in _BRANCHES.finditer(ins.line):
+                    called.update(re.findall(r"[\w.\-]+", m.group(1)))
+        roots = [n for n in comps if n not in called]
+        entry = max(roots or list(comps),
+                    key=lambda n: len(comps[n].instructions))
+    stats = HloStats()
+    _walk(comps, entry, 1.0, stats, set())
+    return stats.finalize()
+
+
+def _walk(comps, name: str, mult: float, stats: HloStats, stack):
+    if name not in comps or name in stack:
+        return
+    comp = comps[name]
+    stack = stack | {name}
+    for ins in comp.instructions:
+        op = ins.opcode
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            size = _shape_bytes(ins.result)
+            g = _group_size(ins.line)
+            if base == "all-reduce":
+                wire = 2.0 * size * (g - 1) / g
+            elif base == "all-gather":
+                wire = size * (g - 1) / g
+            elif base == "reduce-scatter":
+                wire = float(size) * (g - 1)
+            elif base == "all-to-all":
+                wire = size * (g - 1) / g
+            else:
+                wire = float(size)
+            stats.coll_wire_bytes += wire * mult
+            t = stats.coll_by_type[base]
+            t["count"] += mult
+            t["wire_bytes"] += wire * mult
+            stats.hbm_bytes += mult * (size + _operand_bytes(ins, comp))
+            continue
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            body = bm.group(1) if bm else None
+            cond = cm.group(1) if cm else None
+            tm = _TRIP_RE.search(ins.line)
+            if tm:
+                trips = int(tm.group(1))
+            else:
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+            stats.while_loops.append((body or "?", trips))
+            if body:
+                _walk(comps, body, mult * trips, stats, stack)
+            # while carries its loop state through HBM each iteration
+            stats.hbm_bytes += mult * _shape_bytes(ins.result)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for nm in _CALLED.findall(ins.line):
+                _walk(comps, nm, mult, stats, stack)
+            for m in _BRANCHES.finditer(ins.line):
+                for nm in re.findall(r"[\w.\-]+", m.group(1)):
+                    _walk(comps, nm, mult, stats, stack)
+            continue
+        if op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if m:
+                _flops_only(comps, m.group(1), mult, stats, stack)
+            stats.hbm_bytes += mult * _fusion_hbm_bytes(comps, ins, comp)
+            continue
+        if op == "dot":
+            stats.flops += mult * _dot_flops(ins, comp.shapes)
+            stats.hbm_bytes += mult * (_shape_bytes(ins.result)
+                                       + _operand_bytes(ins, comp))
+            continue
+        if op in ("slice", "dynamic-slice", "gather"):
+            # touches only the sliced region, not the full operand
+            stats.hbm_bytes += mult * 2 * _shape_bytes(ins.result)
+            continue
+        if op == "dynamic-update-slice":
+            # reads + writes the updated region only (operand 1)
+            upd = (ins.operands[1] if len(ins.operands) > 1 else None)
+            sz = _shape_bytes(comp.shapes.get(upd, "")) if upd else 0
+            stats.hbm_bytes += mult * 2 * sz
+            continue
+        if op in _HBM_OPS:
+            stats.hbm_bytes += mult * (_shape_bytes(ins.result)
+                                       + _operand_bytes(ins, comp))
+
+
+def _flops_only(comps, name: str, mult: float, stats: HloStats, stack):
+    """Inside fusions: count dot FLOPs only (no HBM traffic)."""
+    if name not in comps or name in stack:
+        return
+    comp = comps[name]
+    stack = stack | {name}
+    for ins in comp.instructions:
+        if ins.opcode == "dot":
+            stats.flops += mult * _dot_flops(ins, comp.shapes)
+        elif ins.opcode == "fusion" or ins.opcode == "call":
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", ins.line)
+            if m:
+                _flops_only(comps, m.group(1), mult, stats, stack)
+        elif ins.opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            trips = _trip_count(comps[cm.group(1)]) if cm and cm.group(1) in comps else 1
+            if bm:
+                _flops_only(comps, bm.group(1), mult * trips, stats, stack)
+
+
+def _operand_bytes(ins: Instruction, comp: Computation) -> int:
+    total = 0
+    for opnd in ins.operands:
+        if opnd in comp.shapes:
+            total += _shape_bytes(comp.shapes[opnd])
+    return total
+
+
+def _fusion_hbm_bytes(comps, ins: Instruction, comp: Computation) -> float:
+    """HBM traffic of one fusion call, slice-aware.
+
+    A fused ``dynamic-slice`` touches only its window, not the whole operand
+    buffer (this matters enormously inside while bodies, where operands are
+    full stacked scan inputs); a fusion rooted in ``dynamic-update-slice``
+    writes only the update region of its (aliased) output buffer.
+    """
+    m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+    fc = comps.get(m.group(1)) if m else None
+    if fc is None:
+        return float(_shape_bytes(ins.result) + _operand_bytes(ins, comp))
+
+    # parameter ordinal -> fused-computation name
+    params: Dict[str, int] = {}
+    for fins in fc.instructions:
+        if fins.opcode == "parameter":
+            mm = re.search(r"parameter\((\d+)\)", fins.line)
+            if mm:
+                params[fins.name] = int(mm.group(1))
+
+    total = 0.0
+    for pname, ordinal in params.items():
+        full = 0
+        if ordinal < len(ins.operands):
+            full = _shape_bytes(comp.shapes.get(ins.operands[ordinal], ""))
+        uses = [fi for fi in fc.instructions if pname in fi.operands]
+        if uses and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                        for u in uses):
+            sz = sum(_shape_bytes(u.result) for u in uses)
+            total += min(sz, full) if full else sz
+        else:
+            total += full
+
+    root = None
+    for fins in fc.instructions:
+        if fins.line.lstrip().startswith("ROOT"):
+            root = fins
+    res = float(_shape_bytes(ins.result))
+    if root is not None:
+        if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+            res = 2.0 * _shape_bytes(fc.shapes.get(root.operands[1], ""))
+        elif root.opcode == "tuple":
+            res = 0.0
+            for opnd in root.operands:
+                oi = next((fi for fi in fc.instructions if fi.name == opnd),
+                          None)
+                if (oi is not None and oi.opcode == "dynamic-update-slice"
+                        and len(oi.operands) > 1):
+                    res += 2.0 * _shape_bytes(fc.shapes.get(oi.operands[1], ""))
+                elif oi is not None:
+                    res += _shape_bytes(oi.result)
+    return total + res
+
+
+# convenience wrappers -------------------------------------------------------
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze(hlo_text).coll_by_type
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return analyze(hlo_text).coll_wire_bytes

@@ -1,0 +1,112 @@
+"""Serving launcher: prefill + batched decode at a chosen linkage level.
+
+``python -m repro.launch.serve --arch tinyllama-1.1b --preset nss_shortcut``
+serves synthetic batched requests and reports throughput/latency — the Redis/
+Memcached analogue in the paper's evaluation.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def run_server(arch: str, preset_name: str, *, batch: int = 8,
+               prompt_len: int = 64, gen_len: int = 64, requests: int = 4,
+               smoke: bool = True, scale: float = 1.0, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core import L3_NSS, build_decode_step, preset
+    from repro.models import ModelOptions, init_params, prefill
+
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+        if scale != 1.0:
+            cfg = dataclasses.replace(
+                cfg, d_model=int(cfg.d_model * scale),
+                d_ff=int(cfg.d_ff * scale),
+                d_head=cfg.d_head if cfg.n_heads == 0
+                else int(cfg.d_model * scale) // cfg.n_heads)
+    lk = preset(preset_name)
+    if lk.level == L3_NSS and lk.decode_steps != gen_len:
+        lk = dataclasses.replace(lk, decode_steps=gen_len)
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    if lk.shortcut:
+        opts = lk.model_options(opts, on_tpu=jax.default_backend() == "tpu")
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    dec = build_decode_step(cfg, opts, lk)
+    rng = np.random.default_rng(seed)
+    max_len = prompt_len + gen_len + 8
+
+    pf = jax.jit(lambda p, t: prefill(p, t, cfg, opts, max_len=max_len))
+
+    def one_request(toks):
+        """prefill + decode gen_len tokens; returns #tokens produced."""
+        logits, cache = pf(params, toks)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if lk.level == L3_NSS:
+            cache, seq = dec(params, cache, nxt)
+            seq.block_until_ready()
+            return seq.shape[0] * seq.shape[1]
+        n = 0
+        for _ in range(gen_len):
+            cache, out = dec(params, cache, nxt)
+            nxt = out[:, 0]
+            n += batch
+        nxt.block_until_ready()
+        return n
+
+    # warmup: compile prefill + decode outside the timed region
+    warm = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                    size=(batch, prompt_len), dtype=np.int32))
+    one_request(warm)
+
+    lat = []
+    tokens_out = 0
+    t_all = time.time()
+    for r in range(requests):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                        size=(batch, prompt_len), dtype=np.int32))
+        t0 = time.time()
+        tokens_out += one_request(toks)
+        lat.append(time.time() - t0)
+    wall = time.time() - t_all
+    return {
+        "arch": cfg.name, "preset": preset_name, "batch": batch,
+        "prompt_len": prompt_len, "gen_len": gen_len,
+        "requests": requests, "wall_s": wall,
+        "tokens_per_s": tokens_out / wall,
+        "mean_latency_s": float(np.mean(lat)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="tinyllama-1.1b")
+    p.add_argument("--preset", default="nss_shortcut")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--gen-len", type=int, default=64)
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--scale", type=float, default=1.0)
+    p.add_argument("--report-json", default=None)
+    args = p.parse_args(argv)
+    rep = run_server(args.arch, args.preset, batch=args.batch,
+                     prompt_len=args.prompt_len, gen_len=args.gen_len,
+                     requests=args.requests, scale=args.scale)
+    print(json.dumps(rep, indent=1))
+    if args.report_json:
+        with open(args.report_json, "w") as f:
+            json.dump(rep, f)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+from repro.models.layers import ModelOptions
+from repro.models.transformer import (backbone, cache_spec, decode_step, embed,
+                                      init_cache, init_params, loss_fn, prefill,
+                                      unembed_logits)
+
+__all__ = [
+    "ModelOptions", "backbone", "cache_spec", "decode_step", "embed",
+    "init_cache", "init_params", "loss_fn", "prefill", "unembed_logits",
+]

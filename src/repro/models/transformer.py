@@ -1,0 +1,433 @@
+"""Model assembly: init / train forward / prefill / decode for every arch.
+
+All ten assigned architectures lower through this module. The repeated
+``block_pattern`` is scanned with ``lax.scan`` (stacked params, one traced
+block body) so 88-layer models compile as fast as 2-layer ones; heterogeneous
+patterns (Jamba's 7:1 Mamba:attention, the VLM's cross-attention interleave)
+unroll *within* one block only.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN, DENSE, MAMBA, MOE, RWKV, RWKVMIX, SWA,
+                                XATTN, ArchConfig, LayerSpec)
+from repro.models import layers as L
+from repro.models.layers import ModelOptions, Params
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, spec: LayerSpec) -> Params:
+    k_mix, k_mlp = jax.random.split(key)
+    p: Params = {"norm1": L.init_rmsnorm(cfg), "norm2": L.init_rmsnorm(cfg)}
+    if spec.mixer in (ATTN, SWA, XATTN):
+        p["mixer"] = L.init_attention(k_mix, cfg, spec)
+    elif spec.mixer == MAMBA:
+        p["mixer"] = L.init_mamba(k_mix, cfg)
+    elif spec.mixer == RWKV:
+        p["mixer"] = L.init_rwkv(k_mix, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp == DENSE:
+        p["mlp"] = L.init_mlp(k_mlp, cfg)
+    elif spec.mlp == MOE:
+        p["mlp"] = L.init_moe(k_mlp, cfg)
+    elif spec.mlp == RWKVMIX:
+        p["mlp"] = L.init_rwkv_mix(k_mlp, cfg)
+    else:
+        raise ValueError(spec.mlp)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, param_dtype=jnp.float32) -> Params:
+    """Stacked-per-pattern-position parameters; leading dim = num_blocks."""
+    keys = jax.random.split(key, 3 + len(cfg.block_pattern))
+    params: Params = {}
+    if not cfg.embeds_in:
+        params["embed"] = jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+    blocks = []
+    for i, spec in enumerate(cfg.block_pattern):
+        bkeys = jax.random.split(keys[1 + i], cfg.num_blocks)
+        stacked = jax.vmap(lambda k: init_layer(k, cfg, spec))(bkeys)
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    params["final_norm"] = L.init_rmsnorm(cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+    cast = lambda x: x.astype(param_dtype) if x.dtype == jnp.float32 else x
+    return jax.tree.map(cast, params)
+
+
+# ---------------------------------------------------------------------------
+# Token shift helper for RWKV (train path needs x shifted right by one)
+# ---------------------------------------------------------------------------
+
+def _shift_right(x: jax.Array) -> jax.Array:
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+# ---------------------------------------------------------------------------
+# Single layer apply (full-sequence)
+# ---------------------------------------------------------------------------
+
+def apply_layer(p: Params, x: jax.Array, cfg: ArchConfig, spec: LayerSpec,
+                opts: ModelOptions, positions: jax.Array,
+                xctx: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm residual layer. Returns (x, moe_aux)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, opts)
+    if spec.mixer in (ATTN, SWA, XATTN):
+        mix = L.attention(p["mixer"], h, cfg, spec, opts, positions, xctx)
+    elif spec.mixer == MAMBA:
+        mix = L.mamba(p["mixer"], h, cfg, opts)
+    elif spec.mixer == RWKV:
+        mix = L.rwkv(p["mixer"], h, _shift_right(h), cfg, opts)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mix
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps, opts)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp == DENSE:
+        out = L.mlp(p["mlp"], h)
+    elif spec.mlp == MOE:
+        out, aux = L.moe(p["mlp"], h, cfg, opts)
+    elif spec.mlp == RWKVMIX:
+        out = L.rwkv_mix(p["mlp"], h, _shift_right(h))
+    else:
+        raise ValueError(spec.mlp)
+    return x + out, aux
+
+
+# ---------------------------------------------------------------------------
+# Backbone (full-sequence): shared by train & prefill
+# ---------------------------------------------------------------------------
+
+def backbone(params: Params, h: jax.Array, cfg: ArchConfig, opts: ModelOptions,
+             positions: jax.Array, xctx: Optional[jax.Array]
+             ) -> Tuple[jax.Array, jax.Array]:
+    """h: (B,S,D) embedded input -> (final hidden, total moe aux)."""
+
+    h = L.constrain_acts(h, opts)
+
+    def block_fn(carry, block_params):
+        x, aux = carry
+        for spec, bp in zip(cfg.block_pattern, block_params):
+            x, a = apply_layer(bp, x, cfg, spec, opts, positions, xctx)
+            aux = aux + a
+        x = L.constrain_acts(x, opts)
+        return (x, aux), None
+
+    if opts.remat:
+        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if opts.scan_blocks:
+        (h, aux), _ = lax.scan(block_fn, (h, aux0), params["blocks"])
+    else:
+        carry = (h, aux0)
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            carry, _ = block_fn(carry, blk)
+        h, aux = carry
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    return h, aux
+
+
+def embed(params: Params, tokens_or_embeds: jax.Array, cfg: ArchConfig,
+          opts: ModelOptions) -> jax.Array:
+    if cfg.embeds_in:
+        return tokens_or_embeds.astype(opts.dtype)
+    e = jnp.take(params["embed"], tokens_or_embeds, axis=0)
+    return e.astype(opts.dtype)
+
+
+def unembed_logits(params: Params, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Loss (with optional chunked cross-entropy that never materializes B,S,V)
+# ---------------------------------------------------------------------------
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            opts: ModelOptions) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    inputs = batch["inputs"]          # (B,S) int32 or (B,S,D) embeds
+    labels = batch["labels"]          # (B,S) int32
+    xctx = batch.get("xctx")
+    h = embed(params, inputs, cfg, opts)
+    B, S = labels.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h, aux = backbone(params, h, cfg, opts, positions, xctx)
+
+    if opts.logit_chunk and S > opts.logit_chunk:
+        c = opts.logit_chunk
+        n = S // c
+        assert S % c == 0, "logit_chunk must divide seq len"
+        hs = h.reshape(B, n, c, -1).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+        def chunk(tot, xs):
+            hi, li = xs
+            logits = unembed_logits(params, hi, cfg)
+            return tot + _xent(logits, li).sum(), None
+
+        total, _ = lax.scan(chunk, jnp.zeros((), jnp.float32), (hs, ls))
+        ce = total / (B * S)
+    else:
+        logits = unembed_logits(params, h, cfg)
+        ce = _xent(logits, labels).mean()
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+def _layer_cache_shape(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                       max_len: int, dtype) -> Dict[str, Any]:
+    """Shape-dtype tree for one layer's decode cache (no allocation here)."""
+    s = jax.ShapeDtypeStruct
+    if spec.mixer in (ATTN, SWA, XATTN):
+        T = min(cfg.sliding_window, max_len) if spec.mixer == SWA else max_len
+        c = {
+            "k": s((batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": s((batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "slot_pos": s((T,), jnp.int32),
+            "pos": s((), jnp.int32),
+        }
+        if spec.mixer == XATTN:
+            c["xk"] = s((batch, cfg.xattn_ctx_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+            c["xv"] = s((batch, cfg.xattn_ctx_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return c
+    if spec.mixer == MAMBA:
+        di = cfg.mamba.expand * cfg.d_model
+        return {
+            "conv": s((batch, cfg.mamba.d_conv - 1, di), dtype),
+            "ssm": s((batch, di, cfg.mamba.d_state), jnp.float32),
+            "pos": s((), jnp.int32),
+        }
+    if spec.mixer == RWKV:
+        nh = cfg.d_model // cfg.rwkv_head_dim
+        return {
+            "state": s((batch, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            "shift": s((batch, 1, cfg.d_model), dtype),
+            "shift_mlp": s((batch, 1, cfg.d_model), dtype),
+            "pos": s((), jnp.int32),
+        }
+    raise ValueError(spec.mixer)
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked (num_blocks-leading) ShapeDtypeStruct cache tree."""
+    out = []
+    for spec in cfg.block_pattern:
+        one = _layer_cache_shape(cfg, spec, batch, max_len, dtype)
+        stacked = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((cfg.num_blocks,) + sd.shape, sd.dtype),
+            one)
+        out.append(stacked)
+    return tuple(out)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    spec = cache_spec(cfg, batch, max_len, dtype)
+
+    def mk(sd):
+        if sd.dtype == jnp.int32 and sd.shape[-1:] != ():  # slot_pos arrays
+            return jnp.full(sd.shape, -1, jnp.int32)
+        return jnp.zeros(sd.shape, sd.dtype)
+
+    return jax.tree.map(mk, spec)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token) — scan over blocks threading the cache
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(p: Params, x: jax.Array, cache_l: Params,
+                       cfg: ArchConfig, spec: LayerSpec, opts: ModelOptions
+                       ) -> Tuple[jax.Array, Params]:
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, opts)
+    if spec.mixer in (ATTN, SWA, XATTN):
+        mix, cache_l = L.attention_decode(p["mixer"], h, cache_l, cfg, spec, opts)
+    elif spec.mixer == MAMBA:
+        mix, cache_l = L.mamba_decode(p["mixer"], h, cache_l, cfg)
+        cache_l = dict(cache_l, pos=cache_l["pos"] + 1)
+    elif spec.mixer == RWKV:
+        mix, cache_l = L.rwkv_decode(p["mixer"], h, cache_l, cfg)
+        cache_l = dict(cache_l, pos=cache_l["pos"] + 1)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mix
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps, opts)
+    if spec.mlp == DENSE:
+        out = L.mlp(p["mlp"], h)
+    elif spec.mlp == MOE:
+        out, _ = L.moe(p["mlp"], h, cfg, opts)
+    elif spec.mlp == RWKVMIX:
+        out = L.rwkv_mix(p["mlp"], h, cache_l["shift_mlp"].astype(h.dtype))
+        cache_l = dict(cache_l, shift_mlp=h)
+    else:
+        raise ValueError(spec.mlp)
+    return x + out, cache_l
+
+
+def decode_step(params: Params, cache, tokens: jax.Array, cfg: ArchConfig,
+                opts: ModelOptions) -> Tuple[jax.Array, Any]:
+    """tokens: (B,) int32 (or (B,D) embeds) -> (logits (B,V), new cache)."""
+    if cfg.embeds_in:
+        h = tokens[:, None, :].astype(opts.dtype)
+    else:
+        h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(opts.dtype)
+
+    new_caches = []
+
+    def block_fn(x, xs):
+        block_params, cache_b = xs
+        new_c = []
+        for spec, bp, cl in zip(cfg.block_pattern, block_params, cache_b):
+            x, cl = apply_layer_decode(bp, x, cl, cfg, spec, opts)
+            new_c.append(cl)
+        return x, tuple(new_c)
+
+    if opts.scan_blocks:
+        h, new_cache = lax.scan(block_fn, h, (params["blocks"], cache))
+    else:
+        outs = []
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            cb = jax.tree.map(lambda a: a[i], cache)
+            h, nc = block_fn(h, (blk, cb))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    logits = unembed_logits(params, h, cfg)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            opts: ModelOptions, max_len: int,
+            xctx: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
+    """Run the full sequence, return (last-position logits, filled cache).
+
+    The cache is produced by re-running each layer's mixer state computation;
+    attention layers write their K/V directly (cheap — already computed).
+    """
+    B, S = tokens.shape[:2]
+    h = embed(params, tokens, cfg, opts)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, max_len, opts.dtype)
+
+    def block_fn(x, xs):
+        block_params, cache_b = xs
+        new_c = []
+        for spec, bp, cl in zip(cfg.block_pattern, block_params, cache_b):
+            x, cl = _prefill_layer(bp, x, cl, cfg, spec, opts, positions, xctx)
+            new_c.append(cl)
+        return x, tuple(new_c)
+
+    if opts.scan_blocks:
+        h, new_cache = lax.scan(block_fn, h, (params["blocks"], cache))
+    else:
+        outs = []
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            cb = jax.tree.map(lambda a: a[i], cache)
+            h, nc = block_fn(h, (blk, cb))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    logits = unembed_logits(params, h[:, -1:], cfg)[:, 0]
+    return logits, new_cache
+
+
+def _prefill_layer(p, x, cache_l, cfg, spec, opts, positions, xctx):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, opts)
+    S = x.shape[1]
+    if spec.mixer in (ATTN, SWA, XATTN):
+        mix = L.attention(p["mixer"], h, cfg, spec, opts, positions, xctx)
+        # write K/V into cache (recompute projections; XLA CSEs with the above)
+        q, k, v = L._qkv(p["mixer"], h, cfg)
+        k = L.rope(k, positions, cfg.rope_theta)
+        T = cache_l["k"].shape[1]
+        if S >= T:
+            # decode assumes a circular layout (position p lives at slot p % T)
+            roll = S % T
+            cache_l = dict(cache_l,
+                           k=jnp.roll(k[:, S - T:], roll, axis=1).astype(cache_l["k"].dtype),
+                           v=jnp.roll(v[:, S - T:], roll, axis=1).astype(cache_l["v"].dtype),
+                           slot_pos=jnp.roll(positions[S - T:], roll),
+                           pos=jnp.asarray(S, jnp.int32))
+        else:
+            ck = lax.dynamic_update_slice(cache_l["k"], k.astype(cache_l["k"].dtype),
+                                          (0, 0, 0, 0))
+            cv = lax.dynamic_update_slice(cache_l["v"], v.astype(cache_l["v"].dtype),
+                                          (0, 0, 0, 0))
+            sp = lax.dynamic_update_slice(cache_l["slot_pos"], positions, (0,))
+            cache_l = dict(cache_l, k=ck, v=cv, slot_pos=sp,
+                           pos=jnp.asarray(S, jnp.int32))
+        if spec.mixer == XATTN:
+            hkv, dh = cfg.n_kv_heads, cfg.head_dim
+            xk = (xctx @ p["mixer"]["xk"].astype(x.dtype)).reshape(x.shape[0], -1, hkv, dh)
+            xv = (xctx @ p["mixer"]["xv"].astype(x.dtype)).reshape(x.shape[0], -1, hkv, dh)
+            cache_l = dict(cache_l, xk=xk.astype(cache_l["xk"].dtype),
+                           xv=xv.astype(cache_l["xv"].dtype))
+    elif spec.mixer == MAMBA:
+        dt, A, Bv, Cv, xc, z, conv_state = L._mamba_gates(p["mixer"], h, cfg)
+        if opts.scan_impl == "ref":
+            y, h_last = L.mamba_scan_ref(xc, dt, A, Bv, Cv)
+        else:
+            y, h_last = L.mamba_scan_chunked(xc, dt, A, Bv, Cv, opts.scan_chunk)
+        y = (y + xc.astype(jnp.float32) * p["mixer"]["D"]).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        mix = y @ p["mixer"]["out_proj"].astype(x.dtype)
+        cache_l = dict(cache_l, conv=conv_state.astype(cache_l["conv"].dtype),
+                       ssm=h_last, pos=jnp.asarray(S, jnp.int32))
+    elif spec.mixer == RWKV:
+        shifted = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        r, k, v, g, w = L._rwkv_gates(p["mixer"], h, shifted, cfg)
+        u = p["mixer"]["u"].astype(jnp.float32)
+        if opts.scan_impl == "ref":
+            y, s_last = L.rwkv_scan_ref(r, k, v, w, u)
+        else:
+            y, s_last = L.rwkv_scan_chunked(r, k, v, w, u, opts.scan_chunk)
+        mix = L._rwkv_out(p["mixer"], y, g, h, cfg)
+        cache_l = dict(cache_l, state=s_last, shift=h[:, -1:],
+                       pos=jnp.asarray(S, jnp.int32))
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mix
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps, opts)
+    if spec.mlp == DENSE:
+        out = L.mlp(p["mlp"], h2)
+    elif spec.mlp == MOE:
+        out, _ = L.moe(p["mlp"], h2, cfg, opts)
+    elif spec.mlp == RWKVMIX:
+        shifted2 = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        out = L.rwkv_mix(p["mlp"], h2, shifted2)
+        cache_l = dict(cache_l, shift_mlp=h2[:, -1:])
+    else:
+        raise ValueError(spec.mlp)
+    return x + out, cache_l

@@ -1,0 +1,6 @@
+from repro.optim import compress
+from repro.optim.adamw import (AdamWConfig, AdamWState, global_norm, init,
+                               schedule_lr, update)
+
+__all__ = ["AdamWConfig", "AdamWState", "global_norm", "init", "schedule_lr",
+           "update", "compress"]

@@ -1,0 +1,46 @@
+"""Int8 gradient compression for data-parallel reduction (beyond-paper).
+
+Mechanism: all replicas agree on a per-tensor scale (pmax of local maxima —
+a scalar collective), quantize to int8, **all-gather the int8 payloads**, and
+reduce locally in fp32. On the wire this moves (N-1)×1 byte/element instead of
+the fp32 ring all-reduce's ≈2×4 bytes/element — a 8/(N-1)× byte reduction,
+i.e. a clear win on small, slow axes. The intended use is the **cross-pod
+gradient reduction** (N = 2 pods over DCI): 1 B/elem vs 8 B/elem. Relative
+error is bounded by the quantization step (validated by property tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize(x: jax.Array, scale: jax.Array):
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(tree, axis_name: str):
+    """Mean-all-reduce a gradient pytree with int8 payloads (inside shard_map)."""
+    n = lax.psum(jnp.ones((), jnp.float32), axis_name)
+
+    def one(x):
+        gmax = lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis_name)
+        scale = jnp.maximum(gmax / 127.0, 1e-30)
+        q = quantize(x, scale)
+        gathered = lax.all_gather(q, axis_name)          # (N, ...) int8 on wire
+        total = gathered.astype(jnp.float32).sum(axis=0) * scale
+        return (total / n).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def psum_mean(tree, axis_name: str):
+    """Uncompressed baseline: fp32 mean all-reduce."""
+    n = lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return jax.tree.map(lambda x: (lax.psum(x.astype(jnp.float32), axis_name)
+                                   / n).astype(x.dtype), tree)

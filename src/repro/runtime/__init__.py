@@ -1,0 +1,4 @@
+from repro.runtime.driver import (DriverConfig, DriverReport, FailureInjector,
+                                  train)
+
+__all__ = ["DriverConfig", "DriverReport", "FailureInjector", "train"]

@@ -1,0 +1,249 @@
+"""Partition rules: FSDP over ("pod","data"), TP/EP over "model", SP fallback.
+
+The rules are name/shape driven over the parameter pytree produced by
+``repro.models.init_params``. Guarantees:
+
+  * every parameter is sharded over the fsdp axes on exactly one dim
+    (optimizer moments inherit the same spec), so per-chip parameter+opt
+    bytes scale as 1/(pod·data·model_when_applicable);
+  * tensor-parallel dims go to "model" only when the dimension respects head
+    (or expert) boundaries — e.g. qwen2's 28 heads are NOT sharded 16-way;
+    its d_ff and vocab still are (recorded per-arch by ``tp_report``);
+  * MoE expert tensors shard experts over "model" (expert parallelism) and
+    d_model over fsdp.
+
+Activation/batch/cache specs live here too so every jit entry point takes its
+shardings from one place.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+FSDP_AXES_MULTIPOD = ("pod", "data")
+FSDP_AXES = ("data",)
+
+
+def fsdp_axes(mesh: Mesh):
+    return FSDP_AXES_MULTIPOD if "pod" in mesh.axis_names else FSDP_AXES
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in fsdp_axes(mesh)]))
+
+
+def tp_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+
+
+def _div(n: int, k: int) -> bool:
+    return n > 0 and k > 0 and n % k == 0
+
+
+class ArchSharding:
+    """Resolved sharding decisions for one (arch, mesh) pair."""
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, *,
+                 ep_resident: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.fsdp = fsdp_axes(mesh)
+        # ep_resident: shard MoE experts over ALL mesh axes and keep them
+        # device-resident (no FSDP re-gather); tokens move via all-to-all
+        # instead of weights via all-gather (§Perf hillclimb knob).
+        self.ep_resident = ep_resident
+        tp = tp_size(mesh)
+        self.tp_heads = _div(cfg.n_heads, tp)          # q/o head-dim TP
+        self.tp_kv = _div(cfg.n_kv_heads, tp)          # kv-head TP for caches
+        self.tp_ff = _div(cfg.d_ff, tp)
+        self.tp_vocab = _div(cfg.vocab_size, tp)
+        self.tp_experts = cfg.moe is not None and _div(cfg.moe.num_experts, tp)
+        self.tp_dmodel = _div(cfg.d_model, tp)
+        if cfg.mamba is not None:
+            self.tp_di = _div(cfg.mamba.expand * cfg.d_model, tp)
+        else:
+            self.tp_di = False
+        nh_rwkv = cfg.d_model // cfg.rwkv_head_dim if cfg.rwkv_head_dim else 0
+        self.tp_rwkv = _div(nh_rwkv, tp)
+        # projection-output TP: head-boundary TP for attention archs,
+        # rwkv-head-boundary TP for attention-free archs
+        self.tp_proj = self.tp_heads if cfg.n_heads > 0 else self.tp_rwkv
+
+    # -- reporting ----------------------------------------------------------
+    def tp_report(self) -> Dict[str, bool]:
+        return {k: getattr(self, k) for k in
+                ("tp_heads", "tp_kv", "tp_ff", "tp_vocab", "tp_experts",
+                 "tp_di", "tp_rwkv")}
+
+    # -- parameter specs ----------------------------------------------------
+    def param_spec(self, path: Tuple[str, ...], leaf) -> P:
+        """PartitionSpec for one parameter, by pytree path + shape."""
+        f = self.fsdp
+        tp = "model"
+        name = path[-1]
+        stacked = "blocks" in path         # leading num_blocks dim
+        lead = (None,) if stacked else ()
+
+        def spec(*dims):
+            return P(*(lead + dims))
+
+        if name == "embed":
+            return P(tp if self.tp_vocab else None, f)
+        if name == "lm_head":
+            return P(f, tp if self.tp_vocab else None)
+        if path[-2:] == ("final_norm", "scale") or name in ("scale",):
+            return spec(None) if stacked else P(None)
+
+        # attention (and rwkv projections, which share names)
+        if name in ("wq", "wk", "wv", "xq", "xk", "xv"):
+            return spec(f, tp if self.tp_proj else None)
+        if name in ("wo", "xo") and len(leaf.shape) == (3 if stacked else 2):
+            if path[-2] == "mlp":           # dense mlp out
+                return spec(tp if self.tp_ff else None, f)
+            return spec(tp if self.tp_proj else None, f)
+        if name in ("bq", "bk", "bv"):
+            return spec(tp if self.tp_heads else None)
+        if name == "xgate":
+            return spec(None)
+
+        # moe
+        if name == "router":
+            return spec(f, None)
+        if path[-2] == "mlp" and name in ("wi", "wg") and leaf.ndim == (4 if stacked else 3):
+            if self.ep_resident:
+                return spec(tuple(self.mesh.axis_names), None, None)
+            return spec(tp if self.tp_experts else None, f, None)
+        if path[-2] == "mlp" and name == "wo" and leaf.ndim == (4 if stacked else 3):
+            if self.ep_resident:
+                return spec(tuple(self.mesh.axis_names), None, None)
+            return spec(tp if self.tp_experts else None, None, f)
+        # dense mlp
+        if name in ("wi", "wg"):
+            return spec(f, tp if self.tp_ff else None)
+
+        # mamba
+        if name == "in_proj":
+            return spec(f, tp if self.tp_di else None)
+        if name == "conv_w":
+            return spec(None, tp if self.tp_di else None)
+        if name == "x_proj":
+            return spec(tp if self.tp_di else None, None)
+        if name == "dt_proj":
+            return spec(None, tp if self.tp_di else None)
+        if name == "A_log":
+            return spec(tp if self.tp_di else None, None)
+        if name in ("D", "dt_bias"):
+            return spec(tp if self.tp_di else None)
+        if name == "out_proj":
+            return spec(tp if self.tp_di else None, f)
+
+        # rwkv time-mix / channel-mix
+        if name in ("wr", "wk", "wv", "wg", "ww"):
+            if leaf.shape[-1] == self.cfg.d_ff:
+                return spec(f, tp if self.tp_ff else None)
+            return spec(f, tp if self.tp_rwkv else None)
+        if name == "u":
+            return spec(tp if self.tp_rwkv else None, None)
+        if name in ("w_bias", "ln_scale") or name.startswith("mix_"):
+            return spec(None)
+
+        # fallback: fsdp on the largest dim
+        if leaf.ndim - len(lead) >= 2:
+            dims = [None] * (leaf.ndim - len(lead))
+            big = int(np.argmax(leaf.shape[len(lead):]))
+            dims[big] = f
+            return spec(*dims)
+        return spec(*([None] * (leaf.ndim - len(lead))))
+
+    def param_specs(self, params, *, replicate_fsdp: bool = False) -> Any:
+        """replicate_fsdp=True (serving): drop the FSDP axes from every spec
+        so weights stay device-resident instead of being re-gathered every
+        step. Only valid when the per-TP-shard weight bytes fit HBM — see
+        ``serving_replication_fits``."""
+        def walk(path, leaf):
+            names = tuple(
+                p.key if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx")
+                else str(p) for p in path)
+            spec = self.param_spec(names, leaf)
+            if replicate_fsdp:
+                spec = P(*(None if dim == self.fsdp or dim in self.fsdp
+                           else dim for dim in spec))
+            return spec
+        return jax.tree_util.tree_map_with_path(walk, params)
+
+    def serving_replication_fits(self, param_bytes: float,
+                                 budget: float = 4 * 2 ** 30) -> bool:
+        """Can the model serve with weights replicated over the data axes
+        (TP-sharded only)? param_bytes is the total (bf16) weight footprint."""
+        return param_bytes / max(tp_size(self.mesh), 1) <= budget
+
+    # -- batch / activation specs -------------------------------------------
+    def batch_spec(self, global_batch: int) -> P:
+        """Batch dim sharding: over fsdp axes when divisible, else None."""
+        if _div(global_batch, dp_size(self.mesh)):
+            return P(self.fsdp)
+        if _div(global_batch, int(self.mesh.shape[self.fsdp[-1]])):
+            return P(self.fsdp[-1])
+        return P(None)
+
+    def train_batch_specs(self, global_batch: int) -> Dict[str, P]:
+        b = self.batch_spec(global_batch)
+        specs = {"inputs": P(*b, None) if not self.cfg.embeds_in
+                 else P(*b, None, None),
+                 "labels": P(*b, None)}
+        if self.cfg.xattn_ctx_len:
+            specs["xctx"] = P(*b, None, None)
+        return specs
+
+    def cache_specs(self, cache_tree, global_batch: int) -> Any:
+        """Decode-cache specs. Batch-shard when possible. The cache TIME axis
+        is sharded over every mesh axis not already used: over 'model' when
+        the KV heads aren't TP-divisible (flash-decode style — each shard
+        attends to its slice, GSPMD combines the partial softmax with scalar
+        collectives instead of gathering the whole cache), and over 'data'
+        too when the batch is too small to shard (long-context serving)."""
+        bspec = self.batch_spec(global_batch)
+        batch_sharded = bspec != P(None)
+        t_axes = []
+        if not batch_sharded:
+            t_axes.append("data")
+        if not self.tp_kv:
+            t_axes.append("model")
+        seq_axis = tuple(t_axes) if t_axes else None
+
+        def walk(path, leaf):
+            names = tuple(p.key if hasattr(p, "key") else "" for p in path)
+            name = names[-1] if names else ""
+            # leading dim is num_blocks (stacked)
+            if name in ("k", "v"):                     # (L,B,T,HKV,dh)
+                kv = "model" if self.tp_kv else None
+                return P(None, *bspec, seq_axis, kv, None)
+            if name in ("xk", "xv"):
+                kv = "model" if self.tp_kv else None
+                return P(None, *bspec, None, kv, None)
+            if name == "slot_pos":
+                return P(None, seq_axis)
+            if name == "pos":
+                return P(None)
+            if name == "conv":                         # (L,B,dconv-1,di)
+                return P(None, *bspec, None, "model" if self.tp_di else None)
+            if name == "ssm":                          # (L,B,di,ds)
+                return P(None, *bspec, "model" if self.tp_di else None, None)
+            if name == "state":                        # (L,B,nh,hd,hd)
+                return P(None, *bspec, "model" if self.tp_rwkv else None,
+                         None, None)
+            if name in ("shift", "shift_mlp"):         # (L,B,1,D)
+                return P(None, *bspec, None, None)
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+
+def named(mesh: Mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

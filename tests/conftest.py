@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: XLA_FLAGS is deliberately NOT set here — smoke
+tests and benches must see the real (1-device) platform; only
+launch/dryrun.py requests 512 placeholder devices (assignment contract)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def f32_opts():
+    from repro.models import ModelOptions
+    return ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)

@@ -1,0 +1,143 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles (assignment deliverable c). All kernels run their real Pallas body
+under interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_ssm import mamba_scan
+from repro.kernels.moe_route import moe_route
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rwkv6 import rwkv_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dt):
+    return dict(atol=2.5e-2, rtol=2.5e-2) if dt == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,HQ,HKV,dh,causal,window,dt", [
+    (2, 128, 4, 2, 64, True, 0, jnp.float32),
+    (1, 200, 8, 8, 80, True, 0, jnp.float32),      # ragged, MHA, odd dh
+    (2, 256, 4, 1, 128, True, 64, jnp.bfloat16),   # MQA + sliding window
+    (1, 96, 6, 2, 112, False, 0, jnp.float32),     # non-causal, dh=112
+    (1, 64, 2, 2, 64, True, 16, jnp.float32),      # tight window
+])
+def test_flash_attention(B, S, HQ, HKV, dh, causal, window, dt):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, HQ, dh), dt)
+    k = jax.random.normal(ks[1], (B, S, HKV, dh), dt)
+    v = jax.random.normal(ks[2], (B, S, HKV, dh), dt)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("B,T,HQ,HKV,dh,live,dt", [
+    (2, 100, 8, 2, 80, 77, jnp.float32),
+    (1, 64, 4, 4, 64, 64, jnp.bfloat16),
+    (3, 130, 8, 1, 128, 1, jnp.float32),           # single live slot
+])
+def test_decode_attention(B, T, HQ, HKV, dh, live, dt):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, HQ, dh), dt)
+    k = jax.random.normal(ks[1], (B, T, HKV, dh), dt)
+    v = jax.random.normal(ks[2], (B, T, HKV, dh), dt)
+    valid = jnp.arange(T) < live
+    out = decode_attention(q, k, v, valid, block_t=32, interpret=True)
+    ref = kref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("shape,dt,br", [
+    ((3, 40, 96), jnp.float32, 16),
+    ((2, 33, 256), jnp.bfloat16, 8),
+    ((128, 64), jnp.float32, 128),
+])
+def test_rmsnorm(shape, dt, br):
+    x = jax.random.normal(KEY, shape, dt)
+    s = jax.random.normal(jax.random.PRNGKey(1), shape[-1:]) * 0.1 + 1.0
+    out = rmsnorm(x, s, block_rows=br, interpret=True)
+    ref = kref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("B,S,di,ds,chunk,dtile", [
+    (2, 100, 96, 8, 16, 32),
+    (1, 64, 64, 4, 64, 64),      # single chunk / single tile
+    (2, 33, 128, 16, 8, 32),     # ragged seq
+])
+def test_mamba_scan(B, S, di, ds, chunk, dtile):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (di, ds)) * 0.3)
+    Bv = jax.random.normal(ks[3], (B, S, ds))
+    Cv = jax.random.normal(ks[4], (B, S, ds))
+    out = mamba_scan(x, dt, A, Bv, Cv, chunk=chunk, di_tile=dtile,
+                     interpret=True)
+    ref = kref.mamba_scan_ref(x, dt, A, Bv, Cv)
+    np.testing.assert_allclose(out, ref, atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("B,S,nh,hd,chunk", [
+    (2, 70, 3, 16, 16),
+    (1, 64, 2, 32, 64),
+    (2, 31, 1, 64, 8),
+])
+def test_rwkv_scan(B, S, nh, hd, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, nh, hd))
+    k = jax.random.normal(ks[1], (B, S, nh, hd))
+    v = jax.random.normal(ks[2], (B, S, nh, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, nh, hd)) - 2))
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.5
+    out = rwkv_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    ref = kref.rwkv_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(out, ref, atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("N,D,E,K,bn", [
+    (100, 64, 16, 4, 32),
+    (64, 32, 8, 1, 64),
+    (33, 16, 4, 2, 16),
+])
+def test_moe_route(N, D, E, K, bn):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (N, D))
+    router = jax.random.normal(ks[1], (D, E)) * 0.1
+    g, i = moe_route(x, router, K, block_n=bn, interpret=True)
+    gr, ir = kref.moe_route_ref(x, router, K)
+    np.testing.assert_allclose(g, gr, atol=1e-5, rtol=1e-5)
+    assert (np.asarray(i) == np.asarray(ir)).all()
+
+
+def test_flash_attention_grad_matches_ref():
+    """The kernel must be differentiable (used in training at L4)."""
+    B, S, H, dh = 1, 64, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+
+    def f_kernel(q, k, v):
+        return flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                               interpret=True).sum()
+
+    def f_ref(q, k, v):
+        return kref.flash_attention_ref(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-3)

@@ -1,0 +1,167 @@
+"""Model substrate tests: per-arch smoke (assignment deliverable f),
+implementation equivalence (chunked == ref), decode == prefill consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import (ModelOptions, decode_step, init_params, loss_fn,
+                          prefill)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _batch(cfg, B, S, key=KEY):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.embeds_in:
+        batch["inputs"] = jax.random.normal(key, (B, S, cfg.d_model)) * 0.1
+    else:
+        batch["inputs"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.xattn_ctx_len:
+        batch["xctx"] = jax.random.normal(
+            key, (B, cfg.xattn_ctx_len, cfg.xattn_ctx_dim)) * 0.1
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Smoke: every assigned arch instantiates (reduced config) and runs one
+# forward + one train step on CPU; output shapes correct, no NaNs.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    from repro.core import L1_BASE, LinkageConfig, build_train_step, init_train_state
+    from repro.optim import AdamWConfig
+
+    cfg = get_config(arch).smoke()
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, 2, 32)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, b, cfg, opts))(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN forward loss"
+
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_train_state(KEY, cfg, ocfg)
+    step = build_train_step(cfg, opts, ocfg, LinkageConfig(level=L1_BASE))
+    new_state, m = step.fn(state, batch)
+    assert int(new_state.step) == 1
+    assert not bool(jnp.isnan(m["loss"])), f"{arch}: NaN train loss"
+    # params actually changed
+    before = jax.tree.leaves(state.params)[1]
+    after = jax.tree.leaves(new_state.params)[1]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "h2o-danube-1.8b",
+                                  "jamba-v0.1-52b", "rwkv6-7b",
+                                  "musicgen-medium"])
+def test_chunked_equals_ref(arch):
+    """The shardable blockwise forms are numerically the oracle."""
+    cfg = get_config(arch).smoke()
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, 2, 40)     # deliberately not a chunk multiple
+    o_ref = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    o_chk = ModelOptions(attn_impl="chunked", scan_impl="chunked",
+                         q_chunk=16, kv_chunk=8, scan_chunk=8,
+                         dtype=jnp.float32)
+    l_ref = loss_fn(params, batch, cfg, o_ref)[0]
+    l_chk = loss_fn(params, batch, cfg, o_chk)[0]
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_chk), rtol=3e-4)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "h2o-danube-1.8b",
+                                  "rwkv6-7b", "jamba-v0.1-52b",
+                                  "llama-3.2-vision-11b"])
+def test_decode_matches_prefill(arch):
+    """One-token decode against the prefill cache == full-forward logits."""
+    cfg = get_config(arch).smoke()
+    if cfg.moe is not None:   # avoid capacity-drop artifacts in equivalence
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(KEY, cfg)
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.xattn_ctx_len:
+        kw["xctx"] = jax.random.normal(
+            KEY, (B, cfg.xattn_ctx_len, cfg.xattn_ctx_dim)) * 0.1
+    _, cache = prefill(params, toks[:, :S], cfg, opts, max_len=S + 8, **kw)
+    logits_dec, _ = decode_step(params, cache, toks[:, S], cfg, opts)
+    logits_full, _ = prefill(params, toks[:, :S + 1], cfg, opts,
+                             max_len=S + 8, **kw)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full), atol=2e-3, rtol=1e-3)
+
+
+def test_swa_decode_past_window():
+    """Sliding-window circular cache stays exact once pos > window."""
+    cfg = get_config("h2o-danube-1.8b").smoke()   # window 16
+    params = init_params(KEY, cfg)
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    B, S = 1, 30   # prefill 30 > window 16, then decode 6 more
+    toks = jax.random.randint(KEY, (B, S + 6), 0, cfg.vocab_size)
+    _, cache = prefill(params, toks[:, :S], cfg, opts, max_len=64)
+    for t in range(S, S + 6):
+        logits_dec, cache = decode_step(params, cache, toks[:, t], cfg, opts)
+    logits_full, _ = prefill(params, toks, cfg, opts, max_len=64)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full), atol=2e-3, rtol=1e-3)
+
+
+def test_param_count_matches_init():
+    for arch in list_archs():
+        cfg = get_config(arch).smoke()
+        n_real = sum(x.size for x in jax.tree.leaves(init_params(KEY, cfg)))
+        assert cfg.param_count() == n_real, arch
+
+
+def test_full_size_param_counts_match_published():
+    """Sanity: the assigned configs reproduce the published model sizes."""
+    expect = {
+        "tinyllama-1.1b": (1.10e9, 0.03),
+        "qwen2-7b": (7.62e9, 0.03),
+        "mistral-large-123b": (122.6e9, 0.03),
+        "kimi-k2-1t-a32b": (1.04e12, 0.05),
+        "jamba-v0.1-52b": (51.6e9, 0.05),
+        "rwkv6-7b": (8.0e9, 0.1),
+    }
+    for arch, (want, tol) in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < tol, (arch, got, want)
+    # active-param sanity for the MoE giants
+    assert abs(get_config("kimi-k2-1t-a32b").active_param_count() - 31e9) < 3e9
+    assert abs(get_config("jamba-v0.1-52b").active_param_count() - 12e9) < 2e9
+
+
+def test_logit_chunking_equals_full():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, 2, 32)
+    o_full = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    o_chunk = dataclasses.replace(o_full, logit_chunk=8)
+    l1 = loss_fn(params, batch, cfg, o_full)[0]
+    l2 = loss_fn(params, batch, cfg, o_chunk)[0]
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5)
+
+
+def test_moe_group_size_invariance():
+    """Routing groups change capacity locality, not correctness (loss within
+    capacity-drop noise)."""
+    cfg = get_config("moonshot-v1-16b-a3b").smoke()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg, 2, 48)
+    losses = []
+    for gs in (48, 16, 8):
+        opts = ModelOptions(attn_impl="ref", scan_impl="ref",
+                            dtype=jnp.float32, moe_group=gs)
+        # compare the data term only: the load-balance aux is group-averaged,
+        # so it legitimately depends (mildly) on the grouping
+        losses.append(float(loss_fn(params, batch, cfg, opts)[1]["ce"]))
+    assert max(losses) - min(losses) < 1e-4

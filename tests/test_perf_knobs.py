@@ -1,0 +1,123 @@
+"""§Perf hillclimb knobs: every optimization must preserve semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models import ModelOptions, init_params, loss_fn, prefill, decode_step
+from repro.models.layers import _sdpa_chunked
+from repro.sharding.rules import ArchSharding
+
+KEY = jax.random.PRNGKey(21)
+
+
+@pytest.mark.parametrize("window", [0, 48])
+def test_causal_skip_static_schedule_fwd_and_grad(window):
+    ks = jax.random.split(KEY, 3)
+    B, S, HQ, HKV, dh = 2, 200, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, HQ, dh))
+    k = jax.random.normal(ks[1], (B, S, HKV, dh))
+    v = jax.random.normal(ks[2], (B, S, HKV, dh))
+    pos = jnp.arange(S)
+
+    def f(q_, skip):
+        return _sdpa_chunked(q_, k, v, causal=True, window=window,
+                             q_pos=pos, k_pos=pos, q_chunk=32, kv_chunk=16,
+                             causal_skip=skip)
+
+    np.testing.assert_allclose(f(q, False), f(q, True), atol=1e-6)
+    g0 = jax.grad(lambda q_: f(q_, False).sum())(q)
+    g1 = jax.grad(lambda q_: f(q_, True).sum())(q)
+    np.testing.assert_allclose(g0, g1, atol=1e-5)
+
+
+def test_causal_skip_end_to_end_loss():
+    cfg = get_config("h2o-danube-1.8b").smoke()   # SWA: exercises window-lo
+    params = init_params(KEY, cfg)
+    batch = {"inputs": jax.random.randint(KEY, (2, 40), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (2, 40), 0, cfg.vocab_size)}
+    base = ModelOptions(attn_impl="chunked", scan_impl="ref", q_chunk=16,
+                        kv_chunk=8, dtype=jnp.float32)
+    skip = dataclasses.replace(base, causal_skip=True)
+    l0 = loss_fn(params, batch, cfg, base)[0]
+    l1 = loss_fn(params, batch, cfg, skip)[0]
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-5)
+
+
+def test_decode_tiled_matches_untiled():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 25), 0, cfg.vocab_size)
+    base = ModelOptions(attn_impl="chunked", scan_impl="ref", q_chunk=8,
+                        kv_chunk=8, dtype=jnp.float32)
+    tiled = dataclasses.replace(base, decode_tiled=True)
+    _, c0 = prefill(params, toks[:, :24], cfg, base, max_len=32)
+    _, c1 = prefill(params, toks[:, :24], cfg, tiled, max_len=32)
+    l0, _ = decode_step(params, c0, toks[:, 24], cfg, base)
+    l1, _ = decode_step(params, c1, toks[:, 24], cfg, tiled)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_norm_bf16_grad_matches_fp32_within_tolerance():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    params = init_params(KEY, cfg)
+    batch = {"inputs": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)}
+    base = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    opt = dataclasses.replace(base, norm_bf16_grad=True)
+
+    def g(o):
+        return jax.grad(lambda p: loss_fn(p, batch, cfg, o)[0])(params)
+
+    g0, g1 = g(base), g(opt)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        # fp32 activations: the cast is a no-op here -> exact
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-5)
+
+
+class FakeMesh:
+    def __init__(self, shape_by_axis):
+        self.axis_names = tuple(shape_by_axis)
+        self.shape = dict(shape_by_axis)
+
+
+def test_serving_replication_drops_fsdp_axes():
+    cfg = get_config("tinyllama-1.1b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    sh = ArchSharding(cfg, mesh)
+    params = init_params(KEY, cfg.smoke())
+    specs = sh.param_specs(params, replicate_fsdp=True)
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        for dim in s:
+            axes = dim if isinstance(dim, tuple) else (dim,)
+            assert "data" not in axes, s    # fsdp axes gone; TP may remain
+    assert sh.serving_replication_fits(2.2e9)        # tinyllama bf16
+    assert not sh.serving_replication_fits(2e12)     # kimi-class
+
+
+def test_extra_arch_mixtral_smoke():
+    """Beyond-pool arch: selectable, correct size, trains one step."""
+    from repro.core import L1_BASE, LinkageConfig, build_train_step, init_train_state
+    from repro.optim import AdamWConfig
+
+    full = get_config("mixtral-8x7b")
+    assert abs(full.param_count() - 46.7e9) / 46.7e9 < 0.05
+    assert abs(full.active_param_count() - 12.9e9) / 12.9e9 < 0.1
+    assert "mixtral-8x7b" not in list_archs()               # not in pool
+    assert "mixtral-8x7b" in list_archs(include_extras=True)
+
+    cfg = full.smoke()
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=5)
+    state = init_train_state(KEY, cfg, ocfg)
+    step = build_train_step(cfg, opts, ocfg, LinkageConfig(level=L1_BASE))
+    batch = {"inputs": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)}
+    _, m = step.fn(state, batch)
+    assert not bool(jnp.isnan(m["loss"]))

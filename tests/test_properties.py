@@ -1,0 +1,165 @@
+"""Hypothesis property-based tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as kref
+from repro.models import layers as L
+from repro.optim import AdamWConfig, compress
+from repro.optim import adamw
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# RoPE: rotation preserves norms and relative positions
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 4), st.integers(2, 16), st.sampled_from([32, 64, 80]))
+def test_rope_preserves_norm(b, s, dh):
+    key = jax.random.PRNGKey(b * 100 + s)
+    x = jax.random.normal(key, (b, s, 2, dh))
+    pos = jnp.arange(s)
+    y = L.rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 64), st.integers(0, 64))
+def test_rope_relative_invariance(p, q):
+    """q·k after RoPE depends only on (p - q): shift both, dot is unchanged."""
+    key = jax.random.PRNGKey(0)
+    qv = jax.random.normal(key, (1, 1, 1, 64))
+    kv = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    def dot_at(dp, dq):
+        qr = L.rope(qv, jnp.array([dp]), 1e4)
+        kr = L.rope(kv, jnp.array([dq]), 1e4)
+        return float(jnp.sum(qr * kr))
+    d1 = dot_at(p, q)
+    d2 = dot_at(p + 17, q + 17)
+    assert abs(d1 - d2) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Attention invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.sampled_from([8, 17, 32]), st.sampled_from([1, 2, 4]))
+def test_causal_attention_prefix_stability(b, s, hkv):
+    """Causality: outputs at position t ignore tokens after t."""
+    key = jax.random.PRNGKey(s)
+    hq, dh = 4, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    full = kref.flash_attention_ref(q, k, v, causal=True)
+    half = s // 2 + 1
+    part = kref.flash_attention_ref(q[:, :half], k[:, :half], v[:, :half],
+                                    causal=True)
+    np.testing.assert_allclose(np.asarray(full[:, :half]), np.asarray(part),
+                               atol=1e-5, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 2), st.sampled_from([16, 33]))
+def test_attention_rows_are_convex_combinations(b, s):
+    """Softmax rows: output lies in the convex hull of V (max bound)."""
+    key = jax.random.PRNGKey(s + 7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, 2, 8))
+    k = jax.random.normal(ks[1], (b, s, 2, 8))
+    v = jax.random.normal(ks[2], (b, s, 2, 8))
+    out = kref.flash_attention_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# MoE router: gates are a sub-distribution; dispatch conserves mass
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(4, 64), st.sampled_from([4, 8, 16]), st.integers(1, 4))
+def test_moe_route_gates_distribution(n, e, k):
+    key = jax.random.PRNGKey(n * e)
+    x = jax.random.normal(key, (n, 16))
+    router = jax.random.normal(jax.random.PRNGKey(1), (16, e)) * 0.3
+    gates, idx = kref.moe_route_ref(x, router, min(k, e))
+    g = np.asarray(gates)
+    assert (g >= -1e-7).all() and (g.sum(-1) <= 1 + 1e-5).all()
+    assert (np.asarray(idx) < e).all()
+    # top-k sorted descending
+    assert (np.diff(g, axis=-1) <= 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression: bounded error, exact for symmetric payloads
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.floats(0.1, 100.0))
+def test_quantize_roundtrip_error_bound(n, scale_mag):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n * 13,)) * scale_mag
+    gmax = jnp.max(jnp.abs(x))
+    s = jnp.maximum(gmax / 127.0, 1e-30)
+    q = compress.quantize(x, s)
+    back = compress.dequantize(q, s)
+    # per-element error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# AdamW invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.floats(1e-5, 1e-2), st.integers(1, 30))
+def test_adamw_step_bounded(lr, step_idx):
+    """|Δp| per step is bounded by ~lr·(1 + wd·|p|) for Adam updates."""
+    cfg = AdamWConfig(lr=lr, warmup_steps=0, total_steps=100,
+                      schedule="constant", grad_clip=0.0, weight_decay=0.0)
+    params = {"w": jnp.ones((4, 4))}
+    state = adamw.init(cfg, params)
+    g = {"w": jnp.full((4, 4), 0.5)}
+    for _ in range(step_idx):
+        params, state, _ = adamw.update(cfg, g, state, params)
+    delta = float(jnp.max(jnp.abs(params["w"] - 1.0)))
+    assert delta <= lr * step_idx * 1.2 + 1e-6
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      schedule="cosine")
+    lrs = [float(adamw.schedule_lr(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] < 1e-6
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # decaying
+
+
+# ---------------------------------------------------------------------------
+# Linear-recurrence invariants (RWKV/Mamba): decay semigroup property
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(2, 5), st.sampled_from([8, 12]))
+def test_rwkv_chunk_boundary_invariance(nchunks, hd):
+    """Chunked evaluation is independent of the chunk size (semigroup)."""
+    B, nh, S = 1, 1, nchunks * 4
+    key = jax.random.PRNGKey(nchunks)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, nh, hd))
+    k = jax.random.normal(ks[1], (B, S, nh, hd))
+    v = jax.random.normal(ks[2], (B, S, nh, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, nh, hd)) - 1.5))
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.3
+    y4, _ = L.rwkv_scan_chunked(r, k, v, w, u, chunk=4)
+    y8, _ = L.rwkv_scan_chunked(r, k, v, w, u, chunk=8)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y8),
+                               atol=1e-4, rtol=1e-3)

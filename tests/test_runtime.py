@@ -1,0 +1,187 @@
+"""Fault tolerance, checkpointing, co-processes, data pipeline."""
+import os
+import shutil
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.core import (L2_BYP, L3_NSS, AsyncCheckpointer, LinkageConfig,
+                        PrefetchWorker, build_train_step, init_train_state)
+from repro.data import DataConfig, Pipeline, stage
+from repro.models import ModelOptions
+from repro.optim import AdamWConfig
+from repro.runtime import DriverConfig, FailureInjector, train
+
+KEY = jax.random.PRNGKey(5)
+CFG = get_config("tinyllama-1.1b").smoke()
+OPTS = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+OCFG = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+
+
+@pytest.fixture
+def ckpt_dir(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _train(ckpt_dir, linkage, injector=None, total=24):
+    state = init_train_state(KEY, CFG, OCFG)
+    step = build_train_step(CFG, OPTS, OCFG, linkage)
+    pipe = Pipeline(CFG, DataConfig(global_batch=4, seq_len=32))
+    dcfg = DriverConfig(total_steps=total, ckpt_every=6, ckpt_dir=ckpt_dir)
+    return train(step.fn, state, pipe, linkage, dcfg, injector=injector)
+
+
+def test_loss_decreases(ckpt_dir):
+    rep = _train(ckpt_dir, LinkageConfig(level=L2_BYP), total=30)
+    assert rep.losses[-1] < rep.losses[0]
+
+
+def test_injected_failure_recovers_exactly(ckpt_dir):
+    """Checkpoint/restart + deterministic stream replay == the run that never
+    failed (the core fault-tolerance property)."""
+    clean = _train(ckpt_dir + "_clean", LinkageConfig(level=L2_BYP))
+    inj = FailureInjector(fail_at=(13,))
+    failed = _train(ckpt_dir, LinkageConfig(level=L2_BYP), injector=inj)
+    assert failed.restarts == 1
+    np.testing.assert_allclose(failed.losses[-1], clean.losses[-1], rtol=1e-6)
+
+
+def test_exhausted_restart_budget_raises(ckpt_dir):
+    class AlwaysFail(FailureInjector):
+        def maybe_fail(self, step):
+            if step >= 7:
+                raise RuntimeError("persistent failure")
+
+    with pytest.raises(RuntimeError):
+        _train(ckpt_dir, LinkageConfig(level=L2_BYP), injector=AlwaysFail())
+
+
+def test_nss_driver(ckpt_dir):
+    rep = _train(ckpt_dir, LinkageConfig(level=L3_NSS, nss_steps=4), total=24)
+    assert rep.steps_run == 24
+    assert rep.losses[-1] < rep.losses[0]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint module
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    state = {"a": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+             "b": (jnp.arange(5), {"c": jnp.zeros((2,), jnp.float32)})}
+    d = str(tmp_path)
+    ckpt.save(d, 7, state)
+    assert ckpt.latest_step(d) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = ckpt.restore(d, 7, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 3, {"x": jnp.ones(2)})
+    # simulate a crash mid-save: directory without COMMIT
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert ckpt.latest_step(d) == 3
+
+
+def test_prune_keeps_latest(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, {"x": jnp.ones(1) * s})
+    ckpt.prune(d, keep=2)
+    assert ckpt.list_steps(d) == [4, 5]
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Save under one sharding, restore under another (mesh A -> mesh B)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path)
+    x = jnp.arange(16.0).reshape(4, 4)
+    ckpt.save(d, 1, {"w": x})
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    restored = ckpt.restore(d, 1, like, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
+    assert restored["w"].sharding.spec == P("data", None)
+
+
+# ---------------------------------------------------------------------------
+# co-processes
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_runs_off_thread(tmp_path):
+    seen = []
+    ev = threading.Event()
+
+    def save_fn(state, step):
+        seen.append((threading.current_thread().name, step))
+        ev.set()
+
+    ac = AsyncCheckpointer(save_fn)
+    ac.submit({"x": jnp.ones(3)}, 5)
+    assert ev.wait(5.0)
+    ac.close()
+    assert seen and seen[0][1] == 5
+    assert seen[0][0] != threading.main_thread().name
+
+
+def test_async_checkpointer_surfaces_errors():
+    def bad(state, step):
+        raise IOError("disk full")
+
+    ac = AsyncCheckpointer(bad)
+    ac.submit({"x": jnp.ones(1)}, 1)
+    with pytest.raises(IOError):
+        ac.close()
+
+
+def test_prefetch_worker_order_and_close():
+    it = iter(range(10))
+    w = PrefetchWorker(it, put_fn=lambda x: x * 2, depth=3)
+    got = [next(w) for _ in range(5)]
+    assert got == [0, 2, 4, 6, 8]
+    w.close()
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_per_step():
+    d = DataConfig(global_batch=4, seq_len=16, seed=99)
+    p1 = Pipeline(CFG, d)
+    p2 = Pipeline(CFG, d)
+    b1 = p1.batch_at(12)
+    b2 = p2.batch_at(12)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    # different steps differ
+    b3 = p1.batch_at(13)
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+
+def test_pipeline_labels_are_next_tokens():
+    p = Pipeline(CFG, DataConfig(global_batch=2, seq_len=16))
+    b = p.batch_at(0)
+    # structure: label stream has learnable bigram structure (some tokens
+    # follow the successor table); check shapes + dtype + range
+    assert b["inputs"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    assert b["inputs"].max() < p.vocab
+
+
+def test_stacked_batches_match_singles():
+    p = Pipeline(CFG, DataConfig(global_batch=2, seq_len=8))
+    st = p.stacked_at(4, 3)
+    for i in range(3):
+        np.testing.assert_array_equal(st["inputs"][i],
+                                      p.batch_at(4 + i)["inputs"])

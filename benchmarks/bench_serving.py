@@ -1,29 +1,40 @@
 """Paper Tables 4–6 — Redis throughput/latency across the UKL spectrum.
 
-Serve batched requests (prefill + decode) on a small LM at each linkage
-preset; report req/s, tokens/s, mean and p99 latency. The paper's ordering
-under test: base ≈ Linux < RET_BYP < RET_BYP(shortcut); incremental effort,
-incremental gain.
+Drives the continuous-batching engine (closed-loop, all slots busy) on a
+small LM at each linkage preset; reports tokens/s and p50/p99 latency. The
+paper's ordering under test: base ≈ Linux < RET_BYP < RET_BYP(shortcut);
+incremental effort, incremental gain. A sequential (one-batch-at-a-time)
+row is included as the pre-engine baseline the spectrum used to be measured
+on.
 """
 from __future__ import annotations
 
 from benchmarks.common import row
-from repro.launch.serve import run_server
+from repro.launch.serve import run_engine, run_server
 
 PRESETS = ["base", "byp", "ret_byp", "ret_byp_shortcut", "nss_shortcut"]
 
 
 def run():
+    seq = run_server("tinyllama-1.1b", "base", batch=4, prompt_len=32,
+                     gen_len=32, requests=8)
+    row("table4_serving_sequential_base",
+        seq["mean_latency_s"] * 1e6,
+        f"tokens_per_s={seq['tokens_per_s']:.0f};"
+        f"p99_s={seq['p99_latency_s']:.3f}")
+
     base_tput = None
     for preset in PRESETS:
-        rep = run_server("tinyllama-1.1b", preset, batch=4, prompt_len=32,
-                         gen_len=32, requests=8)
+        rep = run_engine("tinyllama-1.1b", preset, n_slots=4, prompt_len=32,
+                         gen_len=32, requests=8, load="closed",
+                         decode_steps=8)
         tput = rep["tokens_per_s"]
         if base_tput is None:
             base_tput = tput
         row(f"table4_serving_{preset}",
             rep["mean_latency_s"] * 1e6,
-            f"tokens_per_s={tput:.0f};p99_s={rep['p99_latency_s']:.3f};"
+            f"tokens_per_s={tput:.0f};p50_s={rep['p50_latency_s']:.3f};"
+            f"p99_s={rep['p99_latency_s']:.3f};"
             f"tput_vs_base={tput / base_tput:.2f}x")
 
 

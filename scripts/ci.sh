@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the full test suite plus a serving smoke run.
+# Usage: bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: continuous-batching serve (open-loop) =="
+python -m repro.launch.serve --preset nss_shortcut --load open \
+    --requests 4 --slots 2 --prompt-len 16 --gen-len 16
+
+echo "CI OK"

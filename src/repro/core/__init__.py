@@ -1,16 +1,20 @@
 """The paper's primary contribution: the UKL linkage spectrum for JAX."""
-from repro.core.coprocess import AsyncCheckpointer, MetricWriter, PrefetchWorker
+from repro.core.coprocess import (AdmissionWorker, AsyncCheckpointer,
+                                  MetricWriter, PrefetchWorker)
 from repro.core.linkage import (L0_EAGER, L1_BASE, L2_BYP, L3_NSS, LEVELS,
                                 PRESETS, LinkageConfig, preset)
 from repro.core.step import (LinkedStep, TrainState, build_decode_step,
-                             build_sharded_train_step, build_train_step,
-                             init_train_state, make_decode_fn, make_train_step)
+                             build_sharded_train_step, build_slot_decode_step,
+                             build_train_step, init_train_state,
+                             make_decode_fn, make_slot_decode_fn,
+                             make_train_step)
 
 __all__ = [
-    "AsyncCheckpointer", "MetricWriter", "PrefetchWorker",
+    "AdmissionWorker", "AsyncCheckpointer", "MetricWriter", "PrefetchWorker",
     "L0_EAGER", "L1_BASE", "L2_BYP", "L3_NSS", "LEVELS", "PRESETS",
     "LinkageConfig", "preset",
     "LinkedStep", "TrainState", "build_decode_step",
-    "build_sharded_train_step", "build_train_step", "init_train_state",
-    "make_decode_fn", "make_train_step",
+    "build_sharded_train_step", "build_slot_decode_step", "build_train_step",
+    "init_train_state", "make_decode_fn", "make_slot_decode_fn",
+    "make_train_step",
 ]

@@ -9,7 +9,10 @@ on standard Python/JAX "IPC":
     of the step (the NSS_PS pinned buffer feeder);
   * ``AsyncCheckpointer`` — serializes state snapshots off the critical path;
   * ``MetricWriter``    — drains RET-mode metric futures without blocking
-    the dispatch thread.
+    the dispatch thread;
+  * ``AdmissionWorker`` — the serving frontend: replays request arrival
+    times and hands requests to the engine over a queue (the "ordinary
+    process doing the networking beside the linked Redis" of the paper).
 
 None of them ever blocks the step dispatch; all are plain threads + queues,
 exactly the "tooling keeps working" property the paper insists on.
@@ -103,11 +106,17 @@ class AsyncCheckpointer:
 
 
 class MetricWriter:
-    """Drains metric futures on a worker thread (RET-mode companion)."""
+    """Drains metric futures on a worker thread (RET-mode companion).
+
+    Sink exceptions are captured and re-raised on the next ``submit`` or on
+    ``close`` (same contract as ``AsyncCheckpointer``) — a crashed sink must
+    not silently drop every subsequent metric.
+    """
 
     def __init__(self, sink: Callable[[int, dict], None]):
         self._sink = sink
         self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
         self._t = threading.Thread(target=self._run, daemon=True)
         self._t.start()
 
@@ -117,11 +126,76 @@ class MetricWriter:
             if item is None:
                 return
             step, metrics = item
-            self._sink(step, jax.tree.map(lambda x: jax.device_get(x), metrics))
+            try:
+                self._sink(step, jax.tree.map(lambda x: jax.device_get(x),
+                                              metrics))
+            except BaseException as e:  # surfaced on next submit/close
+                self._err = e
 
     def submit(self, step: int, metrics):
+        if self._err is not None:
+            raise self._err
         self._q.put((step, metrics))
 
     def close(self):
         self._q.put(None)
         self._t.join()
+        if self._err is not None:
+            raise self._err
+
+
+class AdmissionWorker:
+    """Open-loop request source: replays arrival timestamps on a thread.
+
+    Takes a list of ``repro.serve.scheduler.Request`` (or anything with an
+    ``arrival_s`` attribute) and makes each one available at its arrival
+    time, independent of how fast the engine drains them — the defining
+    property of open-loop load. The engine ``poll()``s between decode
+    programs and ``wait()``s only when it has no active slots (the device is
+    idle anyway, exactly when blocking costs nothing).
+    """
+
+    def __init__(self, requests, clock: Callable[[], float] = time.monotonic):
+        """``clock`` must advance with real time (it may be offset or scaled;
+        the wait loop re-reads it, so a frozen clock would never release)."""
+        self._q: "queue.Queue" = queue.Queue()
+        self._total = len(requests)
+        self._delivered = 0
+
+        def run():
+            t0 = clock()
+            for r in sorted(requests, key=lambda r: r.arrival_s):
+                while True:
+                    delay = r.arrival_s - (clock() - t0)
+                    if delay <= 0:
+                        break
+                    time.sleep(min(delay, 0.005))
+                self._q.put(r)
+
+        self._t = threading.Thread(target=run, daemon=True)
+        self._t.start()
+
+    @property
+    def exhausted(self) -> bool:
+        """True once every request has been handed to the caller."""
+        return self._delivered >= self._total
+
+    def poll(self):
+        """Drain every request that has arrived; never blocks."""
+        out = []
+        while True:
+            try:
+                out.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        self._delivered += len(out)
+        return out
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block for the next arrival; None on timeout."""
+        try:
+            r = self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        self._delivered += 1
+        return r

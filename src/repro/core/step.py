@@ -17,7 +17,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.linkage import L0_EAGER, L3_NSS, LinkageConfig
-from repro.models import init_params, loss_fn, decode_step as model_decode
+from repro.models import (init_params, loss_fn, decode_step as model_decode,
+                          decode_step_slots as model_decode_slots)
 from repro.models.layers import ModelOptions
 from repro.optim import adamw
 from repro.sharding.rules import ArchSharding, named
@@ -194,10 +195,9 @@ def make_decode_fn(cfg: ArchConfig, opts: ModelOptions, linkage: LinkageConfig,
     return single
 
 
-def build_decode_step(cfg: ArchConfig, opts: ModelOptions,
-                      linkage: LinkageConfig) -> Callable:
-    linkage.validate()
-    fn = make_decode_fn(cfg, opts, linkage)
+def _link_decode_fn(fn: Callable, linkage: LinkageConfig) -> Callable:
+    """Apply the linkage boundary to a decode fn: eager at L0, jit (with the
+    cache donated at L2+) otherwise."""
     if linkage.level == L0_EAGER:
         def eager(params, cache, tokens):
             with jax.disable_jit():
@@ -205,3 +205,47 @@ def build_decode_step(cfg: ArchConfig, opts: ModelOptions,
         return eager
     kwargs = {"donate_argnums": (1,)} if linkage.donate else {}
     return jax.jit(fn, **kwargs)
+
+
+def build_decode_step(cfg: ArchConfig, opts: ModelOptions,
+                      linkage: LinkageConfig) -> Callable:
+    linkage.validate()
+    return _link_decode_fn(make_decode_fn(cfg, opts, linkage), linkage)
+
+
+def make_slot_decode_fn(cfg: ArchConfig, opts: ModelOptions,
+                        linkage: LinkageConfig) -> Callable:
+    """Slot-layout decode for the serving engine: every batch row is an
+    independent in-flight sequence at its own position. Same linkage spectrum
+    as ``make_decode_fn`` — at L3 ``decode_steps`` tokens are fused in-graph
+    per program, so the host touches the boundary once per K tokens for the
+    *whole* continuously-batched slot set.
+    """
+
+    def one(params, cache, tokens):
+        logits, cache = model_decode_slots(params, cache, tokens, cfg, opts)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, nxt
+
+    if linkage.level == L3_NSS:
+        def many(params, cache, tokens):
+            def body(carry, _):
+                cache, toks = carry
+                cache, nxt = one(params, cache, toks)
+                return (cache, nxt), nxt
+            (cache, last), seq = lax.scan(body, (cache, tokens), None,
+                                          length=linkage.decode_steps)
+            return cache, seq.swapaxes(0, 1)     # (n_slots, K)
+        return many
+
+    def single(params, cache, tokens):
+        cache, nxt = one(params, cache, tokens)
+        return cache, nxt[:, None]
+    return single
+
+
+def build_slot_decode_step(cfg: ArchConfig, opts: ModelOptions,
+                           linkage: LinkageConfig) -> Callable:
+    """(params, slot_cache, tokens (B,)) -> (slot_cache, tokens (B, K))."""
+    linkage.validate()
+    return _link_decode_fn(make_slot_decode_fn(cfg, opts, linkage), linkage)

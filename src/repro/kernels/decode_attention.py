@@ -11,12 +11,10 @@ bounds) is precomputed by the wrapper into a (T,) mask.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -56,46 +54,14 @@ def _decode_kernel(q_ref, k_ref, v_ref, msk_ref, o_ref, m_ref, l_ref, acc_ref,
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
 def decode_attention(q, k, v, valid, *, block_t: int = 512,
                      interpret: bool = False):
-    """q:(B,HQ,dh); k,v:(B,T,HKV,dh); valid:(T,) bool. -> (B,HQ,dh)."""
-    B, HQ, dh = q.shape
-    T, HKV = k.shape[1], k.shape[2]
-    G = HQ // HKV
-    scale = 1.0 / math.sqrt(dh)
-    bt = min(block_t, T)
-    pad = (-T) % bt
-    padf = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else t
-    kT = padf(k.transpose(0, 2, 1, 3))                 # (B,HKV,T,dh)
-    vT = padf(v.transpose(0, 2, 1, 3))
-    dhp = (-dh) % 128
-    if dhp:
-        qp = jnp.pad(q, ((0, 0), (0, 0), (0, dhp)))
-        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
-        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
-    else:
-        qp = q
-    dhf = dh + dhp
-    qg = qp.reshape(B, HKV, G, dhf)
-    mask = jnp.pad(valid.astype(jnp.int32), (0, pad)).reshape(1, -1)
-    nt = (T + pad) // bt
+    """q:(B,HQ,dh); k,v:(B,T,HKV,dh); valid:(T,) bool. -> (B,HQ,dh).
 
-    out = pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, nt=nt),
-        grid=(B, HKV, nt),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, dhf), lambda b, h, ti: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bt, dhf), lambda b, h, ti: (b, h, ti, 0)),
-            pl.BlockSpec((1, 1, bt, dhf), lambda b, h, ti: (b, h, ti, 0)),
-            pl.BlockSpec((1, bt), lambda b, h, ti: (0, ti)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, dhf), lambda b, h, ti: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, HKV, G, dhf), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((G, 128), jnp.float32),
-            pltpu.VMEM((G, 128), jnp.float32),
-            pltpu.VMEM((G, dhf), jnp.float32),
-        ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(qg, kT, vT, mask)
-    return out.reshape(B, HQ, dhf)[..., :dh]
+    The uniform case is the slot-aware kernel with the shared mask broadcast
+    over the batch; the full wrapper (padding, tiling, pallas_call) lives in
+    ``repro.kernels.slot_decode`` (imported lazily — it reuses this module's
+    kernel body).
+    """
+    from repro.kernels.slot_decode import slot_decode_attention
+    mask = jnp.broadcast_to(valid[None], (q.shape[0], valid.shape[0]))
+    return slot_decode_attention(q, k, v, mask, block_t=block_t,
+                                 interpret=interpret)

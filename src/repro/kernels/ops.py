@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import (decode_attention as _dec, flash_attention as _fa,
                            mamba_ssm as _mamba, moe_route as _route,
-                           rmsnorm as _rms, rwkv6 as _rwkv)
+                           rmsnorm as _rms, rwkv6 as _rwkv,
+                           slot_decode as _slot)
 
 
 def _interpret() -> bool:
@@ -36,6 +37,23 @@ def decode_attention(q, ck, cv, slot_pos, pos, *, window: int = 0,
         valid &= pos - slot_pos < window
     out = _dec.decode_attention(q[:, 0], ck, cv, valid, block_t=block_t,
                                 interpret=_interpret())
+    return out[:, None]
+
+
+def slot_decode_attention(q, ck, cv, slot_pos, pos, *, window: int = 0,
+                          block_t: int = 512):
+    """Slot-aware decode: every batch row is at its own position.
+
+    q: (B,1,HQ,dh) fresh query; ck/cv: (B,T,HKV,dh) slotted cache;
+    slot_pos: (B,T) per-slot cache-entry positions; pos: (B,) per-slot
+    sequence positions. The per-slot validity mask is precomputed here (like
+    the uniform wrapper) so the kernel stays branch-free.
+    """
+    valid = (slot_pos <= pos[:, None]) & (slot_pos >= 0)
+    if window > 0:
+        valid &= pos[:, None] - slot_pos < window
+    out = _slot.slot_decode_attention(q[:, 0], ck, cv, valid, block_t=block_t,
+                                      interpret=_interpret())
     return out[:, None]
 
 

@@ -1,8 +1,20 @@
-"""Serving launcher: prefill + batched decode at a chosen linkage level.
+"""Serving launcher — the paper's Redis evaluation for the compiled-decode
+boundary.
 
-``python -m repro.launch.serve --arch tinyllama-1.1b --preset nss_shortcut``
-serves synthetic batched requests and reports throughput/latency — the Redis/
-Memcached analogue in the paper's evaluation.
+Two paths share one model/linkage setup:
+
+  engine (default)  continuous-batching ``repro.serve.ServeEngine``: a slot
+                    pool served under open-loop (Poisson arrivals) or
+                    closed-loop load, reporting tokens/s and p50/p99 latency.
+
+      python -m repro.launch.serve --preset nss_shortcut --load open
+      python -m repro.launch.serve --preset ret_byp --load closed \
+          --slots 8 --requests 32
+
+  sequential        the original one-request-at-a-time loop (``--load seq``,
+                    also ``run_server`` for benchmarks): the baseline the
+                    engine's continuous batching is asserted token-identical
+                    against in tests/test_serve.py.
 """
 from __future__ import annotations
 
@@ -15,14 +27,15 @@ import time
 import numpy as np
 
 
-def run_server(arch: str, preset_name: str, *, batch: int = 8,
-               prompt_len: int = 64, gen_len: int = 64, requests: int = 4,
-               smoke: bool = True, scale: float = 1.0, seed: int = 0):
+def _setup(arch: str, preset_name: str, *, smoke: bool = True,
+           scale: float = 1.0, seed: int = 0, gen_len: int = 64,
+           decode_steps: int = 0):
+    """Shared model/linkage construction for both serving paths."""
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config
-    from repro.core import L3_NSS, build_decode_step, preset
-    from repro.models import ModelOptions, init_params, prefill
+    from repro.core import L3_NSS, preset
+    from repro.models import ModelOptions, init_params
 
     cfg = get_config(arch)
     if smoke:
@@ -34,12 +47,72 @@ def run_server(arch: str, preset_name: str, *, batch: int = 8,
                 d_head=cfg.d_head if cfg.n_heads == 0
                 else int(cfg.d_model * scale) // cfg.n_heads)
     lk = preset(preset_name)
-    if lk.level == L3_NSS and lk.decode_steps != gen_len:
-        lk = dataclasses.replace(lk, decode_steps=gen_len)
+    if lk.level == L3_NSS:
+        k = decode_steps or min(lk.decode_steps, gen_len)
+        lk = dataclasses.replace(lk, decode_steps=k)
     opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
     if lk.shortcut:
         opts = lk.model_options(opts, on_tpu=jax.default_backend() == "tpu")
     params = init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, lk, opts, params
+
+
+def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
+               prompt_len: int = 32, gen_len: int = 32, requests: int = 8,
+               load: str = "open", rate: float = 25.0,
+               concurrency: int = 0, decode_steps: int = 0,
+               smoke: bool = True, scale: float = 1.0, seed: int = 0):
+    """Continuous-batching serving run; returns the engine report dict."""
+    from repro.serve import ServeEngine, serve_report, synthetic_requests
+
+    if requests < 1:
+        raise ValueError("need --requests >= 1")
+
+    cfg, lk, opts, params = _setup(arch, preset_name, smoke=smoke, scale=scale,
+                                   seed=seed, gen_len=gen_len,
+                                   decode_steps=decode_steps)
+    max_len = prompt_len + gen_len + 8
+    eng = ServeEngine(cfg, params, opts, lk, n_slots=n_slots, max_len=max_len)
+
+    # warmup: compile prefill + decode + slot writer outside the timed region
+    # (one decode program suffices — same compiled shapes as the real run)
+    warm = synthetic_requests(1, prompt_len, eng.tokens_per_program + 1,
+                              cfg.vocab_size, seed=seed + 1)
+    eng.run(warm, load="closed")
+    eng.programs_run = 0          # don't let warmup inflate the report
+    eng.tokens_wasted = 0
+
+    reqs = synthetic_requests(requests, prompt_len, gen_len, cfg.vocab_size,
+                              seed=seed,
+                              rate=rate if load == "open" else None)
+    completions, wall = eng.run(reqs, load=load,
+                                concurrency=concurrency or None)
+    rep = serve_report(completions, wall)
+    rep.update({
+        "arch": cfg.name, "preset": preset_name, "load": load,
+        "n_slots": n_slots, "prompt_len": prompt_len, "gen_len": gen_len,
+        "decode_steps_per_program": eng.tokens_per_program,
+        "programs_run": eng.programs_run,
+        "tokens_wasted": eng.tokens_wasted,
+    })
+    if load == "open":
+        rep["offered_rate_req_s"] = rate
+    return rep
+
+
+def run_server(arch: str, preset_name: str, *, batch: int = 8,
+               prompt_len: int = 64, gen_len: int = 64, requests: int = 4,
+               smoke: bool = True, scale: float = 1.0, seed: int = 0):
+    """Sequential baseline: whole-batch prefill + decode, one request batch
+    at a time (no admission between programs)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import L3_NSS, build_decode_step
+    from repro.models import prefill
+
+    cfg, lk, opts, params = _setup(arch, preset_name, smoke=smoke, scale=scale,
+                                   seed=seed, gen_len=gen_len,
+                                   decode_steps=gen_len)
     dec = build_decode_step(cfg, opts, lk)
     rng = np.random.default_rng(seed)
     max_len = prompt_len + gen_len + 8
@@ -78,29 +151,55 @@ def run_server(arch: str, preset_name: str, *, batch: int = 8,
         lat.append(time.time() - t0)
     wall = time.time() - t_all
     return {
-        "arch": cfg.name, "preset": preset_name, "batch": batch,
-        "prompt_len": prompt_len, "gen_len": gen_len,
+        "arch": cfg.name, "preset": preset_name, "load": "seq",
+        "batch": batch, "prompt_len": prompt_len, "gen_len": gen_len,
         "requests": requests, "wall_s": wall,
         "tokens_per_s": tokens_out / wall,
         "mean_latency_s": float(np.mean(lat)),
+        "p50_latency_s": float(np.percentile(lat, 50)),
         "p99_latency_s": float(np.percentile(lat, 99)),
     }
 
 
 def main(argv=None) -> int:
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="tinyllama-1.1b")
     p.add_argument("--preset", default="nss_shortcut")
-    p.add_argument("--batch", type=int, default=8)
-    p.add_argument("--prompt-len", type=int, default=64)
-    p.add_argument("--gen-len", type=int, default=64)
-    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--load", default="open",
+                   choices=["open", "closed", "seq"],
+                   help="open: Poisson arrivals at --rate; closed: "
+                        "--concurrency outstanding; seq: sequential baseline")
+    p.add_argument("--slots", type=int, default=4,
+                   help="engine cache slots (continuous-batching batch)")
+    p.add_argument("--rate", type=float, default=25.0,
+                   help="open-loop offered load, requests/s")
+    p.add_argument("--concurrency", type=int, default=0,
+                   help="closed-loop outstanding requests (0 = slots)")
+    p.add_argument("--decode-steps", type=int, default=0,
+                   help="L3 tokens per decode program (0 = preset default, "
+                        "clipped to gen-len)")
+    p.add_argument("--batch", type=int, default=8,
+                   help="batch size for --load seq")
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen-len", type=int, default=32)
+    p.add_argument("--requests", type=int, default=8)
     p.add_argument("--scale", type=float, default=1.0)
+    p.add_argument("--seed", type=int, default=0)
     p.add_argument("--report-json", default=None)
     args = p.parse_args(argv)
-    rep = run_server(args.arch, args.preset, batch=args.batch,
-                     prompt_len=args.prompt_len, gen_len=args.gen_len,
-                     requests=args.requests, scale=args.scale)
+
+    if args.load == "seq":
+        rep = run_server(args.arch, args.preset, batch=args.batch,
+                         prompt_len=args.prompt_len, gen_len=args.gen_len,
+                         requests=args.requests, scale=args.scale,
+                         seed=args.seed)
+    else:
+        rep = run_engine(args.arch, args.preset, n_slots=args.slots,
+                         prompt_len=args.prompt_len, gen_len=args.gen_len,
+                         requests=args.requests, load=args.load,
+                         rate=args.rate, concurrency=args.concurrency,
+                         decode_steps=args.decode_steps, scale=args.scale,
+                         seed=args.seed)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

@@ -406,6 +406,60 @@ def attention_decode(params: Params, x: jax.Array, cache: Params,
     return y, new_cache
 
 
+def attention_decode_slots(params: Params, x: jax.Array, cache: Params,
+                           cfg: ArchConfig, spec: LayerSpec, opts: ModelOptions
+                           ) -> Tuple[jax.Array, Params]:
+    """One-token decode where each batch row is an independent serving *slot*.
+
+    Unlike ``attention_decode`` (whole batch at one shared position), every
+    slot carries its own position and occupancy:
+
+      cache: {"k": (B,T,HKV,dh), "v": (B,T,HKV,dh),
+              "slot_pos": (B,T), "pos": (B,)}.
+
+    Rope angles, circular-buffer write indices and validity masks are all
+    per-slot, so sequences admitted at different times decode together in one
+    program — the continuous-batching primitive.
+    """
+    B = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)  # S == 1
+    pos = cache["pos"]                                  # (B,)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    T = cache["k"].shape[1]
+    slot = pos % T                                      # (B,) write index
+    row_upd = lambda c, u, s: lax.dynamic_update_slice(
+        c, u, (s,) + (0,) * (c.ndim - 1))
+    ck = jax.vmap(row_upd)(cache["k"], k.astype(cache["k"].dtype), slot)
+    cv = jax.vmap(row_upd)(cache["v"], v.astype(cache["v"].dtype), slot)
+    slot_pos = jax.vmap(row_upd)(cache["slot_pos"], pos[:, None], slot)
+    window = cfg.sliding_window if spec.mixer == SWA else 0
+
+    if opts.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.slot_decode_attention(q, ck, cv, slot_pos, pos,
+                                         window=window)
+    else:
+        valid = (slot_pos <= pos[:, None]) & (slot_pos >= 0)   # (B,T)
+        if window > 0:
+            valid &= pos[:, None] - slot_pos < window
+        qg = q.reshape(B, 1, hkv, hq // hkv, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32)
+        s = s / math.sqrt(dh)
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv).reshape(B, 1, hq, dh)
+
+    y = out.reshape(B, 1, -1) @ params["wo"].astype(x.dtype)
+    if spec.mixer == XATTN:
+        xout = _xattn_cached(params, x, cache, cfg)
+        gate = jnp.tanh(params["xgate"]).astype(x.dtype)
+        y = y + gate * xout
+    new_cache = dict(cache, k=ck, v=cv, slot_pos=slot_pos, pos=pos + 1)
+    return y, new_cache
+
+
 def _xattn_cached(params, x, cache, cfg):
     B = x.shape[0]
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim

@@ -263,11 +263,12 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 
 def apply_layer_decode(p: Params, x: jax.Array, cache_l: Params,
-                       cfg: ArchConfig, spec: LayerSpec, opts: ModelOptions
-                       ) -> Tuple[jax.Array, Params]:
+                       cfg: ArchConfig, spec: LayerSpec, opts: ModelOptions,
+                       slots: bool = False) -> Tuple[jax.Array, Params]:
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, opts)
     if spec.mixer in (ATTN, SWA, XATTN):
-        mix, cache_l = L.attention_decode(p["mixer"], h, cache_l, cfg, spec, opts)
+        attn_fn = L.attention_decode_slots if slots else L.attention_decode
+        mix, cache_l = attn_fn(p["mixer"], h, cache_l, cfg, spec, opts)
     elif spec.mixer == MAMBA:
         mix, cache_l = L.mamba_decode(p["mixer"], h, cache_l, cfg)
         cache_l = dict(cache_l, pos=cache_l["pos"] + 1)
@@ -291,20 +292,24 @@ def apply_layer_decode(p: Params, x: jax.Array, cache_l: Params,
 
 
 def decode_step(params: Params, cache, tokens: jax.Array, cfg: ArchConfig,
-                opts: ModelOptions) -> Tuple[jax.Array, Any]:
-    """tokens: (B,) int32 (or (B,D) embeds) -> (logits (B,V), new cache)."""
+                opts: ModelOptions, slots: bool = False
+                ) -> Tuple[jax.Array, Any]:
+    """tokens: (B,) int32 (or (B,D) embeds) -> (logits (B,V), new cache).
+
+    With ``slots=True`` the cache is in slot layout (``slot_pos``: (B,T),
+    ``pos``: (B,) per layer) and every batch row decodes at its own position —
+    the serving-engine decode. See ``repro.serve.cache`` for the layout.
+    """
     if cfg.embeds_in:
         h = tokens[:, None, :].astype(opts.dtype)
     else:
         h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(opts.dtype)
 
-    new_caches = []
-
     def block_fn(x, xs):
         block_params, cache_b = xs
         new_c = []
         for spec, bp, cl in zip(cfg.block_pattern, block_params, cache_b):
-            x, cl = apply_layer_decode(bp, x, cl, cfg, spec, opts)
+            x, cl = apply_layer_decode(bp, x, cl, cfg, spec, opts, slots=slots)
             new_c.append(cl)
         return x, tuple(new_c)
 
@@ -321,6 +326,13 @@ def decode_step(params: Params, cache, tokens: jax.Array, cfg: ArchConfig,
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
     logits = unembed_logits(params, h, cfg)[:, 0]
     return logits, new_cache
+
+
+def decode_step_slots(params: Params, cache, tokens: jax.Array,
+                      cfg: ArchConfig, opts: ModelOptions
+                      ) -> Tuple[jax.Array, Any]:
+    """Slot-layout decode: each batch row at its own position (serving)."""
+    return decode_step(params, cache, tokens, cfg, opts, slots=True)
 
 
 # ---------------------------------------------------------------------------

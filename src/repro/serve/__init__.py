@@ -1,0 +1,18 @@
+"""Continuous-batching serving over the UKL linkage spectrum.
+
+The paper's headline workload is a server (Redis) re-linked against the
+kernel; this package is the same story for the compiled-decode boundary: a
+request-level engine whose decode program is built at any point of the
+linkage spectrum, with ordinary co-processes (admission, metrics) running
+beside it. See docs/serving.md.
+"""
+from repro.serve.cache import init_slot_cache, make_slot_writer, slotify
+from repro.serve.engine import ServeEngine, serve_report
+from repro.serve.scheduler import (Completion, Request, SlotScheduler,
+                                   SlotState, synthetic_requests)
+
+__all__ = [
+    "Completion", "Request", "ServeEngine", "SlotScheduler", "SlotState",
+    "init_slot_cache", "make_slot_writer", "serve_report", "slotify",
+    "synthetic_requests",
+]

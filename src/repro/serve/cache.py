@@ -1,0 +1,77 @@
+"""Slotted KV cache: the serving engine's resident device memory.
+
+The engine owns one persistent cache with ``n_slots`` batch rows ("slots").
+A slot holds one in-flight sequence; finished sequences are evicted and the
+freed row is overwritten by the next admitted prompt's prefill — the device
+state never reallocates between requests (the UKL "pinned" discipline).
+
+Layout vs the uniform decode cache in ``repro.models.transformer``:
+
+  uniform (all rows at one position)      slot layout (per-row positions)
+  -----------------------------------    --------------------------------
+  slot_pos : (layers, T)                  slot_pos : (layers, B, T)
+  pos      : (layers,)                    pos      : (layers, B)
+
+Every other leaf already carries batch at axis 1 (after the stacked-layers
+axis), so once ``slot_pos``/``pos`` gain a batch axis, *all* leaves do — and
+slot admission becomes one uniform ``dynamic_update_slice_in_dim`` over the
+tree (``make_slot_writer``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import init_cache
+
+
+def slotify(cache: Any) -> Any:
+    """Uniform-layout cache (any batch) -> slot layout.
+
+    ``slot_pos`` (L,T) and ``pos`` (L,) are shared across the batch in the
+    uniform layout (prefill runs all rows in lockstep), so broadcasting them
+    over the batch axis is exact.
+    """
+    out = []
+    for g in cache:
+        batched = next(v for k, v in g.items() if k not in ("slot_pos", "pos"))
+        B = batched.shape[1]
+        g = dict(g)
+        L = g["pos"].shape[0]
+        g["pos"] = jnp.broadcast_to(g["pos"][:, None], (L, B))
+        if "slot_pos" in g:
+            T = g["slot_pos"].shape[1]
+            g["slot_pos"] = jnp.broadcast_to(g["slot_pos"][:, None, :],
+                                             (L, B, T))
+        out.append(g)
+    return tuple(out)
+
+
+def init_slot_cache(cfg: ArchConfig, n_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Any:
+    """Fresh slot-layout cache: all slots empty (slot_pos == -1, pos == 0)."""
+    base = slotify(init_cache(cfg, n_slots, max_len, dtype))
+    # init_cache leaves pos at the int32 fill value; empty slots decode from
+    # position 0 (their garbage output is ignored until admission).
+    return tuple(dict(g, pos=jnp.zeros_like(g["pos"])) for g in base)
+
+
+def make_slot_writer():
+    """Jitted ``(engine_cache, prefilled_cache_B1, slot) -> engine_cache``.
+
+    Writes a freshly prefilled single-sequence cache (slot layout, batch 1)
+    into row ``slot`` of the engine cache. The engine cache is donated: the
+    write is in-place on device, no reallocation per admission.
+    """
+
+    def write(dst, src, slot):
+        return jax.tree.map(
+            lambda d, s: lax.dynamic_update_slice_in_dim(d, s.astype(d.dtype),
+                                                         slot, axis=1),
+            dst, src)
+
+    return jax.jit(write, donate_argnums=(0,))

@@ -1,0 +1,215 @@
+"""Continuous-batching serving engine over the UKL linkage spectrum.
+
+One persistent slot-layout cache lives on device; between decode programs the
+engine evicts finished sequences and prefills newly admitted prompts into the
+freed slots, so the device never idles while work exists. The decode program
+is built by ``repro.core.build_slot_decode_step`` at whatever linkage level
+the preset names:
+
+  L1/L2      one token per program for the whole slot set; L2 donates the
+             cache (no realloc at the boundary).
+  L3 (NSS)   ``decode_steps`` tokens fused in-graph per program — one host
+             transition per K tokens for all slots.
+  ret_async  RET: generated-token arrays stay on device as futures; the host
+             synchronizes only when a request *finishes* (completion is
+             length-based, so the host can detect it without reading token
+             values). Timestamps are dispatch-time, matching RET semantics.
+  shortcut   specialized kernels, including the slot-aware decode-attention
+             path in ``repro.kernels.slot_decode``.
+
+The engine is deterministic for a fixed request list: admission is FIFO,
+slots are assigned lowest-index-first, and eviction happens only at program
+boundaries — so its token output is bit-identical to running each request
+alone through prefill + decode (asserted in tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.coprocess import AdmissionWorker
+from repro.core.linkage import L3_NSS, LinkageConfig
+from repro.core.step import build_slot_decode_step
+from repro.models import ModelOptions, prefill
+from repro.serve.cache import init_slot_cache, make_slot_writer, slotify
+from repro.serve.scheduler import Completion, Request, SlotScheduler
+
+
+class ServeEngine:
+    """Request-level continuous batching over a fixed slot pool."""
+
+    def __init__(self, cfg: ArchConfig, params, opts: ModelOptions,
+                 linkage: LinkageConfig, n_slots: int, max_len: int):
+        linkage.validate()
+        if cfg.embeds_in:
+            raise ValueError("serving engine takes token ids, not embeddings")
+        if n_slots < 1:
+            raise ValueError("serving engine needs n_slots >= 1")
+        self.cfg = cfg
+        self.params = params
+        self.opts = opts
+        self.linkage = linkage
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.tokens_per_program = (linkage.decode_steps
+                                   if linkage.level == L3_NSS else 1)
+        self._dec = build_slot_decode_step(cfg, opts, linkage)
+        self._write = make_slot_writer()
+        # jit caches per input shape: each distinct prompt length pays one
+        # compile (documented cost; synthetic load uses fixed lengths)
+        self._prefill = jax.jit(
+            lambda p, t: prefill(p, t, cfg, opts, max_len=max_len))
+        self.cache = init_slot_cache(cfg, n_slots, max_len, opts.dtype)
+        self._next = jnp.zeros((n_slots,), jnp.int32)
+        self.sched = SlotScheduler(n_slots)
+        self.programs_run = 0
+        self.tokens_wasted = 0       # decoded past a request's budget (L3)
+
+    # -- admission ----------------------------------------------------------
+
+    def _admit(self, now_fn: Callable[[], float]) -> List[Completion]:
+        slot, req = self.sched.admit_next(now_fn())
+        if req.prompt.shape[0] + req.max_new_tokens > self.max_len:
+            self.sched.release(slot)
+            raise ValueError(
+                f"request {req.rid}: prompt+budget exceeds max_len "
+                f"{self.max_len}")
+        logits, c1 = self._prefill(self.params, jnp.asarray(req.prompt)[None])
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
+        self.cache = self._write(self.cache, slotify(c1), slot)
+        self._next = self._next.at[slot].set(first[0])
+        st = self.sched.active[slot]
+        # the prefill argmax is generated token #1 of the budget
+        if self.linkage.ret_async:
+            st.chunks.append(first)                 # stays a device future
+        else:
+            st.chunks.append(np.asarray(first))     # "iret": sync now
+        st.first_token_s = now_fn()
+        st.produced = 1
+        if st.remaining == 0:                       # max_new_tokens == 1
+            return [self._finalize(slot, now_fn)]
+        return []
+
+    # -- decode -------------------------------------------------------------
+
+    def step(self, now_fn: Callable[[], float]) -> List[Completion]:
+        """Run one decode program; harvest tokens; evict finished slots."""
+        self.cache, toks = self._dec(self.params, self.cache, self._next)
+        self._next = toks[:, -1]
+        self.programs_run += 1
+        toks_host = None
+        if not self.linkage.ret_async:
+            toks_host = np.asarray(toks)            # "iret": sync every program
+        now = now_fn()
+        finished = []
+        for slot in sorted(self.sched.active):
+            st = self.sched.active[slot]
+            take = min(self.tokens_per_program, st.remaining)
+            self.tokens_wasted += self.tokens_per_program - take
+            if take == 0:
+                continue
+            chunk = (toks[slot, :take] if toks_host is None
+                     else toks_host[slot, :take])
+            st.chunks.append(chunk)
+            st.produced += take
+            if st.produced >= st.req.max_new_tokens:
+                finished.append(self._finalize(slot, now_fn))
+        return finished
+
+    def _finalize(self, slot: int,
+                  now_fn: Callable[[], float]) -> Completion:
+        st = self.sched.release(slot)
+        # RET mode synchronizes here, once per completed request
+        tokens = np.concatenate([np.asarray(c) for c in st.chunks])
+        done = now_fn()
+        return Completion(
+            rid=st.req.rid, prompt_len=int(st.req.prompt.shape[0]),
+            tokens=tokens, arrival_s=st.req.arrival_s, admit_s=st.admit_s,
+            first_token_s=st.first_token_s, done_s=done)
+
+    # -- driving loops ------------------------------------------------------
+
+    def _admit_and_step(self, now_fn) -> List[Completion]:
+        finished = []
+        while self.sched.can_admit():
+            finished += self._admit(now_fn)
+        if self.sched.active:
+            finished += self.step(now_fn)
+        return finished
+
+    def run(self, requests: List[Request], *, load: str = "closed",
+            concurrency: Optional[int] = None,
+            clock: Callable[[], float] = time.monotonic
+            ) -> Tuple[List[Completion], float]:
+        """Serve ``requests`` to completion. Returns (completions, wall_s).
+
+        load="open":   requests arrive at their ``arrival_s`` timestamps via
+                       an AdmissionWorker co-process, regardless of server
+                       speed (open loop — queueing delay shows up in latency).
+        load="closed": at most ``concurrency`` requests are outstanding; a
+                       completion immediately issues the next (closed loop).
+        """
+        n = len(requests)
+        completions: List[Completion] = []
+        t0 = clock()
+        rel = lambda: clock() - t0
+        if load == "open":
+            worker = AdmissionWorker(requests, clock=clock)
+            while len(completions) < n:
+                for r in worker.poll():
+                    self.sched.enqueue(r)
+                if (not self.sched.active and not self.sched.can_admit()
+                        and not worker.exhausted):
+                    r = worker.wait(timeout=0.05)   # device idle: block
+                    if r is not None:
+                        self.sched.enqueue(r)
+                    continue
+                completions += self._admit_and_step(rel)
+        elif load == "closed":
+            conc = concurrency or self.n_slots
+            issued = 0
+            outstanding = 0
+            while len(completions) < n:
+                while outstanding < conc and issued < n:
+                    req = dataclasses.replace(requests[issued],
+                                              arrival_s=rel())
+                    self.sched.enqueue(req)
+                    issued += 1
+                    outstanding += 1
+                done = self._admit_and_step(rel)
+                outstanding -= len(done)
+                completions += done
+        else:
+            raise ValueError(f"unknown load mode {load!r}")
+        return completions, rel()
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+def serve_report(completions: List[Completion], wall_s: float) -> dict:
+    if not completions:
+        raise ValueError("serve_report needs at least one completion")
+    lats = np.array([c.latency_s for c in completions])
+    ttfts = np.array([c.ttft_s for c in completions])
+    total_tokens = int(sum(len(c.tokens) for c in completions))
+    return {
+        "requests": len(completions),
+        "wall_s": wall_s,
+        "total_tokens": total_tokens,
+        "tokens_per_s": total_tokens / wall_s,
+        "requests_per_s": len(completions) / wall_s,
+        "mean_latency_s": float(lats.mean()),
+        "p50_latency_s": float(np.percentile(lats, 50)),
+        "p99_latency_s": float(np.percentile(lats, 99)),
+        "p50_ttft_s": float(np.percentile(ttfts, 50)),
+        "p99_ttft_s": float(np.percentile(ttfts, 99)),
+    }

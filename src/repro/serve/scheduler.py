@@ -1,0 +1,114 @@
+"""Request/slot scheduling for the continuous-batching engine.
+
+Deterministic by construction: admission is FIFO over arrival order (ties
+broken by request id) and free slots are handed out lowest-index-first, so a
+fixed request list plus a fixed seed replays the exact same schedule — the
+property the token-identity tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a generation budget."""
+    rid: int
+    prompt: np.ndarray               # (P,) int32 token ids
+    max_new_tokens: int
+    arrival_s: float = 0.0           # offset from run start (open-loop load)
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side bookkeeping for one occupied cache slot."""
+    req: Request
+    admit_s: float
+    produced: int = 0                # generated tokens so far (incl. prefill's)
+    first_token_s: Optional[float] = None
+    chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new_tokens - self.produced
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request with its timeline."""
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray               # (max_new_tokens,) generated ids
+    arrival_s: float
+    admit_s: float
+    first_token_s: float
+    done_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+
+class SlotScheduler:
+    """FIFO admission queue over a fixed pool of cache slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots))
+        heapq.heapify(self._free)
+        self._queue: Deque[Request] = deque()
+        self.active: Dict[int, SlotState] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def enqueue(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def can_admit(self) -> bool:
+        return bool(self._queue) and bool(self._free)
+
+    def admit_next(self, now: float) -> tuple:
+        """Pop the oldest queued request into the lowest free slot."""
+        req = self._queue.popleft()
+        slot = heapq.heappop(self._free)
+        self.active[slot] = SlotState(req=req, admit_s=now)
+        return slot, req
+
+    def release(self, slot: int) -> SlotState:
+        st = self.active.pop(slot)
+        heapq.heappush(self._free, slot)
+        return st
+
+
+# ---------------------------------------------------------------------------
+# Synthetic load generation
+# ---------------------------------------------------------------------------
+
+def synthetic_requests(n: int, prompt_len: int, max_new_tokens: int,
+                       vocab_size: int, seed: int = 0,
+                       rate: Optional[float] = None) -> List[Request]:
+    """n random-token requests; with ``rate`` (req/s), Poisson arrival times
+    (open-loop load — arrivals don't wait for the server), else all at t=0.
+    """
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, vocab_size, size=(n, prompt_len), dtype=np.int32)
+    arrivals = np.zeros(n)
+    if rate is not None and rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(rid=i, prompt=prompts[i], max_new_tokens=max_new_tokens,
+                    arrival_s=float(arrivals[i])) for i in range(n)]

@@ -6,6 +6,12 @@ paper's ordering under test: base ≈ Linux < RET_BYP < RET_BYP(shortcut);
 incremental effort, incremental gain. A sequential (one-batch-at-a-time)
 row is included as the pre-engine baseline the spectrum used to be measured
 on.
+
+The paged-KV rows compare the two memory subsystems at identical load:
+``slotted`` reserves a worst-case row per slot, ``paged`` demand-allocates
+fixed-size blocks (reporting the resident-block high-watermark), and the
+shared-prefix row adds a common 16-token "system prompt" so the radix index
+prefills it once and CoW-shares its blocks across all requests.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ from benchmarks.common import row
 from repro.launch.serve import run_engine, run_server
 
 PRESETS = ["base", "byp", "ret_byp", "ret_byp_shortcut", "nss_shortcut"]
+PAGED_PRESETS = ["base", "nss_shortcut"]
 
 
 def run():
@@ -36,6 +43,27 @@ def run():
             f"tokens_per_s={tput:.0f};p50_s={rep['p50_latency_s']:.3f};"
             f"p99_s={rep['p99_latency_s']:.3f};"
             f"tput_vs_base={tput / base_tput:.2f}x")
+
+    # paged vs slotted at identical load: same token streams, block-level
+    # memory accounting instead of worst-case rows
+    for preset in PAGED_PRESETS:
+        slotted = run_engine("tinyllama-1.1b", preset, n_slots=4,
+                             prompt_len=32, gen_len=32, requests=8,
+                             load="closed", decode_steps=8, kv="slotted")
+        for tag, kwargs in [("paged", {}),
+                            ("paged_sharedpfx", {"shared_prefix_len": 16})]:
+            rep = run_engine("tinyllama-1.1b", preset, n_slots=4,
+                             prompt_len=32, gen_len=32, requests=8,
+                             load="closed", decode_steps=8, kv="paged",
+                             block_size=16, **kwargs)
+            row(f"table5_kv_{tag}_{preset}",
+                rep["mean_latency_s"] * 1e6,
+                f"tokens_per_s={rep['tokens_per_s']:.0f};"
+                f"slotted_tokens_per_s={slotted['tokens_per_s']:.0f};"
+                f"blocks_hwm={rep['kv_blocks_hwm']}/"
+                f"{rep['kv_blocks_total']};"
+                f"cow_forks={rep['kv_cow_forks']};"
+                f"shared_tokens={rep['kv_prefix_shared_tokens']}")
 
 
 if __name__ == "__main__":

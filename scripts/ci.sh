@@ -6,11 +6,19 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
+echo "== tier-1: pytest (slow-marked tests excluded; --runslow adds them) =="
 python -m pytest -x -q
 
 echo "== smoke: continuous-batching serve (open-loop) =="
 python -m repro.launch.serve --preset nss_shortcut --load open \
     --requests 4 --slots 2 --prompt-len 16 --gen-len 16
+
+echo "== smoke: paged KV engine (open-loop, shared prefix) =="
+python -m repro.launch.serve --preset nss_shortcut --load open \
+    --requests 4 --slots 2 --prompt-len 16 --gen-len 16 \
+    --kv paged --block-size 8 --shared-prefix-len 8
+
+echo "== smoke: slotted-vs-paged token identity =="
+python scripts/paged_smoke.py
 
 echo "CI OK"

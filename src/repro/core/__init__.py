@@ -3,18 +3,21 @@ from repro.core.coprocess import (AdmissionWorker, AsyncCheckpointer,
                                   MetricWriter, PrefetchWorker)
 from repro.core.linkage import (L0_EAGER, L1_BASE, L2_BYP, L3_NSS, LEVELS,
                                 PRESETS, LinkageConfig, preset)
-from repro.core.step import (LinkedStep, TrainState, build_decode_step,
+from repro.core.step import (LinkedStep, SamplingConfig, TrainState,
+                             build_decode_step, build_paged_decode_step,
                              build_sharded_train_step, build_slot_decode_step,
                              build_train_step, init_train_state,
-                             make_decode_fn, make_slot_decode_fn,
+                             make_decode_fn, make_paged_decode_fn,
+                             make_sampler, make_slot_decode_fn,
                              make_train_step)
 
 __all__ = [
     "AdmissionWorker", "AsyncCheckpointer", "MetricWriter", "PrefetchWorker",
     "L0_EAGER", "L1_BASE", "L2_BYP", "L3_NSS", "LEVELS", "PRESETS",
     "LinkageConfig", "preset",
-    "LinkedStep", "TrainState", "build_decode_step",
-    "build_sharded_train_step", "build_slot_decode_step", "build_train_step",
-    "init_train_state", "make_decode_fn", "make_slot_decode_fn",
-    "make_train_step",
+    "LinkedStep", "SamplingConfig", "TrainState", "build_decode_step",
+    "build_paged_decode_step", "build_sharded_train_step",
+    "build_slot_decode_step", "build_train_step", "init_train_state",
+    "make_decode_fn", "make_paged_decode_fn", "make_sampler",
+    "make_slot_decode_fn", "make_train_step",
 ]

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.linkage import L0_EAGER, L3_NSS, LinkageConfig
 from repro.models import (init_params, loss_fn, decode_step as model_decode,
+                          decode_step_paged as model_decode_paged,
                           decode_step_slots as model_decode_slots)
 from repro.models.layers import ModelOptions
 from repro.optim import adamw
@@ -169,6 +170,46 @@ def build_sharded_train_step(cfg: ArchConfig, opts: ModelOptions,
 # Serving steps
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Token-sampling policy compiled into the decode program.
+
+    ``temperature == 0`` is greedy argmax (the default, and the mode the
+    token-identity tests pin down). Otherwise logits are divided by
+    ``temperature``, optionally truncated to the ``top_k`` highest, and
+    sampled with a per-slot PRNG key threaded through the decode program —
+    each slot's key chain is seeded from (seed, request id) at admission, so
+    a request's sampled stream depends only on the request and the seed,
+    never on which slot it landed in or when it was admitted: schedules
+    replay deterministically.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def request_key(self, rid: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), rid)
+
+
+def make_sampler(sampling: Optional[SamplingConfig]) -> Callable:
+    """(logits (B,V), keys (B,2) uint32) -> (tokens (B,) int32, new keys)."""
+    if sampling is None or sampling.temperature <= 0.0:
+        def greedy(logits, keys):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+        return greedy
+
+    def sample(logits, keys):
+        splits = jax.vmap(lambda k: jax.random.split(k, 2))(keys)   # (B,2,2)
+        new_keys, subs = splits[:, 0], splits[:, 1]
+        l = logits.astype(jnp.float32) / sampling.temperature
+        if sampling.top_k > 0:
+            kth = lax.top_k(l, sampling.top_k)[0][..., -1:]
+            l = jnp.where(l >= kth, l, -jnp.inf)
+        toks = jax.vmap(jax.random.categorical)(subs, l)
+        return toks.astype(jnp.int32), new_keys
+    return sample
+
+
 def make_decode_fn(cfg: ArchConfig, opts: ModelOptions, linkage: LinkageConfig,
                    sample_greedy: bool = True) -> Callable:
     """Decode ``linkage.decode_steps`` tokens per program at L3, else one."""
@@ -213,39 +254,94 @@ def build_decode_step(cfg: ArchConfig, opts: ModelOptions,
     return _link_decode_fn(make_decode_fn(cfg, opts, linkage), linkage)
 
 
-def make_slot_decode_fn(cfg: ArchConfig, opts: ModelOptions,
-                        linkage: LinkageConfig) -> Callable:
-    """Slot-layout decode for the serving engine: every batch row is an
-    independent in-flight sequence at its own position. Same linkage spectrum
-    as ``make_decode_fn`` — at L3 ``decode_steps`` tokens are fused in-graph
-    per program, so the host touches the boundary once per K tokens for the
-    *whole* continuously-batched slot set.
+def _serving_decode_fn(one: Callable, linkage: LinkageConfig) -> Callable:
+    """Lift a one-token serving microstep ``(params, cache, tokens, keys) ->
+    (cache, nxt, keys)`` over the linkage spectrum: at L3 ``decode_steps``
+    tokens are fused in-graph per program (one host transition per K tokens
+    for the whole continuously-batched slot set), else one per program.
+    Returns ``(params, cache, tokens (B,), keys (B,2)) ->
+    (cache, tokens (B,K), keys)``.
     """
-
-    def one(params, cache, tokens):
-        logits, cache = model_decode_slots(params, cache, tokens, cfg, opts)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return cache, nxt
-
     if linkage.level == L3_NSS:
-        def many(params, cache, tokens):
+        def many(params, cache, tokens, keys):
             def body(carry, _):
-                cache, toks = carry
-                cache, nxt = one(params, cache, toks)
-                return (cache, nxt), nxt
-            (cache, last), seq = lax.scan(body, (cache, tokens), None,
-                                          length=linkage.decode_steps)
-            return cache, seq.swapaxes(0, 1)     # (n_slots, K)
+                cache, toks, ks = carry
+                cache, nxt, ks = one(params, cache, toks, ks)
+                return (cache, nxt, ks), nxt
+            (cache, _, keys), seq = lax.scan(body, (cache, tokens, keys),
+                                             None, length=linkage.decode_steps)
+            return cache, seq.swapaxes(0, 1), keys   # (n_slots, K)
         return many
 
-    def single(params, cache, tokens):
-        cache, nxt = one(params, cache, tokens)
-        return cache, nxt[:, None]
+    def single(params, cache, tokens, keys):
+        cache, nxt, keys = one(params, cache, tokens, keys)
+        return cache, nxt[:, None], keys
     return single
 
 
+def make_slot_decode_fn(cfg: ArchConfig, opts: ModelOptions,
+                        linkage: LinkageConfig,
+                        sampling: Optional[SamplingConfig] = None) -> Callable:
+    """Slot-layout decode for the serving engine: every batch row is an
+    independent in-flight sequence at its own position, with its own
+    sampling-key chain."""
+    sampler = make_sampler(sampling)
+
+    def one(params, cache, tokens, keys):
+        logits, cache = model_decode_slots(params, cache, tokens, cfg, opts)
+        nxt, keys = sampler(logits, keys)
+        return cache, nxt, keys
+
+    return _serving_decode_fn(one, linkage)
+
+
 def build_slot_decode_step(cfg: ArchConfig, opts: ModelOptions,
-                           linkage: LinkageConfig) -> Callable:
-    """(params, slot_cache, tokens (B,)) -> (slot_cache, tokens (B, K))."""
+                           linkage: LinkageConfig,
+                           sampling: Optional[SamplingConfig] = None
+                           ) -> Callable:
+    """(params, slot_cache, tokens (B,), keys (B,2)) ->
+    (slot_cache, tokens (B, K), keys)."""
     linkage.validate()
-    return _link_decode_fn(make_slot_decode_fn(cfg, opts, linkage), linkage)
+    return _link_decode_fn(make_slot_decode_fn(cfg, opts, linkage, sampling),
+                           linkage)
+
+
+def make_paged_decode_fn(cfg: ArchConfig, opts: ModelOptions,
+                         linkage: LinkageConfig, max_len: int,
+                         sampling: Optional[SamplingConfig] = None
+                         ) -> Callable:
+    """Paged-KV decode: the cache is a physical block pool and each slot's
+    logical view is assembled through its block table (passed per call — the
+    engine demand-allocates / CoW-forks blocks between programs, so the
+    table is host state, not program state)."""
+    sampler = make_sampler(sampling)
+
+    def one_with_tables(tables):
+        def one(params, cache, tokens, keys):
+            logits, cache = model_decode_paged(params, cache, tokens, tables,
+                                               cfg, opts, max_len)
+            nxt, keys = sampler(logits, keys)
+            return cache, nxt, keys
+        return one
+
+    def fn(params, cache, tokens, keys, tables):
+        return _serving_decode_fn(one_with_tables(tables), linkage)(
+            params, cache, tokens, keys)
+    return fn
+
+
+def build_paged_decode_step(cfg: ArchConfig, opts: ModelOptions,
+                            linkage: LinkageConfig, max_len: int,
+                            sampling: Optional[SamplingConfig] = None
+                            ) -> Callable:
+    """(params, paged_cache, tokens (B,), keys (B,2), tables (B, nb)) ->
+    (paged_cache, tokens (B, K), keys)."""
+    linkage.validate()
+    fn = make_paged_decode_fn(cfg, opts, linkage, max_len, sampling)
+    if linkage.level == L0_EAGER:
+        def eager(params, cache, tokens, keys, tables):
+            with jax.disable_jit():
+                return fn(params, cache, tokens, keys, tables)
+        return eager
+    kwargs = {"donate_argnums": (1,)} if linkage.donate else {}
+    return jax.jit(fn, **kwargs)

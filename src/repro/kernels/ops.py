@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import (decode_attention as _dec, flash_attention as _fa,
                            mamba_ssm as _mamba, moe_route as _route,
-                           rmsnorm as _rms, rwkv6 as _rwkv,
-                           slot_decode as _slot)
+                           paged_decode as _paged, rmsnorm as _rms,
+                           rwkv6 as _rwkv, slot_decode as _slot)
 
 
 def _interpret() -> bool:
@@ -54,6 +54,21 @@ def slot_decode_attention(q, ck, cv, slot_pos, pos, *, window: int = 0,
         valid &= pos[:, None] - slot_pos < window
     out = _slot.slot_decode_attention(q[:, 0], ck, cv, valid, block_t=block_t,
                                       interpret=_interpret())
+    return out[:, None]
+
+
+def paged_decode_attention(q, kp, vp, tables, pos):
+    """Paged decode: block-table indirection instead of dense slot rows.
+
+    q: (B,1,HQ,dh) fresh query; kp/vp: (P+1,bs,HKV,dh) physical block pools
+    (row P is the trash block); tables: (B,nb) int32 logical->physical map;
+    pos: (B,) per-slot positions. Validity is logical-position order —
+    ``arange(nb*bs) <= pos`` — since block chains are never circular.
+    """
+    nb, bs = tables.shape[1], kp.shape[1]
+    valid = jnp.arange(nb * bs, dtype=jnp.int32)[None] <= pos[:, None]
+    out = _paged.paged_decode_attention(q[:, 0], kp, vp, tables, valid,
+                                        interpret=_interpret())
     return out[:, None]
 
 

@@ -1,0 +1,90 @@
+"""Paged one-token decode attention: flash-decode over a block-table cache.
+
+The serving engine's paged KV backend keeps every slot's cache as a chain of
+fixed-size blocks in one physical pool (``repro.serve.paging``). This kernel
+is the slot-aware decode kernel re-addressed through that indirection: the
+grid's inner axis walks the slot's *logical* blocks and a scalar-prefetched
+block table translates each step to a physical pool row in the BlockSpec
+index map — the gather happens in the DMA engine, never materialized in HBM.
+The online-softmax body is reused verbatim from ``decode_attention``: the
+accumulation never cared where a KV tile was fetched from, only which lanes
+the mask keeps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 names the Mosaic compiler-params dataclass TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+from repro.kernels.decode_attention import _decode_kernel
+
+
+def _paged_kernel(tbl_ref, q_ref, k_ref, v_ref, msk_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, nt: int):
+    # the block table was consumed by the index maps; the body is the shared
+    # flash-decode accumulation
+    _decode_kernel(q_ref, k_ref, v_ref, msk_ref, o_ref, m_ref, l_ref, acc_ref,
+                   scale=scale, nt=nt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, kp, vp, tables, valid, *,
+                           interpret: bool = False):
+    """q:(B,HQ,dh); kp,vp:(P+1,bs,HKV,dh) physical pools; tables:(B,nb)
+    int32 logical->physical block map; valid:(B, nb*bs) bool. -> (B,HQ,dh).
+
+    Each (batch, kv-head) program walks the slot's nb logical blocks; the
+    index map reads ``tables[b, i]`` (scalar-prefetched) to pick the pool
+    row, so dead slots pointing at the trash row and garbage tails are
+    simply lanes the mask zeroes out.
+    """
+    B, HQ, dh = q.shape
+    P1, bs, HKV = kp.shape[0], kp.shape[1], kp.shape[2]
+    nb = tables.shape[1]
+    G = HQ // HKV
+    scale = 1.0 / math.sqrt(dh)
+    kT = kp.transpose(0, 2, 1, 3)                     # (P+1, HKV, bs, dh)
+    vT = vp.transpose(0, 2, 1, 3)
+    dhp = (-dh) % 128
+    if dhp:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, dhp)))
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+    dhf = dh + dhp
+    qg = q.reshape(B, HKV, G, dhf)
+    mask = valid.astype(jnp.int32)                    # (B, nb*bs)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, HKV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dhf), lambda b, h, i, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dhf),
+                         lambda b, h, i, tbl: (tbl[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dhf),
+                         lambda b, h, i, tbl: (tbl[b, i], h, 0, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, i, tbl: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dhf), lambda b, h, i, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, dhf), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, nt=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, HKV, G, dhf), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, qg, kT, vT, mask)
+    return out.reshape(B, HQ, dhf)[..., :dh]

@@ -6,10 +6,15 @@ Two paths share one model/linkage setup:
   engine (default)  continuous-batching ``repro.serve.ServeEngine``: a slot
                     pool served under open-loop (Poisson arrivals) or
                     closed-loop load, reporting tokens/s and p50/p99 latency.
+                    ``--kv paged`` swaps the dense slot rows for the paged
+                    block-table subsystem (demand allocation, CoW prefix
+                    sharing, block watermark reporting).
 
       python -m repro.launch.serve --preset nss_shortcut --load open
       python -m repro.launch.serve --preset ret_byp --load closed \
           --slots 8 --requests 32
+      python -m repro.launch.serve --preset nss_shortcut --kv paged \
+          --block-size 16 --shared-prefix-len 16 --bucket-prompts
 
   sequential        the original one-request-at-a-time loop (``--load seq``,
                     also ``run_server`` for benchmarks): the baseline the
@@ -61,8 +66,13 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                prompt_len: int = 32, gen_len: int = 32, requests: int = 8,
                load: str = "open", rate: float = 25.0,
                concurrency: int = 0, decode_steps: int = 0,
-               smoke: bool = True, scale: float = 1.0, seed: int = 0):
+               smoke: bool = True, scale: float = 1.0, seed: int = 0,
+               kv: str = "slotted", block_size: int = 16,
+               num_blocks: int = 0, bucket_prompts: bool = False,
+               temperature: float = 0.0, top_k: int = 0,
+               eos_id: int = -1, shared_prefix_len: int = 0):
     """Continuous-batching serving run; returns the engine report dict."""
+    from repro.core import SamplingConfig
     from repro.serve import ServeEngine, serve_report, synthetic_requests
 
     if requests < 1:
@@ -72,28 +82,37 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                                    seed=seed, gen_len=gen_len,
                                    decode_steps=decode_steps)
     max_len = prompt_len + gen_len + 8
-    eng = ServeEngine(cfg, params, opts, lk, n_slots=n_slots, max_len=max_len)
+    sampling = SamplingConfig(temperature=temperature, top_k=top_k, seed=seed)
+    eng = ServeEngine(cfg, params, opts, lk, n_slots=n_slots, max_len=max_len,
+                      kv=kv, block_size=block_size,
+                      num_blocks=num_blocks or None,
+                      sampling=sampling, bucket_prompts=bucket_prompts)
 
-    # warmup: compile prefill + decode + slot writer outside the timed region
-    # (one decode program suffices — same compiled shapes as the real run)
-    warm = synthetic_requests(1, prompt_len, eng.tokens_per_program + 1,
-                              cfg.vocab_size, seed=seed + 1)
+    # warmup: compile prefill + decode + admission writers outside the timed
+    # region (one decode program suffices — same compiled shapes as the run).
+    # With a shared prefix, a second warmup request hits the radix index and
+    # compiles the suffix-prefill path at the run's suffix shape too.
+    warm = synthetic_requests(2 if shared_prefix_len else 1, prompt_len,
+                              eng.tokens_per_program + 1, cfg.vocab_size,
+                              seed=seed + 1,
+                              shared_prefix_len=shared_prefix_len)
     eng.run(warm, load="closed")
-    eng.programs_run = 0          # don't let warmup inflate the report
-    eng.tokens_wasted = 0
+    if hasattr(eng.kv, "drop_prefix_cache"):
+        eng.kv.drop_prefix_cache()  # shed warmup residue from the block pool
+    eng.reset_counters()          # don't let warmup inflate the report
 
     reqs = synthetic_requests(requests, prompt_len, gen_len, cfg.vocab_size,
                               seed=seed,
-                              rate=rate if load == "open" else None)
+                              rate=rate if load == "open" else None,
+                              shared_prefix_len=shared_prefix_len,
+                              eos_id=eos_id if eos_id >= 0 else None)
     completions, wall = eng.run(reqs, load=load,
                                 concurrency=concurrency or None)
-    rep = serve_report(completions, wall)
+    rep = serve_report(completions, wall, utilization=eng.utilization())
     rep.update({
         "arch": cfg.name, "preset": preset_name, "load": load,
         "n_slots": n_slots, "prompt_len": prompt_len, "gen_len": gen_len,
         "decode_steps_per_program": eng.tokens_per_program,
-        "programs_run": eng.programs_run,
-        "tokens_wasted": eng.tokens_wasted,
     })
     if load == "open":
         rep["offered_rate_req_s"] = rate
@@ -171,6 +190,27 @@ def main(argv=None) -> int:
                         "--concurrency outstanding; seq: sequential baseline")
     p.add_argument("--slots", type=int, default=4,
                    help="engine cache slots (continuous-batching batch)")
+    p.add_argument("--kv", default="slotted", choices=["slotted", "paged"],
+                   help="KV backend: dense slot rows, or the paged "
+                        "block-table subsystem (demand allocation + CoW "
+                        "prefix sharing)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="paged: tokens per physical KV block")
+    p.add_argument("--num-blocks", type=int, default=0,
+                   help="paged: physical pool size (0 = slots*max_len/bs, "
+                        "the slotted-equivalent footprint)")
+    p.add_argument("--bucket-prompts", action="store_true",
+                   help="pad admitted prompts to power-of-two buckets "
+                        "(bounds the jit prefill cache under mixed lengths)")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="sampling temperature (0 = greedy argmax)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="top-k truncation when sampling (0 = full vocab)")
+    p.add_argument("--eos-id", type=int, default=-1,
+                   help="stop token id (-1 = length-based completion only)")
+    p.add_argument("--shared-prefix-len", type=int, default=0,
+                   help="prepend a common prefix of this many tokens to "
+                        "every prompt (exercises paged CoW prefix sharing)")
     p.add_argument("--rate", type=float, default=25.0,
                    help="open-loop offered load, requests/s")
     p.add_argument("--concurrency", type=int, default=0,
@@ -199,7 +239,13 @@ def main(argv=None) -> int:
                          requests=args.requests, load=args.load,
                          rate=args.rate, concurrency=args.concurrency,
                          decode_steps=args.decode_steps, scale=args.scale,
-                         seed=args.seed)
+                         seed=args.seed, kv=args.kv,
+                         block_size=args.block_size,
+                         num_blocks=args.num_blocks,
+                         bucket_prompts=args.bucket_prompts,
+                         temperature=args.temperature, top_k=args.top_k,
+                         eos_id=args.eos_id,
+                         shared_prefix_len=args.shared_prefix_len)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

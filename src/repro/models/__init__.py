@@ -1,11 +1,11 @@
 from repro.models.layers import ModelOptions
 from repro.models.transformer import (backbone, cache_spec, decode_step,
-                                      decode_step_slots, embed, init_cache,
-                                      init_params, loss_fn, prefill,
-                                      unembed_logits)
+                                      decode_step_paged, decode_step_slots,
+                                      embed, init_cache, init_params, loss_fn,
+                                      prefill, prefill_suffix, unembed_logits)
 
 __all__ = [
     "ModelOptions", "backbone", "cache_spec", "decode_step",
-    "decode_step_slots", "embed", "init_cache", "init_params", "loss_fn",
-    "prefill", "unembed_logits",
+    "decode_step_paged", "decode_step_slots", "embed", "init_cache",
+    "init_params", "loss_fn", "prefill", "prefill_suffix", "unembed_logits",
 ]

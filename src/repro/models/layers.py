@@ -460,6 +460,69 @@ def attention_decode_slots(params: Params, x: jax.Array, cache: Params,
     return y, new_cache
 
 
+def attention_decode_paged(params: Params, x: jax.Array, cache: Params,
+                           tables: jax.Array, cfg: ArchConfig,
+                           opts: ModelOptions, max_len: int
+                           ) -> Tuple[jax.Array, Params]:
+    """One-token decode against a *paged* KV cache (serving, `--kv paged`).
+
+    Instead of one dense (T,) row per slot, each slot owns a chain of
+    fixed-size physical blocks in a shared pool (virtual memory for the KV
+    cache — see ``repro.serve.paging``):
+
+      cache:  {"kp": (P+1, bs, HKV, dh), "vp": (P+1, bs, HKV, dh),
+               "pos": (B,)}
+      tables: (B, nb) int32 — per-slot logical-block -> physical-block map.
+
+    Row P of the pool is the reserved trash block: table entries of empty /
+    finished slots point at it, so their garbage writes never touch a live
+    sequence. Logical position p of slot b lives at physical
+    (tables[b, p // bs], p % bs). The gather path below reassembles each
+    slot's logical view and applies exactly the slotted einsum/softmax with
+    the same (B, max_len) shapes — invalid positions are -inf-masked, so the
+    physical relayout is invisible to the math (the engine's token-identity
+    invariant). The pallas path reads blocks from the pool in place via a
+    scalar-prefetched block table (``repro.kernels.paged_decode``).
+    """
+    B = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)  # S == 1
+    pos = cache["pos"]                                  # (B,)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    bs = cache["kp"].shape[1]
+    nb = tables.shape[1]
+    # write the fresh K/V at (tables[b, pos//bs], pos % bs). Live slots have
+    # the covering block demand-allocated (and CoW-forked if shared) by the
+    # engine before the program; dead slots resolve to the trash block.
+    logical_blk = jnp.clip(pos // bs, 0, nb - 1)
+    blk = jnp.take_along_axis(tables, logical_blk[:, None], axis=1)[:, 0]
+    off = pos % bs
+    kp = cache["kp"].at[blk, off].set(k[:, 0].astype(cache["kp"].dtype))
+    vp = cache["vp"].at[blk, off].set(v[:, 0].astype(cache["vp"].dtype))
+
+    if opts.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(q, kp, vp, tables, pos)
+    else:
+        # gather the logical view: (B, nb, bs, ...) -> (B, max_len, ...).
+        # Same shapes, values and masks as the slotted dense row, so the
+        # einsum/softmax below is bit-identical to attention_decode_slots.
+        kg = kp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        vg = vp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        valid = jnp.arange(max_len, dtype=jnp.int32)[None] <= pos[:, None]
+        qg = q.reshape(B, 1, hkv, hq // hkv, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kg).astype(jnp.float32)
+        s = s / math.sqrt(dh)
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vg).reshape(B, 1, hq, dh)
+
+    y = out.reshape(B, 1, -1) @ params["wo"].astype(x.dtype)
+    new_cache = dict(cache, kp=kp, vp=vp, pos=pos + 1)
+    return y, new_cache
+
+
 def _xattn_cached(params, x, cache, cfg):
     B = x.shape[0]
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim

@@ -264,11 +264,16 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def apply_layer_decode(p: Params, x: jax.Array, cache_l: Params,
                        cfg: ArchConfig, spec: LayerSpec, opts: ModelOptions,
-                       slots: bool = False) -> Tuple[jax.Array, Params]:
+                       slots: bool = False, paged_tables=None,
+                       paged_max_len: int = 0) -> Tuple[jax.Array, Params]:
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, opts)
     if spec.mixer in (ATTN, SWA, XATTN):
-        attn_fn = L.attention_decode_slots if slots else L.attention_decode
-        mix, cache_l = attn_fn(p["mixer"], h, cache_l, cfg, spec, opts)
+        if paged_tables is not None:
+            mix, cache_l = L.attention_decode_paged(
+                p["mixer"], h, cache_l, paged_tables, cfg, opts, paged_max_len)
+        else:
+            attn_fn = L.attention_decode_slots if slots else L.attention_decode
+            mix, cache_l = attn_fn(p["mixer"], h, cache_l, cfg, spec, opts)
     elif spec.mixer == MAMBA:
         mix, cache_l = L.mamba_decode(p["mixer"], h, cache_l, cfg)
         cache_l = dict(cache_l, pos=cache_l["pos"] + 1)
@@ -335,19 +340,86 @@ def decode_step_slots(params: Params, cache, tokens: jax.Array,
     return decode_step(params, cache, tokens, cfg, opts, slots=True)
 
 
+def _check_pageable(cfg: ArchConfig, what: str) -> None:
+    """Paged KV (and shared-prefix prefill) covers attention KV only; the
+    recurrent mixers carry dense per-slot state with no block structure, and
+    the RWKV channel-mix shift depends on the final (padded) position."""
+    for spec in cfg.block_pattern:
+        if spec.mixer != ATTN or spec.mlp == RWKVMIX:
+            raise ValueError(
+                f"{what} supports plain-attention architectures only "
+                f"(got mixer={spec.mixer!r}, mlp={spec.mlp!r}); run this "
+                "arch with the slotted KV backend")
+
+
+def decode_step_paged(params: Params, cache, tokens: jax.Array,
+                      tables: jax.Array, cfg: ArchConfig, opts: ModelOptions,
+                      max_len: int) -> Tuple[jax.Array, Any]:
+    """Paged-KV decode: tokens (B,) int32, tables (B, nb) block map.
+
+    cache per layer group: {"kp": (L, P+1, bs, HKV, dh), "vp": ..., "pos":
+    (L, B)} — the physical block pool plus per-slot positions. The block
+    table is shared by all layers (one virtual address space per slot, L
+    physical pools), so it is threaded beside the cache, not inside it.
+    """
+    _check_pageable(cfg, "decode_step_paged")
+    h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(opts.dtype)
+
+    def block_fn(x, xs):
+        block_params, cache_b = xs
+        new_c = []
+        for spec, bp, cl in zip(cfg.block_pattern, block_params, cache_b):
+            x, cl = apply_layer_decode(bp, x, cl, cfg, spec, opts,
+                                       paged_tables=tables,
+                                       paged_max_len=max_len)
+            new_c.append(cl)
+        return x, tuple(new_c)
+
+    if opts.scan_blocks:
+        h, new_cache = lax.scan(block_fn, h, (params["blocks"], cache))
+    else:
+        outs = []
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            cb = jax.tree.map(lambda a: a[i], cache)
+            h, nc = block_fn(h, (blk, cb))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    logits = unembed_logits(params, h, cfg)[:, 0]
+    return logits, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Prefill: full forward that also fills the cache
 # ---------------------------------------------------------------------------
 
 def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
             opts: ModelOptions, max_len: int,
-            xctx: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
+            xctx: Optional[jax.Array] = None,
+            true_len: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
     """Run the full sequence, return (last-position logits, filled cache).
 
     The cache is produced by re-running each layer's mixer state computation;
     attention layers write their K/V directly (cheap — already computed).
+
+    ``true_len`` (traced scalar) enables *bucketed* prefill: ``tokens`` is a
+    right-padded bucket and only the first ``true_len`` positions are real.
+    Causality makes the padding invisible to the real positions, so the
+    returned logits are taken at ``true_len - 1`` and the cache is fixed up
+    (``pos = true_len``, padded ``slot_pos`` entries invalidated) to be
+    indistinguishable from an unpadded prefill. Full-window attention only:
+    recurrent state (Mamba/RWKV) would be left at the padded end, and an SWA
+    circular buffer shorter than the bucket would rotate *real* positions
+    out in favor of padding.
     """
     B, S = tokens.shape[:2]
+    if true_len is not None:
+        for spec in cfg.block_pattern:
+            if spec.mixer not in (ATTN, XATTN) or spec.mlp == RWKVMIX:
+                raise ValueError(
+                    "bucketed prefill (true_len) needs full-window attention "
+                    f"layers; got mixer={spec.mixer!r}, mlp={spec.mlp!r}")
     h = embed(params, tokens, cfg, opts)
     positions = jnp.arange(S, dtype=jnp.int32)
     cache = init_cache(cfg, B, max_len, opts.dtype)
@@ -371,8 +443,108 @@ def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
             outs.append(nc)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
-    logits = unembed_logits(params, h[:, -1:], cfg)[:, 0]
+    if true_len is None:
+        logits = unembed_logits(params, h[:, -1:], cfg)[:, 0]
+    else:
+        last = lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1)
+        logits = unembed_logits(params, last, cfg)[:, 0]
+        fixed = []
+        for g in new_cache:
+            g = dict(g, pos=jnp.full_like(g["pos"], true_len))
+            if "slot_pos" in g:
+                sp = g["slot_pos"]
+                g["slot_pos"] = jnp.where((sp >= 0) & (sp < true_len), sp, -1)
+            fixed.append(g)
+        new_cache = tuple(fixed)
     return logits, new_cache
+
+
+def prefill_suffix(params: Params, tokens: jax.Array, prefix_kv: Tuple,
+                   prefix_len: jax.Array, cfg: ArchConfig, opts: ModelOptions,
+                   true_len: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Tuple]:
+    """Prefill only the *suffix* of a prompt whose first ``prefix_len``
+    positions' attention K/V are already resident (shared-prefix admission:
+    the paged engine found the prefix in its radix index, so an identical
+    system prompt is prefilled once and only the per-request tail is run).
+
+    tokens:    (B, S) suffix token ids at positions ``prefix_len + i``
+               (right-padded to a bucket when ``true_len`` is given).
+    prefix_kv: tuple per layer group of {"k","v"}: (L, B, Tpre, HKV, dh)
+               gathered from the block pool; entries at ``arange(Tpre) >=
+               prefix_len`` are garbage and are masked out here.
+
+    Returns (logits at suffix position ``(true_len or S) - 1``, per-group
+    {"k","v"} suffix K/V (L, B, S, HKV, dh) for the caller to scatter into
+    its physical blocks). Suffix rows attend to [masked prefix ++ causal
+    suffix] via explicit q/k positions, so each real row computes exactly
+    what a full prefill computes for it.
+    """
+    _check_pageable(cfg, "prefill_suffix")
+    B, S = tokens.shape
+    Tpre = prefix_kv[0]["k"].shape[2]
+    h = embed(params, tokens, cfg, opts)
+    q_pos = prefix_len + jnp.arange(S, dtype=jnp.int32)
+    # the suffix K/V is written *into* the prefix buffer at prefix_len (the
+    # caller guarantees prefix_len + S <= Tpre), so valid entries sit at
+    # index == position exactly as in a full prefill and the causal mask
+    # alone separates real from garbage — same indices, same reductions,
+    # bit-identical rows.
+    k_pos = jnp.arange(Tpre, dtype=jnp.int32)
+
+    def block_fn(x, xs):
+        block_params, pre_b = xs
+        new_kv = []
+        for spec, bp, pkv in zip(cfg.block_pattern, block_params, pre_b):
+            x, kv = _prefill_suffix_layer(bp, x, pkv, cfg, spec, opts,
+                                          q_pos, k_pos)
+            new_kv.append(kv)
+        return x, tuple(new_kv)
+
+    if opts.scan_blocks:
+        h, suffix_kv = lax.scan(block_fn, h, (params["blocks"], prefix_kv))
+    else:
+        outs = []
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            pre = jax.tree.map(lambda a: a[i], prefix_kv)
+            h, kv = block_fn(h, (blk, pre))
+            outs.append(kv)
+        suffix_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    if true_len is None:
+        logits = unembed_logits(params, h[:, -1:], cfg)[:, 0]
+    else:
+        last = lax.dynamic_slice_in_dim(h, true_len - 1, 1, axis=1)
+        logits = unembed_logits(params, last, cfg)[:, 0]
+    return logits, suffix_kv
+
+
+def _prefill_suffix_layer(p, x, pkv, cfg, spec, opts, q_pos, k_pos):
+    """One plain-attention layer of the suffix prefill. Returns (x, {k, v})."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, opts)
+    B, S, _ = x.shape
+    q, k, v = L._qkv(p["mixer"], h, cfg)
+    q = L.rope(q, q_pos, cfg.rope_theta)
+    k = L.rope(k, q_pos, cfg.rope_theta)
+    start = (0, q_pos[0], 0, 0)
+    k_full = lax.dynamic_update_slice(pkv["k"].astype(k.dtype), k, start)
+    v_full = lax.dynamic_update_slice(pkv["v"].astype(v.dtype), v, start)
+    kwargs = dict(causal=True, window=0, q_pos=q_pos, k_pos=k_pos)
+    if opts.attn_impl == "ref":
+        out = L._sdpa_ref(q, k_full, v_full, **kwargs)
+    else:
+        # rectangular q/kv: the blockwise form handles it; the Pallas prefill
+        # kernel assumes square q/kv, so "pallas" also lowers through here
+        out = L._sdpa_chunked(q, k_full, v_full, q_chunk=opts.q_chunk,
+                              kv_chunk=opts.kv_chunk, **kwargs)
+    x = x + out.reshape(B, S, -1) @ p["mixer"]["wo"].astype(x.dtype)
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps, opts)
+    if spec.mlp == MOE:
+        out2, _ = L.moe(p["mlp"], h2, cfg, opts)
+    else:
+        out2 = L.mlp(p["mlp"], h2)
+    return x + out2, {"k": k, "v": v}
 
 
 def _prefill_layer(p, x, cache_l, cfg, spec, opts, positions, xctx):

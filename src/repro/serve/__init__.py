@@ -6,13 +6,16 @@ request-level engine whose decode program is built at any point of the
 linkage spectrum, with ordinary co-processes (admission, metrics) running
 beside it. See docs/serving.md.
 """
-from repro.serve.cache import init_slot_cache, make_slot_writer, slotify
-from repro.serve.engine import ServeEngine, serve_report
+from repro.serve.cache import (KVBackend, SlottedKV, init_slot_cache,
+                               make_slot_writer, slotify)
+from repro.serve.engine import KV_BACKENDS, ServeEngine, serve_report
+from repro.serve.paging import BlockPool, BlockTable, PagedKV, PrefixIndex
 from repro.serve.scheduler import (Completion, Request, SlotScheduler,
                                    SlotState, synthetic_requests)
 
 __all__ = [
-    "Completion", "Request", "ServeEngine", "SlotScheduler", "SlotState",
-    "init_slot_cache", "make_slot_writer", "serve_report", "slotify",
-    "synthetic_requests",
+    "BlockPool", "BlockTable", "Completion", "KVBackend", "KV_BACKENDS",
+    "PagedKV", "PrefixIndex", "Request", "ServeEngine", "SlotScheduler",
+    "SlotState", "SlottedKV", "init_slot_cache", "make_slot_writer",
+    "serve_report", "slotify", "synthetic_requests",
 ]

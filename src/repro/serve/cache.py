@@ -19,14 +19,16 @@ tree (``make_slot_writer``).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Protocol
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.models.transformer import init_cache
+from repro.models.transformer import init_cache, prefill
 
 
 def slotify(cache: Any) -> Any:
@@ -75,3 +77,132 @@ def make_slot_writer():
             dst, src)
 
     return jax.jit(write, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# KV backends: the engine's pluggable device-memory subsystem
+# ---------------------------------------------------------------------------
+
+def make_prefill_fn(cfg: ArchConfig, opts, max_len: int, bucket_fn):
+    """Jitted full-prompt prefill shared by both KV backends (identical
+    program => trivially bit-identical admissions across backends).
+
+    Returns ``prefill_prompt(params, prompt (P,) np.int32) -> (logits,
+    cache)``. With ``bucket_fn`` the prompt is right-padded to its bucket
+    and prefilled with a traced ``true_len`` — one compile per bucket, not
+    per length.
+    """
+    import numpy as np
+
+    if bucket_fn is None:
+        fn = jax.jit(lambda p, t: prefill(p, t, cfg, opts, max_len=max_len))
+
+        def prefill_prompt(params, prompt):
+            return fn(params, jnp.asarray(prompt)[None])
+    else:
+        fn = jax.jit(lambda p, t, n: prefill(p, t, cfg, opts,
+                                             max_len=max_len, true_len=n))
+
+        def prefill_prompt(params, prompt):
+            P = int(prompt.shape[0])
+            padded = np.zeros((bucket_fn(P),), np.int32)
+            padded[:P] = prompt
+            return fn(params, jnp.asarray(padded)[None],
+                      jnp.asarray(P, jnp.int32))
+    return prefill_prompt
+
+
+class KVBackend(Protocol):
+    """What ``ServeEngine`` needs from a KV-memory subsystem.
+
+    Two implementations: ``SlottedKV`` (dense: one ``max_len`` row per slot,
+    capacity bounded by worst-case length) and ``repro.serve.paging.PagedKV``
+    (virtual memory: demand-allocated blocks, CoW prefix sharing, capacity
+    bounded by tokens actually resident). Both produce bit-identical token
+    streams; only admission capacity and memory accounting differ.
+    """
+    kind: str
+
+    def admit(self, slot: int, prompt: np.ndarray, key: jax.Array
+              ) -> jax.Array:
+        """Prefill ``prompt`` into ``slot``; seed its sampling chain from
+        ``key``. Returns the first generated token, shape (1,)."""
+        ...
+
+    def decode(self, next_tokens: jax.Array) -> jax.Array:
+        """Run one decode program over all slots; returns tokens (B, K)."""
+        ...
+
+    def reserve(self, slot: int, k: int) -> bool:
+        """Guarantee ``slot`` can absorb ``k`` more tokens (demand-allocate /
+        CoW-fork blocks). False = out of memory: the engine preempts."""
+        ...
+
+    def release(self, slot: int) -> None:
+        """Free the slot's memory (paged: decref its block chain)."""
+        ...
+
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        """Could this request ever run alone? (Hard reject when False.)"""
+        ...
+
+    def has_room(self, prompt_len: int) -> bool:
+        """Admission gate: is there memory for this prompt *now*?"""
+        ...
+
+    def utilization(self) -> dict:
+        """Backend-specific utilization counters for ``serve_report``."""
+        ...
+
+    def reset_counters(self) -> None:
+        """Zero utilization counters (after a compile-warmup run)."""
+        ...
+
+
+class SlottedKV:
+    """Dense slot-row backend (the PR-1 layout) behind the KVBackend API."""
+
+    kind = "slotted"
+
+    def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
+                 max_len: int, sampling=None, bucket_fn=None):
+        from repro.core.step import (build_slot_decode_step, make_sampler)
+        self.cfg, self.params, self.opts = cfg, params, opts
+        self.n_slots, self.max_len = n_slots, max_len
+        self.bucket_fn = bucket_fn
+        self._dec = build_slot_decode_step(cfg, opts, linkage, sampling)
+        self._write = make_slot_writer()
+        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn)
+        self._sample = jax.jit(make_sampler(sampling))
+        self.cache = init_slot_cache(cfg, n_slots, max_len, opts.dtype)
+        self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
+
+    def admit(self, slot: int, prompt: np.ndarray, key: jax.Array):
+        logits, c1 = self._prefill(self.params, prompt)
+        self.cache = self._write(self.cache, slotify(c1), slot)
+        first, krow = self._sample(logits, key[None])
+        self.keys = self.keys.at[slot].set(krow[0])
+        return first
+
+    def decode(self, next_tokens: jax.Array) -> jax.Array:
+        self.cache, toks, self.keys = self._dec(self.params, self.cache,
+                                                next_tokens, self.keys)
+        return toks
+
+    def reserve(self, slot: int, k: int) -> bool:
+        return True                     # a slot row always holds max_len
+
+    def release(self, slot: int) -> None:
+        pass                            # the row is overwritten on admission
+
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        return prompt_len + max_new <= self.max_len
+
+    def has_room(self, prompt_len: int) -> bool:
+        return True                     # a free slot is the only resource
+
+    def utilization(self) -> dict:
+        return {}
+
+    def reset_counters(self) -> None:
+        pass

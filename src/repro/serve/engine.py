@@ -1,10 +1,9 @@
 """Continuous-batching serving engine over the UKL linkage spectrum.
 
-One persistent slot-layout cache lives on device; between decode programs the
-engine evicts finished sequences and prefills newly admitted prompts into the
-freed slots, so the device never idles while work exists. The decode program
-is built by ``repro.core.build_slot_decode_step`` at whatever linkage level
-the preset names:
+One persistent KV store lives on device; between decode programs the engine
+evicts finished sequences and prefills newly admitted prompts into the freed
+slots, so the device never idles while work exists. The decode program is
+built by ``repro.core`` at whatever linkage level the preset names:
 
   L1/L2      one token per program for the whole slot set; L2 donates the
              cache (no realloc at the boundary).
@@ -14,13 +13,25 @@ the preset names:
              synchronizes only when a request *finishes* (completion is
              length-based, so the host can detect it without reading token
              values). Timestamps are dispatch-time, matching RET semantics.
-  shortcut   specialized kernels, including the slot-aware decode-attention
-             path in ``repro.kernels.slot_decode``.
+  shortcut   specialized kernels, including the slot-aware and paged
+             decode-attention paths in ``repro.kernels``.
+
+Device memory is owned by a pluggable ``KVBackend`` (``--kv``):
+
+  slotted    one dense ``max_len`` row per slot — admission capacity is
+             bounded by worst-case length (``repro.serve.cache.SlottedKV``).
+  paged      virtual memory for the cache: demand-allocated fixed-size
+             blocks, per-slot block tables, copy-on-write prefix sharing and
+             recompute-preemption under pool pressure
+             (``repro.serve.paging.PagedKV``). Admission is gated on free
+             *blocks*, so capacity follows tokens actually resident.
 
 The engine is deterministic for a fixed request list: admission is FIFO,
-slots are assigned lowest-index-first, and eviction happens only at program
-boundaries — so its token output is bit-identical to running each request
-alone through prefill + decode (asserted in tests/test_serve.py).
+slots are assigned lowest-index-first, eviction happens only at program
+boundaries, and sampling keys are derived from (seed, request id) — so its
+token output is bit-identical to running each request alone through prefill
++ decode, whichever backend serves it (asserted in tests/test_serve.py and
+tests/test_paging.py).
 """
 from __future__ import annotations
 
@@ -30,23 +41,26 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.coprocess import AdmissionWorker
 from repro.core.linkage import L3_NSS, LinkageConfig
-from repro.core.step import build_slot_decode_step
-from repro.models import ModelOptions, prefill
-from repro.serve.cache import init_slot_cache, make_slot_writer, slotify
+from repro.core.step import SamplingConfig
+from repro.serve.cache import KVBackend, SlottedKV
 from repro.serve.scheduler import Completion, Request, SlotScheduler
+
+KV_BACKENDS = ("slotted", "paged")
 
 
 class ServeEngine:
     """Request-level continuous batching over a fixed slot pool."""
 
-    def __init__(self, cfg: ArchConfig, params, opts: ModelOptions,
-                 linkage: LinkageConfig, n_slots: int, max_len: int):
+    def __init__(self, cfg: ArchConfig, params, opts, linkage: LinkageConfig,
+                 n_slots: int, max_len: int, *, kv: str = "slotted",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 sampling: Optional[SamplingConfig] = None,
+                 bucket_prompts: bool = False):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -58,19 +72,32 @@ class ServeEngine:
         self.linkage = linkage
         self.n_slots = n_slots
         self.max_len = max_len
+        self.sampling = sampling or SamplingConfig()
         self.tokens_per_program = (linkage.decode_steps
                                    if linkage.level == L3_NSS else 1)
-        self._dec = build_slot_decode_step(cfg, opts, linkage)
-        self._write = make_slot_writer()
-        # jit caches per input shape: each distinct prompt length pays one
-        # compile (documented cost; synthetic load uses fixed lengths)
-        self._prefill = jax.jit(
-            lambda p, t: prefill(p, t, cfg, opts, max_len=max_len))
-        self.cache = init_slot_cache(cfg, n_slots, max_len, opts.dtype)
+        bucket_fn = self._bucket if bucket_prompts else None
+        if kv == "slotted":
+            self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
+                                           n_slots, max_len, self.sampling,
+                                           bucket_fn)
+        elif kv == "paged":
+            from repro.serve.paging import PagedKV
+            self.kv = PagedKV(cfg, params, opts, linkage, n_slots, max_len,
+                              self.sampling, bucket_fn,
+                              block_size=block_size, num_blocks=num_blocks)
+        else:
+            raise ValueError(f"unknown kv backend {kv!r}; known: "
+                             f"{KV_BACKENDS}")
         self._next = jnp.zeros((n_slots,), jnp.int32)
         self.sched = SlotScheduler(n_slots)
         self.programs_run = 0
-        self.tokens_wasted = 0       # decoded past a request's budget (L3)
+        self.tokens_wasted = 0       # decoded past a request's budget/EOS
+        self.preemptions = 0         # paged: recompute-preempted admissions
+
+    def _bucket(self, n: int) -> int:
+        """Power-of-two prompt bucket (clipped to max_len): bounds the jit
+        prefill cache under mixed-length load."""
+        return min(1 << max(n - 1, 0).bit_length(), self.max_len)
 
     # -- admission ----------------------------------------------------------
 
@@ -81,33 +108,62 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt+budget exceeds max_len "
                 f"{self.max_len}")
-        logits, c1 = self._prefill(self.params, jnp.asarray(req.prompt)[None])
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
-        self.cache = self._write(self.cache, slotify(c1), slot)
+        if not self.kv.fits(int(req.prompt.shape[0]), req.max_new_tokens):
+            self.sched.release(slot)
+            raise ValueError(
+                f"request {req.rid}: prompt+budget can never fit the "
+                f"{self.kv.kind} KV store (pool too small)")
+        first = self.kv.admit(slot, np.asarray(req.prompt, np.int32),
+                              self.sampling.request_key(req.rid))
         self._next = self._next.at[slot].set(first[0])
         st = self.sched.active[slot]
-        # the prefill argmax is generated token #1 of the budget
+        # the prefill sample is generated token #1 of the budget
         if self.linkage.ret_async:
             st.chunks.append(first)                 # stays a device future
         else:
-            st.chunks.append(np.asarray(first))     # "iret": sync now
+            f = np.asarray(first)                   # "iret": sync now
+            st.chunks.append(f)
+            if req.eos_id is not None and int(f[0]) == req.eos_id:
+                st.eos_seen = True
         st.first_token_s = now_fn()
         st.produced = 1
-        if st.remaining == 0:                       # max_new_tokens == 1
+        if st.remaining == 0 or st.eos_seen:
             return [self._finalize(slot, now_fn)]
         return []
 
     # -- decode -------------------------------------------------------------
 
+    def _reserve_all(self) -> None:
+        """Demand-allocate the blocks this program will write, preempting
+        the youngest slot (recompute on re-admission) when the pool is dry.
+        Oldest-first order keeps the head of the line progressing."""
+        K = self.tokens_per_program
+        while True:
+            order = sorted(self.sched.active,
+                           key=lambda s: self.sched.active[s].admit_seq)
+            if all(self.kv.reserve(slot, K) for slot in order):
+                return
+            if len(self.sched.active) == 1:
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single active request; "
+                    "fits() should have rejected it")
+            self._preempt(self.sched.youngest())
+
+    def _preempt(self, slot: int) -> None:
+        st = self.sched.release(slot)
+        self.kv.release(slot)
+        self.sched.requeue_front(st.req)
+        self.preemptions += 1
+
     def step(self, now_fn: Callable[[], float]) -> List[Completion]:
         """Run one decode program; harvest tokens; evict finished slots."""
-        self.cache, toks = self._dec(self.params, self.cache, self._next)
+        self._reserve_all()
+        toks = self.kv.decode(self._next)
         self._next = toks[:, -1]
         self.programs_run += 1
         toks_host = None
         if not self.linkage.ret_async:
             toks_host = np.asarray(toks)            # "iret": sync every program
-        now = now_fn()
         finished = []
         for slot in sorted(self.sched.active):
             st = self.sched.active[slot]
@@ -119,15 +175,24 @@ class ServeEngine:
                      else toks_host[slot, :take])
             st.chunks.append(chunk)
             st.produced += take
-            if st.produced >= st.req.max_new_tokens:
+            if (toks_host is not None and st.req.eos_id is not None
+                    and st.req.eos_id in chunk):
+                st.eos_seen = True                  # stop at the sync point
+            if st.produced >= st.req.max_new_tokens or st.eos_seen:
                 finished.append(self._finalize(slot, now_fn))
         return finished
 
     def _finalize(self, slot: int,
                   now_fn: Callable[[], float]) -> Completion:
         st = self.sched.release(slot)
+        self.kv.release(slot)                       # paged: free blocks now
         # RET mode synchronizes here, once per completed request
         tokens = np.concatenate([np.asarray(c) for c in st.chunks])
+        if st.req.eos_id is not None:
+            hits = np.nonzero(tokens == st.req.eos_id)[0]
+            if hits.size:
+                self.tokens_wasted += len(tokens) - (int(hits[0]) + 1)
+                tokens = tokens[:int(hits[0]) + 1]
         done = now_fn()
         return Completion(
             rid=st.req.rid, prompt_len=int(st.req.prompt.shape[0]),
@@ -139,6 +204,9 @@ class ServeEngine:
     def _admit_and_step(self, now_fn) -> List[Completion]:
         finished = []
         while self.sched.can_admit():
+            head = self.sched.peek()
+            if not self.kv.has_room(int(head.prompt.shape[0])):
+                break                # FIFO: wait for blocks, don't skip ahead
             finished += self._admit(now_fn)
         if self.sched.active:
             finished += self.step(now_fn)
@@ -190,18 +258,39 @@ class ServeEngine:
             raise ValueError(f"unknown load mode {load!r}")
         return completions, rel()
 
+    # -- reporting ----------------------------------------------------------
+
+    def utilization(self) -> dict:
+        """Engine + backend utilization counters (merged into serve_report)."""
+        u = {
+            "kv_backend": self.kv.kind,
+            "programs_run": self.programs_run,
+            "tokens_wasted": self.tokens_wasted,
+            "preemptions": self.preemptions,
+        }
+        u.update(self.kv.utilization())
+        return u
+
+    def reset_counters(self) -> None:
+        """Zero the utilization counters (after a compile-warmup run)."""
+        self.programs_run = 0
+        self.tokens_wasted = 0
+        self.preemptions = 0
+        self.kv.reset_counters()
+
 
 # ---------------------------------------------------------------------------
 # Reporting
 # ---------------------------------------------------------------------------
 
-def serve_report(completions: List[Completion], wall_s: float) -> dict:
+def serve_report(completions: List[Completion], wall_s: float,
+                 utilization: Optional[dict] = None) -> dict:
     if not completions:
         raise ValueError("serve_report needs at least one completion")
     lats = np.array([c.latency_s for c in completions])
     ttfts = np.array([c.ttft_s for c in completions])
     total_tokens = int(sum(len(c.tokens) for c in completions))
-    return {
+    rep = {
         "requests": len(completions),
         "wall_s": wall_s,
         "total_tokens": total_tokens,
@@ -213,3 +302,6 @@ def serve_report(completions: List[Completion], wall_s: float) -> dict:
         "p50_ttft_s": float(np.percentile(ttfts, 50)),
         "p99_ttft_s": float(np.percentile(ttfts, 99)),
     }
+    if utilization:
+        rep.update(utilization)
+    return rep

@@ -1,0 +1,511 @@
+"""Paged KV memory: virtual memory for the serving engine's cache.
+
+UKL's linked application keeps using the kernel's memory-management
+subsystem — demand paging, pinned pools, shared mappings — and this module is
+that subsystem for the KV cache. The dense ``SlottedKV`` backend reserves a
+``max_len`` row per slot, so admission capacity is bounded by *worst-case*
+sequence length; here capacity is bounded by tokens actually resident:
+
+  BlockPool     ref-counted allocator over a fixed pool of physical KV
+                blocks (``block_size`` token positions each). Row ``P`` of
+                the device pool is the reserved *trash block* — the write
+                target of empty/finished slots, so their garbage never
+                touches a live sequence.
+  BlockTable    per-slot chain mapping logical block index -> physical block
+                (the slot's "page table"); mirrored on device as one
+                (n_slots, nb) int32 array consumed by the decode program.
+  PrefixIndex   radix tree over *full* blocks of prompt tokens: identical
+                prompt prefixes (system prompts) resolve to the same
+                physical blocks, so they are prefilled once and shared
+                copy-on-write afterwards. Index-only blocks are evicted LRU
+                under pool pressure.
+  PagedKV       the ``KVBackend`` implementation tying these to the device
+                pool: demand allocation at decode-time block boundaries,
+                CoW forks before any write to a shared block, and
+                recompute-preemption support when the pool runs dry.
+
+The subsystem is invisible to the application: token streams are
+bit-identical to the slotted backend (and to sequential decode) — the
+UKL-style invariant that specialization must not change app-visible
+behavior. Sharing is capped at ``prompt_len - 1`` tokens so every request
+computes at least its final prompt position (that position's logits seed
+generation); a full-prefix hit therefore prefills one token instead of P.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import prefill_suffix
+from repro.models.transformer import _check_pageable
+from repro.serve.cache import make_prefill_fn
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator / page tables / prefix index
+# ---------------------------------------------------------------------------
+
+class BlockPool:
+    """Ref-counted allocator over ``num_blocks`` physical KV blocks.
+
+    Deterministic: free blocks are handed out lowest-id-first, so a fixed
+    request schedule replays the exact same physical layout. Tracks the
+    resident-block high-watermark (the paged analogue of peak RSS).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("BlockPool needs num_blocks, block_size >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks))
+        heapq.heapify(self._free)
+        self.refs = np.zeros(num_blocks, np.int32)
+        self.hwm = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_resident(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Lowest free block with refcount 1, or None when exhausted."""
+        if not self._free:
+            return None
+        blk = heapq.heappop(self._free)
+        self.refs[blk] = 1
+        self.hwm = max(self.hwm, self.n_resident)
+        return blk
+
+    def retain(self, blk: int) -> None:
+        if self.refs[blk] <= 0:
+            raise ValueError(f"retain of unallocated block {blk}")
+        self.refs[blk] += 1
+
+    def free(self, blk: int) -> bool:
+        """Drop one reference; returns True when the block went physically
+        free. Freeing an unallocated block is a double-free: error."""
+        if self.refs[blk] <= 0:
+            raise ValueError(f"double free of block {blk}")
+        self.refs[blk] -= 1
+        if self.refs[blk] == 0:
+            heapq.heappush(self._free, blk)
+            return True
+        return False
+
+
+class BlockTable:
+    """One slot's logical-block -> physical-block chain."""
+
+    def __init__(self, blocks: Optional[List[int]] = None):
+        self.blocks: List[int] = list(blocks or [])
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    def __getitem__(self, i: int) -> int:
+        return self.blocks[i]
+
+    def append(self, blk: int) -> None:
+        self.blocks.append(blk)
+
+    def replace(self, i: int, blk: int) -> None:
+        self.blocks[i] = blk
+
+
+class _Node:
+    __slots__ = ("key", "block", "children", "parent", "tick")
+
+    def __init__(self, key, block, parent):
+        self.key = key                  # tuple of block_size token ids
+        self.block = block              # physical block id
+        self.children: Dict[tuple, "_Node"] = {}
+        self.parent = parent
+        self.tick = 0
+
+
+class PrefixIndex:
+    """Radix tree over full prompt blocks -> physical blocks.
+
+    Each node covers exactly ``block_size`` tokens, keyed by their values,
+    so a lookup is one dict probe per block. The index holds its own
+    reference on every block it names; blocks whose only reference is the
+    index are evictable (LRU, leaves first — evicting a leaf may expose its
+    parent).
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.root = _Node((), -1, None)
+        self._by_block: Dict[int, _Node] = {}
+        self._tick = 0
+
+    def __len__(self) -> int:
+        return len(self._by_block)
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    def _keys(self, tokens: np.ndarray):
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            yield tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+
+    def match(self, tokens: np.ndarray) -> List[int]:
+        """Longest chain of full blocks whose token content prefixes
+        ``tokens``; touched for LRU."""
+        node, out = self.root, []
+        for key in self._keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            self._touch(child)
+            out.append(child.block)
+            node = child
+        return out
+
+    def insert(self, tokens: np.ndarray, blocks: List[int], n_full: int,
+               pool: BlockPool) -> None:
+        """Register the first ``n_full`` full blocks of ``tokens`` (their
+        KV already written to ``blocks``). Existing nodes are kept — the
+        caller matched them first, so a fresh node always carries a fresh
+        block. The index retains each block it adopts."""
+        node = self.root
+        for i, key in enumerate(self._keys(tokens)):
+            if i >= n_full:
+                break
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, blocks[i], node)
+                node.children[key] = child
+                self._by_block[blocks[i]] = child
+                pool.retain(blocks[i])
+            self._touch(child)
+            node = child
+
+    def n_evictable(self, pool: BlockPool) -> int:
+        """Blocks freeable by cascading leaf eviction: nodes whose whole
+        subtree is index-exclusive (refcount 1)."""
+        def walk(node: _Node) -> Tuple[int, bool]:
+            count, all_ev = 0, True
+            for c in node.children.values():
+                n, ev = walk(c)
+                count += n
+                all_ev &= ev
+            mine = all_ev and pool.refs[node.block] == 1
+            return count + (1 if mine else 0), mine
+        return sum(walk(c)[0] for c in self.root.children.values())
+
+    def evict(self, pool: BlockPool, need: int) -> int:
+        """Free up to ``need`` blocks, least-recently-touched leaves first
+        (evicting a leaf may expose its parent — the candidate heap grows
+        inward instead of rescanning the tree per block). Returns how many
+        were physically freed."""
+        cands = [(n.tick, n.block) for n in self._by_block.values()
+                 if not n.children and pool.refs[n.block] == 1]
+        heapq.heapify(cands)
+        freed = 0
+        while freed < need and cands:
+            tick, blk = heapq.heappop(cands)
+            node = self._by_block.get(blk)
+            if (node is None or node.children or node.tick != tick
+                    or pool.refs[blk] != 1):
+                continue                       # stale heap entry
+            parent = node.parent
+            del parent.children[node.key]
+            del self._by_block[blk]
+            pool.free(blk)
+            freed += 1
+            if (parent is not self.root and not parent.children
+                    and pool.refs[parent.block] == 1):
+                heapq.heappush(cands, (parent.tick, parent.block))
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# Device pool + jitted page operations
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
+                     n_slots: int, dtype=jnp.bfloat16):
+    """Physical pools per layer group: {"kp","vp"}: (L, P+1, bs, HKV, dh)
+    (row P = trash block), plus per-slot positions (L, B)."""
+    out = []
+    for _ in cfg.block_pattern:
+        shape = (cfg.num_blocks, num_blocks + 1, block_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+        out.append({
+            "kp": jnp.zeros(shape, dtype),
+            "vp": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((cfg.num_blocks, n_slots), jnp.int32),
+        })
+    return tuple(out)
+
+
+def _make_scatter():
+    """Jitted ``(cache, kvs, blks, offs, slot, new_pos) -> cache``: write a
+    prefilled K/V run into physical (block, offset) destinations and set the
+    slot's position. Padding rows target the trash block. Donated: the pool
+    is updated in place, no reallocation per admission."""
+
+    def scatter(cache, kvs, blks, offs, slot, new_pos):
+        out = []
+        for g, kv in zip(cache, kvs):
+            kp = g["kp"].at[:, blks, offs].set(
+                kv["k"][:, 0].astype(g["kp"].dtype))
+            vp = g["vp"].at[:, blks, offs].set(
+                kv["v"][:, 0].astype(g["vp"].dtype))
+            pos = g["pos"].at[:, slot].set(new_pos)
+            out.append(dict(g, kp=kp, vp=vp, pos=pos))
+        return tuple(out)
+
+    return jax.jit(scatter, donate_argnums=(0,))
+
+
+def _make_gather(max_len: int):
+    """Jitted ``(cache, table_row (nb,)) -> tuple of {"k","v"}``: assemble
+    one slot's logical prefix view (L, 1, max_len, HKV, dh) from the pool —
+    the input the shared-prefix suffix prefill attends over."""
+
+    def gather(cache, row):
+        out = []
+        for g in cache:
+            def view(p):
+                v = p[:, row]                        # (L, nb, bs, HKV, dh)
+                L_, nb_, bs_ = v.shape[:3]
+                v = v.reshape(L_, nb_ * bs_, *v.shape[3:])[:, :max_len]
+                return v[:, None]                    # (L, 1, max_len, ...)
+            out.append({"k": view(g["kp"]), "v": view(g["vp"])})
+        return tuple(out)
+
+    return jax.jit(gather)
+
+
+def _make_copy_block():
+    """Jitted ``(cache, src, dst) -> cache``: device-side block copy — the
+    copy half of copy-on-write. Donated."""
+
+    def copy(cache, src, dst):
+        return tuple(dict(g, kp=g["kp"].at[:, dst].set(g["kp"][:, src]),
+                          vp=g["vp"].at[:, dst].set(g["vp"][:, src]))
+                     for g in cache)
+
+    return jax.jit(copy, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# The KV backend
+# ---------------------------------------------------------------------------
+
+class PagedKV:
+    """Block-table KV backend: the engine's ``--kv paged`` subsystem."""
+
+    kind = "paged"
+
+    def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
+                 max_len: int, sampling=None, bucket_fn=None,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        from repro.core.linkage import L3_NSS
+        from repro.core.step import build_paged_decode_step, make_sampler
+        _check_pageable(cfg, "PagedKV")
+        self.cfg, self.params, self.opts = cfg, params, opts
+        self.n_slots, self.max_len = n_slots, max_len
+        self.bs = block_size
+        self.nb = -(-max_len // block_size)          # logical blocks per slot
+        if num_blocks is None:
+            # slotted-equivalent footprint, +1 so a lone worst-case request
+            # always fits() (a CoW fork transiently holds old + new block)
+            num_blocks = n_slots * self.nb + 1
+        self.trash = num_blocks                      # reserved pool row
+        self.K = linkage.decode_steps if linkage.level == L3_NSS else 1
+        self.bucket_fn = bucket_fn
+
+        self.pool = BlockPool(num_blocks, block_size)
+        self.index = PrefixIndex(block_size)
+        self.chains: Dict[int, BlockTable] = {}
+        self.tables_host = np.full((n_slots, self.nb), self.trash, np.int32)
+        self.pos_host = np.zeros(n_slots, np.int64)
+        self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
+        self.cache = init_paged_cache(cfg, num_blocks, block_size, n_slots,
+                                      opts.dtype)
+        self.cow_forks = 0
+        self.prefix_shared_tokens = 0
+
+        self._dec = build_paged_decode_step(cfg, opts, linkage, max_len,
+                                            sampling)
+        self._sample = jax.jit(make_sampler(sampling))
+        self._scatter = _make_scatter()
+        self._gather = _make_gather(max_len)
+        self._copy = _make_copy_block()
+        # full-prompt prefill (the no-sharing path) — the same program as
+        # the slotted backend's, so non-shared admissions are trivially
+        # bit-identical across backends
+        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn)
+        self._suffix = jax.jit(
+            lambda p, t, pre, plen, n: prefill_suffix(p, t, pre, plen, cfg,
+                                                      opts, true_len=n))
+
+    # -- allocation ---------------------------------------------------------
+
+    def _alloc(self) -> Optional[int]:
+        blk = self.pool.alloc()
+        if blk is None and self.index.evict(self.pool, 1):
+            blk = self.pool.alloc()
+        return blk
+
+    def _cow(self, slot: int, chain: BlockTable, bi: int) -> bool:
+        """Fork chain[bi] if shared: allocate, device-copy, swap, decref."""
+        old = chain[bi]
+        if self.pool.refs[old] <= 1:
+            return True
+        new = self._alloc()
+        if new is None:
+            return False
+        self.cache = self._copy(self.cache, jnp.asarray(old, jnp.int32),
+                                jnp.asarray(new, jnp.int32))
+        self.pool.free(old)
+        chain.replace(bi, new)
+        self.tables_host[slot, bi] = new
+        self.cow_forks += 1
+        return True
+
+    # -- KVBackend ----------------------------------------------------------
+
+    def admit(self, slot: int, prompt: np.ndarray, key: jax.Array):
+        P = int(prompt.shape[0])
+        n_prompt_blocks = -(-P // self.bs)
+        matched = self.index.match(prompt)
+        shared = min(len(matched) * self.bs, P - 1)
+        use = -(-shared // self.bs)
+        chain = BlockTable()
+        for b in matched[:use]:
+            self.pool.retain(b)
+            chain.append(b)
+        for _ in range(use, n_prompt_blocks):
+            b = self._alloc()
+            if b is None:
+                raise RuntimeError("paged admit ran out of KV blocks "
+                                   "(has_room gate should prevent this)")
+            chain.append(b)
+        self.tables_host[slot, :] = self.trash
+        self.tables_host[slot, :len(chain)] = chain.blocks
+        if shared % self.bs:
+            # a full-prefix hit was clipped to P-1: the final prompt token
+            # lands inside the last shared block — fork it first
+            if not self._cow(slot, chain, shared // self.bs):
+                raise RuntimeError("paged admit ran out of KV blocks on "
+                                   "CoW fork")
+
+        if shared == 0:
+            Sb = P if self.bucket_fn is None else self.bucket_fn(P)
+            logits, c1 = self._prefill(self.params, prompt)
+            kvs = tuple({"k": g["k"][:, :, :Sb], "v": g["v"][:, :, :Sb]}
+                        for g in c1)
+            logical = np.arange(Sb)
+        else:
+            suf = prompt[shared:]
+            Ls = P - shared
+            Sb = Ls if self.bucket_fn is None else min(self.bucket_fn(Ls),
+                                                       self.max_len - shared)
+            padded = np.zeros((Sb,), np.int32)
+            padded[:Ls] = suf
+            pre = self._gather(self.cache,
+                               jnp.asarray(self.tables_host[slot]))
+            logits, kvs = self._suffix(self.params, jnp.asarray(padded)[None],
+                                       pre, jnp.asarray(shared, jnp.int32),
+                                       jnp.asarray(Ls, jnp.int32))
+            logical = shared + np.arange(Sb)
+            self.prefix_shared_tokens += shared
+
+        blks = np.where(logical < P,
+                        np.array([chain[p // self.bs] if p < P else 0
+                                  for p in logical], np.int32),
+                        self.trash).astype(np.int32)
+        offs = (logical % self.bs).astype(np.int32)
+        self.cache = self._scatter(self.cache, kvs, jnp.asarray(blks),
+                                   jnp.asarray(offs),
+                                   jnp.asarray(slot, jnp.int32),
+                                   jnp.asarray(P, jnp.int32))
+        self.index.insert(prompt, chain.blocks, P // self.bs, self.pool)
+        self.chains[slot] = chain
+        self.pos_host[slot] = P
+        first, krow = self._sample(logits, key[None])
+        self.keys = self.keys.at[slot].set(krow[0])
+        return first
+
+    def decode(self, next_tokens: jax.Array) -> jax.Array:
+        tables = jnp.asarray(self.tables_host)
+        self.cache, toks, self.keys = self._dec(self.params, self.cache,
+                                                next_tokens, self.keys,
+                                                tables)
+        self.pos_host += self.K
+        return toks
+
+    def reserve(self, slot: int, k: int) -> bool:
+        """Demand-allocate (and CoW-fork) the blocks the next ``k`` decode
+        writes will touch. False = pool dry: the engine preempts a slot."""
+        chain = self.chains[slot]
+        pos = int(self.pos_host[slot])
+        last = min(pos + k - 1, self.nb * self.bs - 1)
+        b0, b1 = pos // self.bs, last // self.bs
+        while len(chain) <= b1:
+            b = self._alloc()
+            if b is None:
+                return False
+            chain.append(b)
+            self.tables_host[slot, len(chain) - 1] = b
+        for bi in range(b0, min(b1, len(chain) - 1) + 1):
+            if not self._cow(slot, chain, bi):
+                return False
+        return True
+
+    def release(self, slot: int) -> None:
+        for b in self.chains.pop(slot, BlockTable()).blocks:
+            self.pool.free(b)
+        self.tables_host[slot, :] = self.trash
+        self.pos_host[slot] = 0
+
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        worst_pos = prompt_len + -(-max_new // self.K) * self.K
+        need = min(self.nb, -(-worst_pos // self.bs)) + 1
+        return need <= self.pool.num_blocks
+
+    def has_room(self, prompt_len: int) -> bool:
+        # prompt + CoW fork + first decode block, capped at the pool size so
+        # a request that fits() can always be admitted on an idle pool
+        need = min(-(-prompt_len // self.bs) + 2, self.pool.num_blocks)
+        if self.pool.n_free >= need:
+            return True                       # skip the index walk
+        return need <= self.pool.n_free + self.index.n_evictable(self.pool)
+
+    def utilization(self) -> dict:
+        return {
+            "kv_blocks_total": self.pool.num_blocks,
+            "kv_block_size": self.bs,
+            "kv_blocks_resident": self.pool.n_resident,
+            "kv_blocks_hwm": self.pool.hwm,
+            "kv_cow_forks": self.cow_forks,
+            "kv_prefix_shared_tokens": self.prefix_shared_tokens,
+        }
+
+    def reset_counters(self) -> None:
+        self.cow_forks = 0
+        self.prefix_shared_tokens = 0
+        self.pool.hwm = self.pool.n_resident
+
+    def drop_prefix_cache(self) -> int:
+        """Evict every index-only block (e.g. to shed warmup residue before
+        a timed run). Returns how many blocks were freed."""
+        freed = self.index.evict(self.pool, self.pool.num_blocks)
+        self.pool.hwm = self.pool.n_resident
+        return freed

@@ -10,18 +10,25 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: a prompt and a generation budget."""
+    """One serving request: a prompt and a generation budget.
+
+    ``eos_id``: optional stop token — generation finalizes early when it
+    appears at a host sync point (every program in iret mode; at request
+    completion under RET, where only the output is trimmed — see
+    docs/serving.md for the RET caveat).
+    """
     rid: int
     prompt: np.ndarray               # (P,) int32 token ids
     max_new_tokens: int
     arrival_s: float = 0.0           # offset from run start (open-loop load)
+    eos_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -29,7 +36,10 @@ class SlotState:
     """Host-side bookkeeping for one occupied cache slot."""
     req: Request
     admit_s: float
+    admit_seq: int = 0               # monotonic admission order (preemption
+                                     # evicts the youngest = max admit_seq)
     produced: int = 0                # generated tokens so far (incl. prefill's)
+    eos_seen: bool = False           # EOS observed at a host sync point
     first_token_s: Optional[float] = None
     chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
 
@@ -67,6 +77,7 @@ class SlotScheduler:
         heapq.heapify(self._free)
         self._queue: Deque[Request] = deque()
         self.active: Dict[int, SlotState] = {}
+        self._admit_seq = 0
 
     @property
     def n_free(self) -> int:
@@ -77,7 +88,20 @@ class SlotScheduler:
         return len(self._queue)
 
     def enqueue(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 (the "
+                "prefill itself yields the first generated token)")
         self._queue.append(req)
+
+    def requeue_front(self, req: Request) -> None:
+        """Put a preempted request back at the head of the queue (it keeps
+        its original arrival; re-admission replays its stream exactly)."""
+        self._queue.appendleft(req)
+
+    def peek(self) -> Optional[Request]:
+        """The request the next admit would take, without taking it."""
+        return self._queue[0] if self._queue else None
 
     def can_admit(self) -> bool:
         return bool(self._queue) and bool(self._free)
@@ -86,13 +110,19 @@ class SlotScheduler:
         """Pop the oldest queued request into the lowest free slot."""
         req = self._queue.popleft()
         slot = heapq.heappop(self._free)
-        self.active[slot] = SlotState(req=req, admit_s=now)
+        self._admit_seq += 1
+        self.active[slot] = SlotState(req=req, admit_s=now,
+                                      admit_seq=self._admit_seq)
         return slot, req
 
     def release(self, slot: int) -> SlotState:
         st = self.active.pop(slot)
         heapq.heappush(self._free, slot)
         return st
+
+    def youngest(self) -> int:
+        """The most recently admitted active slot (the preemption victim)."""
+        return max(self.active, key=lambda s: self.active[s].admit_seq)
 
 
 # ---------------------------------------------------------------------------
@@ -101,14 +131,36 @@ class SlotScheduler:
 
 def synthetic_requests(n: int, prompt_len: int, max_new_tokens: int,
                        vocab_size: int, seed: int = 0,
-                       rate: Optional[float] = None) -> List[Request]:
+                       rate: Optional[float] = None,
+                       prompt_lens: Optional[Sequence[int]] = None,
+                       shared_prefix_len: int = 0,
+                       eos_id: Optional[int] = None) -> List[Request]:
     """n random-token requests; with ``rate`` (req/s), Poisson arrival times
     (open-loop load — arrivals don't wait for the server), else all at t=0.
+
+    ``prompt_lens``: bucket sizes to cycle through (mixed-length load for the
+    engine's power-of-two admission bucketing); overrides ``prompt_len``.
+    ``shared_prefix_len``: every prompt starts with the same token prefix (a
+    "system prompt") — the paged backend's radix index prefills it once and
+    CoW-shares its blocks.
     """
     rng = np.random.default_rng(seed)
-    prompts = rng.integers(0, vocab_size, size=(n, prompt_len), dtype=np.int32)
+    lens = ([int(prompt_lens[i % len(prompt_lens)]) for i in range(n)]
+            if prompt_lens else [prompt_len] * n)
+    if shared_prefix_len > 0:
+        if any(l <= shared_prefix_len for l in lens):
+            raise ValueError("shared_prefix_len must be < every prompt len")
+        prefix = rng.integers(0, vocab_size, size=shared_prefix_len,
+                              dtype=np.int32)
+    prompts = []
+    for l in lens:
+        p = rng.integers(0, vocab_size, size=l, dtype=np.int32)
+        if shared_prefix_len > 0:
+            p[:shared_prefix_len] = prefix
+        prompts.append(p)
     arrivals = np.zeros(n)
     if rate is not None and rate > 0:
         arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
     return [Request(rid=i, prompt=prompts[i], max_new_tokens=max_new_tokens,
-                    arrival_s=float(arrivals[i])) for i in range(n)]
+                    arrival_s=float(arrivals[i]), eos_id=eos_id)
+            for i in range(n)]

@@ -6,6 +6,27 @@ import jax.numpy as jnp
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (the exhaustive "
+                          "serving identity matrices)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: exhaustive/expensive test, skipped unless "
+        "--runslow (tier-1 stays fast; representatives still run)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow: needs --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,312 @@
+"""Paged KV memory subsystem: pool/table/index invariants and the engine's
+token-identity guarantee under paging.
+
+The load-bearing claim mirrors PR 1's: paging (demand-allocated blocks,
+block tables, CoW prefix sharing, recompute preemption) changes *memory
+layout and admission capacity only* — every request's token stream is
+bit-identical to the slotted engine and to running it alone through prefill
++ sequential decode.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import L3_NSS, LinkageConfig, preset
+from repro.models import ModelOptions, decode_step, init_params, prefill
+from repro.serve import (BlockPool, PrefixIndex, Request, ServeEngine,
+                         synthetic_requests)
+
+CFG = get_config("tinyllama-1.1b").smoke()
+OPTS = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def sequential_tokens(params, req, max_len=MAX_LEN):
+    """Reference: the request alone, prefill + one-token decode loop."""
+    logits, cache = jax.jit(
+        lambda p, t: prefill(p, t, CFG, OPTS, max_len=max_len))(
+            params, jnp.asarray(req.prompt)[None])
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [int(nxt[0])]
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, CFG, OPTS))
+    for _ in range(req.max_new_tokens - 1):
+        logits, cache = dec(params, cache, nxt)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(int(nxt[0]))
+    return out
+
+
+def run_engine(params, linkage, requests, *, kv, n_slots=2, load="closed",
+               **kw):
+    eng = ServeEngine(CFG, params, OPTS, linkage, n_slots=n_slots,
+                      max_len=MAX_LEN, kv=kv, **kw)
+    comps, _ = eng.run(requests, load=load)
+    assert len(comps) == len(requests)
+    return {c.rid: c.tokens.tolist() for c in comps}, eng
+
+
+def assert_paged_identical(params, linkage, requests, *, check_seq=True,
+                           n_slots=2, **kw):
+    slotted, _ = run_engine(params, linkage, requests, kv="slotted",
+                            n_slots=n_slots)
+    paged, eng = run_engine(params, linkage, requests, kv="paged",
+                            n_slots=n_slots, **kw)
+    assert slotted == paged, f"paged diverged:\n{slotted}\n{paged}"
+    if check_seq:
+        for req in requests:
+            assert paged[req.rid] == sequential_tokens(params, req), req.rid
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# BlockPool / PrefixIndex invariants (host subsystem)
+# ---------------------------------------------------------------------------
+
+def test_block_pool_alloc_free_roundtrip():
+    pool = BlockPool(4, block_size=8)
+    a, b = pool.alloc(), pool.alloc()
+    assert (a, b) == (0, 1) and pool.n_resident == 2 and pool.hwm == 2
+    assert pool.free(a) is True                 # physically freed
+    assert pool.alloc() == 0                    # lowest-first, deterministic
+    pool.retain(b)
+    assert pool.free(b) is False                # still referenced
+    assert pool.free(b) is True
+    assert pool.n_free == 3 and pool.hwm == 2
+
+
+def test_block_pool_double_free_raises():
+    pool = BlockPool(2, block_size=4)
+    blk = pool.alloc()
+    pool.free(blk)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(blk)
+    with pytest.raises(ValueError, match="retain"):
+        pool.retain(blk)
+
+
+def test_block_pool_exhaustion_returns_none():
+    pool = BlockPool(2, block_size=4)
+    assert pool.alloc() is not None and pool.alloc() is not None
+    assert pool.alloc() is None
+
+
+def test_prefix_index_match_insert_evict():
+    pool = BlockPool(8, block_size=4)
+    idx = PrefixIndex(block_size=4)
+    toks = np.arange(10, dtype=np.int32)        # 2 full blocks + tail
+    blocks = [pool.alloc(), pool.alloc(), pool.alloc()]
+    idx.insert(toks, blocks, n_full=2, pool=pool)
+    assert len(idx) == 2
+    assert pool.refs[blocks[0]] == 2            # caller + index
+    assert idx.match(toks) == blocks[:2]
+    assert idx.match(np.arange(4, dtype=np.int32)) == blocks[:1]
+    assert idx.match(np.arange(1, 5, dtype=np.int32)) == []
+    # caller drops its refs -> blocks become index-only -> evictable
+    for b in blocks[:2]:
+        pool.free(b)
+    assert idx.n_evictable(pool) == 2
+    assert idx.evict(pool, need=1) == 1         # LRU leaf first
+    assert idx.match(toks) == blocks[:1]        # the chain shrank from the end
+    assert idx.evict(pool, need=5) == 1
+    assert len(idx) == 0 and pool.refs[blocks[0]] == 0
+
+
+def test_prefix_index_interior_not_evictable_while_child_held():
+    pool = BlockPool(8, block_size=2)
+    idx = PrefixIndex(block_size=2)
+    toks = np.arange(4, dtype=np.int32)
+    blocks = [pool.alloc(), pool.alloc()]
+    idx.insert(toks, blocks, n_full=2, pool=pool)
+    pool.free(blocks[0])                        # parent: index-only
+    # child still held by the caller: neither node can be freed
+    assert idx.n_evictable(pool) == 0
+    assert idx.evict(pool, need=2) == 0
+
+
+# ---------------------------------------------------------------------------
+# (Randomized BlockPool/CoW property tests live in tests/test_properties.py,
+# which skips cleanly when the optional hypothesis dep is absent.)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_random_workload_refcounts_exact():
+    """Deterministic version of the hypothesis pool property (runs even
+    without the optional dep): random alloc/retain/free interleavings keep
+    refcounts exact and capacity accounting consistent."""
+    rng = np.random.default_rng(0)
+    pool = BlockPool(6, block_size=4)
+    live = []                                   # one entry per held reference
+    for op in rng.integers(0, 3, size=200):
+        if op == 0:
+            blk = pool.alloc()
+            if blk is None:
+                assert pool.n_free == 0
+            else:
+                assert pool.refs[blk] == 1
+                live.append(blk)
+        elif op == 1 and live:
+            blk = live[len(live) // 2]
+            pool.retain(blk)
+            live.append(blk)
+        elif op == 2 and live:
+            blk = live.pop()
+            assert pool.free(blk) == (blk not in live)
+        assert (pool.refs >= 0).all()
+        assert pool.n_resident == len(set(live))
+        for b in set(live):
+            assert pool.refs[b] == live.count(b)
+    assert pool.hwm <= 6
+
+
+# ---------------------------------------------------------------------------
+# Engine token identity under paging (the acceptance invariant)
+# ---------------------------------------------------------------------------
+
+def test_paged_identity_base_shared_prefix(params):
+    """base preset, 4 requests CoW-sharing a 16-token prefix: paged ==
+    slotted == sequential, and the index actually shared blocks."""
+    reqs = synthetic_requests(4, prompt_len=24, max_new_tokens=5,
+                              vocab_size=CFG.vocab_size, seed=7,
+                              shared_prefix_len=16)
+    eng = assert_paged_identical(params, preset("base"), reqs, block_size=8)
+    u = eng.utilization()
+    assert u["kv_prefix_shared_tokens"] >= 16 * 3   # rids 1..3 matched
+    assert eng.sched.n_free == 2                    # everything evicted
+
+
+def test_paged_identity_identical_prompts_cow(params):
+    """Identical prompts (block-aligned): the full prefix is a radix hit, so
+    later admissions prefill exactly one token and fork the tail block
+    copy-on-write before writing it."""
+    base = synthetic_requests(1, prompt_len=16, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=9)[0]
+    reqs = [dataclasses.replace(base, rid=i) for i in range(3)]
+    eng = assert_paged_identical(params, preset("byp"), reqs, block_size=8)
+    u = eng.utilization()
+    assert u["kv_cow_forks"] >= 2                   # rids 1,2 forked the tail
+    assert u["kv_prefix_shared_tokens"] == 15 * 2   # P-1 shared each
+
+
+def test_paged_identity_nss(params):
+    """L3: multi-token fused programs over the paged cache, demand
+    allocation crossing block boundaries mid-program."""
+    lk = LinkageConfig(level=L3_NSS, ret_async=True, decode_steps=3)
+    reqs = synthetic_requests(5, prompt_len=8, max_new_tokens=7,
+                              vocab_size=CFG.vocab_size, seed=1,
+                              shared_prefix_len=4)
+    assert_paged_identical(params, lk, reqs, block_size=4)
+
+
+def test_paged_identity_ret_byp_shortcut(params):
+    """ret_byp_shortcut (blockwise-jnp kernels off-TPU) with a shared
+    prefix: the suffix prefill lowers through the chunked attention form and
+    the streams still match the slotted engine bit-for-bit."""
+    lk = preset("ret_byp_shortcut")
+    opts = lk.model_options(OPTS, on_tpu=False)
+    reqs = synthetic_requests(3, prompt_len=16, max_new_tokens=5,
+                              vocab_size=CFG.vocab_size, seed=5,
+                              shared_prefix_len=8)
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                      kv="slotted")
+    slotted, _ = eng.run(reqs, load="closed")
+    eng2 = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                       kv="paged", block_size=8)
+    paged, _ = eng2.run(reqs, load="closed")
+    assert ({c.rid: c.tokens.tolist() for c in slotted}
+            == {c.rid: c.tokens.tolist() for c in paged})
+
+
+def test_paged_preemption_recompute(params):
+    """A pool far smaller than worst-case forces recompute-preemption; the
+    preempted requests replay bit-identically on re-admission."""
+    reqs = synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                              vocab_size=CFG.vocab_size, seed=3)
+    eng = assert_paged_identical(params, preset("byp"), reqs, n_slots=3,
+                                 check_seq=False, block_size=4, num_blocks=9)
+    assert eng.preemptions > 0
+    assert eng.kv.pool.hwm <= 9
+
+
+def test_paged_admission_gated_on_blocks(params):
+    """With blocks for only ~one sequence, free slots alone don't admit:
+    the engine serializes on the block pool, not the slot count."""
+    reqs = synthetic_requests(3, prompt_len=8, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=4)
+    paged, eng = run_engine(params, preset("base"), reqs, kv="paged",
+                            n_slots=3, block_size=4, num_blocks=5)
+    for req in reqs:
+        assert paged[req.rid] == sequential_tokens(params, req)
+    assert eng.kv.pool.hwm <= 5
+
+
+def test_paged_rejects_oversized_and_recurrent(params):
+    eng = ServeEngine(CFG, params, OPTS, preset("base"), n_slots=1,
+                      max_len=MAX_LEN, kv="paged", block_size=4, num_blocks=3)
+    eng.sched.enqueue(Request(rid=0, prompt=np.zeros(8, np.int32),
+                              max_new_tokens=8))
+    with pytest.raises(ValueError, match="never fit"):
+        eng._admit(lambda: 0.0)
+    jamba = get_config("jamba-v0.1-52b").smoke()
+    with pytest.raises(ValueError, match="plain-attention"):
+        ServeEngine(jamba, init_params(jax.random.PRNGKey(1), jamba), OPTS,
+                    preset("base"), n_slots=1, max_len=16, kv="paged")
+
+
+@pytest.mark.slow
+def test_paged_identity_open_loop(params):
+    """Open-loop timed arrivals over the paged backend: admission timing
+    changes, streams don't."""
+    reqs = synthetic_requests(4, prompt_len=8, max_new_tokens=5,
+                              vocab_size=CFG.vocab_size, seed=3, rate=500.0,
+                              shared_prefix_len=4)
+    assert_paged_identical(params, preset("byp"), reqs, load="open",
+                           block_size=8)
+
+
+@pytest.mark.slow
+def test_paged_identity_bucketed_mixed_lengths(params):
+    """Mixed prompt lengths + power-of-two bucketing + paging all compose
+    without touching the streams."""
+    reqs = synthetic_requests(6, prompt_len=0, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=11,
+                              prompt_lens=[5, 9, 16, 23])
+    assert_paged_identical(params, preset("byp"), reqs, block_size=8,
+                           bucket_prompts=True)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode-attention kernel (interpret mode = real kernel body)
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_kernel_matches_gathered_ref():
+    from repro.kernels.paged_decode import paged_decode_attention
+    P1, bs, nb, B, HQ, HKV, dh = 7, 8, 3, 2, 4, 2, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    kp = jax.random.normal(k1, (P1, bs, HKV, dh), jnp.float32)
+    vp = jax.random.normal(k2, (P1, bs, HKV, dh), jnp.float32)
+    q = jax.random.normal(k3, (B, HQ, dh), jnp.float32)
+    tables = jnp.asarray(np.array([[0, 2, 5], [4, 1, 6]], np.int32))
+    valid = np.zeros((B, nb * bs), bool)
+    valid[0, :13] = True                       # mid-block boundary
+    valid[1, :1] = True                        # freshly admitted
+    out = paged_decode_attention(q, kp, vp, tables, jnp.asarray(valid),
+                                 interpret=True)
+
+    kg = np.asarray(kp)[np.asarray(tables)].reshape(B, nb * bs, HKV, dh)
+    vg = np.asarray(vp)[np.asarray(tables)].reshape(B, nb * bs, HKV, dh)
+    qg = np.asarray(q).reshape(B, HKV, HQ // HKV, dh)
+    s = np.einsum("bhgd,bthd->bhgt", qg, kg) / np.sqrt(dh)
+    s = np.where(valid[:, None, None, :], s, -np.inf)
+    p = np.asarray(jax.nn.softmax(jnp.asarray(s), axis=-1))
+    ref = np.einsum("bhgt,bthd->bhgd", p, vg).reshape(B, HQ, dh)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)

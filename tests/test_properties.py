@@ -168,3 +168,70 @@ def test_rwkv_chunk_boundary_invariance(nchunks, hd):
     y8, _ = L.rwkv_scan_chunked(r, k, v, w, u, chunk=8)
     np.testing.assert_allclose(np.asarray(y4), np.asarray(y8),
                                atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV BlockPool: refcount / CoW invariants under random workloads
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.lists(st.sampled_from(["alloc", "retain", "free"]), max_size=64),
+       st.integers(1, 8))
+def test_block_pool_refcount_invariants(ops, num_blocks):
+    """Random alloc/retain/free interleavings: refcounts never go negative,
+    free ids never alias live ids, and capacity accounting stays exact."""
+    from repro.serve import BlockPool
+    pool = BlockPool(num_blocks, block_size=4)
+    live = []                                   # one entry per held reference
+    for op in ops:
+        if op == "alloc":
+            blk = pool.alloc()
+            if blk is None:
+                assert pool.n_free == 0
+            else:
+                assert pool.refs[blk] == 1
+                live.append(blk)
+        elif op == "retain" and live:
+            blk = live[len(live) // 2]
+            pool.retain(blk)
+            live.append(blk)
+        elif op == "free" and live:
+            blk = live.pop()
+            freed = pool.free(blk)
+            assert freed == (blk not in live)
+        assert (pool.refs >= 0).all()
+        assert pool.n_resident == len(set(live))
+        for b in set(live):
+            assert pool.refs[b] == live.count(b)
+    assert pool.hwm <= num_blocks
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(2, 5), st.integers(0, 30))
+def test_block_pool_cow_fork_semantics(n_chains, bs, seed):
+    """CoW forks through the pool: sharing a chain then forking one block
+    leaves every other reference intact, and a full teardown returns the
+    pool to empty with all refcounts zero (no leaks, no double frees)."""
+    from repro.serve import BlockPool
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(64, block_size=bs)
+    base = [pool.alloc() for _ in range(4)]
+    chains = []
+    for _ in range(n_chains):
+        for b in base:
+            pool.retain(b)
+        chains.append(list(base))
+    for chain in chains:
+        bi = int(rng.integers(0, len(chain)))
+        old = chain[bi]
+        if pool.refs[old] > 1:                  # fork-on-write
+            new = pool.alloc()
+            pool.free(old)
+            chain[bi] = new
+        assert pool.refs[chain[bi]] >= 1
+    for chain in chains:
+        for b in chain:
+            pool.free(b)
+    for b in base:
+        pool.free(b)
+    assert pool.n_resident == 0 and (pool.refs == 0).all()

@@ -143,6 +143,51 @@ def test_scheduler_release_returns_state():
     assert s.n_free == 1 and not s.active
 
 
+def test_scheduler_enqueue_while_full_then_release_readmit():
+    """Queue keeps growing while every slot is busy; release/re-admit hands
+    slots out FIFO x lowest-index, and peek never consumes."""
+    s = SlotScheduler(2)
+    for i in range(6):
+        s.enqueue(_req(i))
+    s.admit_next(now=0.0)
+    s.admit_next(now=0.0)
+    assert not s.can_admit() and s.n_queued == 4
+    for i in range(4):
+        s.enqueue(_req(10 + i))            # enqueue while full is fine
+    assert s.n_queued == 8 and s.peek().rid == 2
+    s.release(1)
+    assert s.peek().rid == 2               # peek doesn't consume
+    slot, req = s.admit_next(now=1.0)
+    assert (slot, req.rid) == (1, 2)
+    # interleaved release order: lowest free index always wins
+    s.release(0)
+    s.release(1)
+    a, ra = s.admit_next(now=2.0)
+    b, rb = s.admit_next(now=2.0)
+    assert (a, ra.rid) == (0, 3) and (b, rb.rid) == (1, 4)
+
+
+def test_scheduler_requeue_front_and_youngest():
+    s = SlotScheduler(2)
+    for i in range(3):
+        s.enqueue(_req(i))
+    s.admit_next(now=0.0)
+    s.admit_next(now=1.0)
+    assert s.youngest() == 1               # admitted later
+    st = s.release(s.youngest())
+    s.requeue_front(st.req)
+    assert s.peek().rid == 1               # preempted request heads the queue
+    slot, req = s.admit_next(now=2.0)
+    assert req.rid == 1 and s.youngest() == slot
+
+
+def test_scheduler_zero_budget_rejected():
+    s = SlotScheduler(1)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        s.enqueue(Request(rid=0, prompt=np.zeros(4, np.int32),
+                          max_new_tokens=0))
+
+
 def test_engine_single_slot_serializes(params):
     """n_slots=1 degrades to sequential service — the strongest eviction/
     re-admission exercise: every request recycles the same slot."""
@@ -152,6 +197,113 @@ def test_engine_single_slot_serializes(params):
                                             n_slots=1)
     # one program per decoded token per request: 3 * (4 - 1)
     assert eng.programs_run == 9
+
+
+# ---------------------------------------------------------------------------
+# EOS stopping / sampling / prompt bucketing (engine satellites)
+# ---------------------------------------------------------------------------
+
+def _greedy_streams(params, reqs, linkage, n_slots=2, **kw):
+    eng = ServeEngine(CFG, params, OPTS, linkage, n_slots=n_slots,
+                      max_len=MAX_LEN, **kw)
+    comps, _ = eng.run(reqs, load="closed")
+    return {c.rid: c.tokens.tolist() for c in comps}, eng
+
+
+def test_eos_stops_early_and_frees_slot(params):
+    """iret mode: EOS is host-visible per program, the slot finalizes at
+    that sync point and the stream is the sequential stream trimmed at EOS
+    inclusive."""
+    reqs = synthetic_requests(3, prompt_len=8, max_new_tokens=8,
+                              vocab_size=CFG.vocab_size, seed=6)
+    want = {r.rid: sequential_tokens(params, r) for r in reqs}
+    # pick a token whose *first* occurrence in rid 0's stream is mid-stream
+    stop_at = next(i for i in range(1, 8)
+                   if want[0].index(want[0][i]) == i)
+    eos = want[0][stop_at]
+    reqs_eos = [dataclasses.replace(r, eos_id=int(eos)) for r in reqs]
+    got, eng = _greedy_streams(params, reqs_eos, preset("base"))
+    for rid, stream in want.items():
+        trimmed = stream
+        if eos in stream:
+            trimmed = stream[:stream.index(eos) + 1]
+        assert got[rid] == trimmed, rid
+    assert len(got[0]) == stop_at + 1 < 8
+    assert eng.sched.n_free == 2
+
+
+def test_eos_ret_async_trims_at_completion(params):
+    """RET caveat: token values stay on device until a request completes, so
+    EOS cannot stop compute early — but the completed stream is still
+    trimmed at EOS (documented in docs/serving.md)."""
+    lk = LinkageConfig(level=L3_NSS, ret_async=True, decode_steps=3)
+    reqs = synthetic_requests(2, prompt_len=8, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=6)
+    want = {r.rid: sequential_tokens(params, r) for r in reqs}
+    stop_at = next(i for i in range(1, 5)
+                   if want[0].index(want[0][i]) == i)
+    eos = want[0][stop_at]
+    reqs_eos = [dataclasses.replace(r, eos_id=int(eos)) for r in reqs]
+    got, eng = _greedy_streams(params, reqs_eos, lk)
+    assert got[0] == want[0][:stop_at + 1]
+    assert eng.tokens_wasted > 0               # budget decoded past EOS
+
+
+def test_sampling_replays_across_schedules(params):
+    """temperature/top-k sampling: per-request key chains make the streams a
+    function of (request, seed) only — slot count, backend and admission
+    timing are invisible."""
+    from repro.core import SamplingConfig
+    sc = SamplingConfig(temperature=0.7, top_k=16, seed=42)
+    reqs = synthetic_requests(5, prompt_len=8, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=2)
+    a, _ = _greedy_streams(params, reqs, preset("byp"), n_slots=2,
+                           sampling=sc)
+    b, _ = _greedy_streams(params, reqs, preset("byp"), n_slots=4,
+                           sampling=sc)
+    c, _ = _greedy_streams(params, reqs, preset("byp"), n_slots=3,
+                           sampling=sc, kv="paged", block_size=8)
+    assert a == b == c
+    greedy, _ = _greedy_streams(params, reqs, preset("byp"))
+    assert a != greedy                         # it actually sampled
+
+
+def test_sampling_top_k_respects_support(params):
+    """Every sampled token is inside the top-k of the greedy-path logits at
+    that step (checked against a sequential replay of the sampled prefix)."""
+    from repro.core import SamplingConfig
+    k = 4
+    sc = SamplingConfig(temperature=1.5, top_k=k, seed=0)
+    req = synthetic_requests(1, prompt_len=8, max_new_tokens=5,
+                             vocab_size=CFG.vocab_size, seed=8)[0]
+    got, _ = _greedy_streams(params, [req], preset("base"), n_slots=1,
+                             sampling=sc)
+    toks = got[0]
+    logits, cache = jax.jit(
+        lambda p, t: prefill(p, t, CFG, OPTS, max_len=MAX_LEN))(
+            params, jnp.asarray(req.prompt)[None])
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, CFG, OPTS))
+    for tok in toks:
+        top = jnp.argsort(logits[0])[-k:]
+        assert int(tok) in np.asarray(top), (tok, np.asarray(top))
+        logits, cache = dec(params, cache,
+                            jnp.asarray([tok], jnp.int32))
+
+
+def test_bucketed_prompts_identical_streams(params):
+    """Power-of-two admission bucketing bounds the jit prefill cache; the
+    padded positions are causally invisible, so streams are unchanged."""
+    reqs = synthetic_requests(6, prompt_len=0, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=11,
+                              prompt_lens=[5, 9, 16, 23])
+    plain, _ = _greedy_streams(params, reqs, preset("byp"))
+    bucketed, eng = _greedy_streams(params, reqs, preset("byp"),
+                                    bucket_prompts=True)
+    assert plain == bucketed
+    assert eng._bucket(5) == 8 and eng._bucket(9) == 16
+    assert eng._bucket(33) == MAX_LEN          # clipped to max_len
+    for req in reqs:
+        assert bucketed[req.rid] == sequential_tokens(params, req)
 
 
 # ---------------------------------------------------------------------------

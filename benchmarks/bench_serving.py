@@ -12,6 +12,11 @@ The paged-KV rows compare the two memory subsystems at identical load:
 fixed-size blocks (reporting the resident-block high-watermark), and the
 shared-prefix row adds a common 16-token "system prompt" so the radix index
 prefills it once and CoW-shares its blocks across all requests.
+
+With ``--mesh data,model`` (e.g. ``--mesh 1,2`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``) a sharded-serving
+row runs both backends over the device mesh and reports the per-shard KV
+footprint/high-watermark — what tensor-parallel slot/block pools buy.
 """
 from __future__ import annotations
 
@@ -22,7 +27,30 @@ PRESETS = ["base", "byp", "ret_byp", "ret_byp_shortcut", "nss_shortcut"]
 PAGED_PRESETS = ["base", "nss_shortcut"]
 
 
-def run():
+def run_mesh(mesh: str):
+    """Sharded-serving rows: slotted + paged engines on a ``data,model``
+    mesh, token streams identical to 1-device by construction (asserted in
+    tests/test_mesh_serve.py); reported here: per-shard KV bytes."""
+    from repro.launch.mesh import parse_mesh_spec
+    if parse_mesh_spec(mesh) is None:          # e.g. --mesh 1,1
+        print(f"# skipping mesh rows: {mesh!r} is the single-device path")
+        return
+    for kv in ("slotted", "paged"):
+        rep = run_engine("tinyllama-1.1b", "nss_shortcut", n_slots=4,
+                         prompt_len=32, gen_len=32, requests=8,
+                         load="closed", decode_steps=8, kv=kv,
+                         block_size=16, shared_prefix_len=16, mesh=mesh)
+        extra = (f"kv_blocks_hwm={rep['kv_blocks_hwm']}/"
+                 f"{rep['kv_blocks_total']};"
+                 f"kv_hwm_bytes_per_shard={rep['kv_hwm_bytes_per_shard']};"
+                 if kv == "paged" else "")
+        row(f"table6_mesh_{rep['mesh']}_{kv}_nss_shortcut",
+            rep["mean_latency_s"] * 1e6,
+            f"tokens_per_s={rep['tokens_per_s']:.0f};{extra}"
+            f"kv_bytes_per_shard={rep['kv_bytes_per_shard']}")
+
+
+def run(mesh: str = ""):
     seq = run_server("tinyllama-1.1b", "base", batch=4, prompt_len=32,
                      gen_len=32, requests=8)
     row("table4_serving_sequential_base",
@@ -65,6 +93,15 @@ def run():
                 f"cow_forks={rep['kv_cow_forks']};"
                 f"shared_tokens={rep['kv_prefix_shared_tokens']}")
 
+    if mesh:
+        run_mesh(mesh)
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="",
+                    help="also run sharded-serving rows on a 'data,model' "
+                         "mesh (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
+    run(mesh=ap.parse_args().mesh)

@@ -21,4 +21,7 @@ python -m repro.launch.serve --preset nss_shortcut --load open \
 echo "== smoke: slotted-vs-paged token identity =="
 python scripts/paged_smoke.py
 
+echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh) =="
+python scripts/paged_smoke.py --mesh 1,2
+
 echo "CI OK"

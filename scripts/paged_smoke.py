@@ -5,22 +5,53 @@ Runs the same shared-prefix request list through both KV backends at a fused
 subsystem's UKL-style invariant (specialization without app-visible change)
 checked end-to-end on every CI run, faster than the full pytest matrix.
 
-Usage: PYTHONPATH=src python scripts/paged_smoke.py
+With ``--mesh data,model`` (e.g. ``--mesh 1,2``) both engines run sharded
+over a host device mesh (weights tensor-parallel over "model", per-shard KV
+residency) and the same identity must hold — the multi-device smoke of
+tests/test_mesh_serve.py. Virtual CPU devices are forced automatically when
+the mesh needs more than the host has.
+
+Usage: PYTHONPATH=src python scripts/paged_smoke.py [--mesh 1,2]
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--mesh", default="",
+                   help="serving mesh 'data,model' (empty = single device)")
+    return p.parse_args(argv)
+
+
+# XLA locks the host device count at first jax init, so the mesh flag must
+# be handled before any jax import.
+_ARGS = _parse_args()
+if _ARGS.mesh and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    _need = 1
+    for _p in _ARGS.mesh.split(","):
+        _need *= max(int(_p), 1)
+    if _need > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_need}").strip()
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import preset
+from repro.launch.mesh import make_serve_mesh
 from repro.models import ModelOptions, init_params
 from repro.serve import ServeEngine, synthetic_requests
 
 
 def main() -> int:
+    mesh = make_serve_mesh(_ARGS.mesh)
     cfg = get_config("tinyllama-1.1b").smoke()
     opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
     lk = preset("nss_shortcut")
@@ -33,7 +64,7 @@ def main() -> int:
     streams = {}
     for kv in ("slotted", "paged"):
         eng = ServeEngine(cfg, params, opts, lk, n_slots=2, max_len=32,
-                          kv=kv, block_size=8)
+                          kv=kv, block_size=8, mesh=mesh)
         comps, _ = eng.run(reqs, load="closed")
         streams[kv] = {c.rid: c.tokens.tolist() for c in comps}
         print(f"{kv}: {eng.utilization()}")
@@ -45,8 +76,9 @@ def main() -> int:
             if s != p:
                 print(f"  rid {rid}: slotted={s} paged={p}", file=sys.stderr)
         return 1
+    tag = f" on mesh {_ARGS.mesh}" if mesh is not None else ""
     print(f"paged smoke OK: {len(reqs)} shared-prefix requests bit-identical "
-          "across KV backends")
+          f"across KV backends{tag}")
     return 0
 
 

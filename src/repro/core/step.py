@@ -17,7 +17,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.linkage import L0_EAGER, L3_NSS, LinkageConfig
-from repro.models import (init_params, loss_fn, decode_step as model_decode,
+from repro.models import (init_params, loss_fn, prefill,
+                          decode_step as model_decode,
                           decode_step_paged as model_decode_paged,
                           decode_step_slots as model_decode_slots)
 from repro.models.layers import ModelOptions
@@ -236,6 +237,27 @@ def make_decode_fn(cfg: ArchConfig, opts: ModelOptions, linkage: LinkageConfig,
     return single
 
 
+def _serve_jit_kwargs(linkage: LinkageConfig, mesh: Optional[Mesh],
+                      param_sharding, cache_sharding,
+                      n_extra: int = 0) -> Dict[str, Any]:
+    """jit kwargs for a serving decode program.
+
+    With ``mesh`` the program is compiled with explicit in/out shardings —
+    params tensor-parallel, the engine cache per-shard resident, everything
+    else (tokens, keys, block tables) replicated — so one mesh shape jits
+    exactly one decode program and the cache never migrates between calls.
+    """
+    kwargs: Dict[str, Any] = {}
+    if linkage.donate:
+        kwargs["donate_argnums"] = (1,)
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        kwargs["in_shardings"] = ((param_sharding, cache_sharding, repl, repl)
+                                  + (repl,) * n_extra)
+        kwargs["out_shardings"] = (cache_sharding, repl, repl)
+    return kwargs
+
+
 def _link_decode_fn(fn: Callable, linkage: LinkageConfig) -> Callable:
     """Apply the linkage boundary to a decode fn: eager at L0, jit (with the
     cache donated at L2+) otherwise."""
@@ -297,13 +319,30 @@ def make_slot_decode_fn(cfg: ArchConfig, opts: ModelOptions,
 
 def build_slot_decode_step(cfg: ArchConfig, opts: ModelOptions,
                            linkage: LinkageConfig,
-                           sampling: Optional[SamplingConfig] = None
+                           sampling: Optional[SamplingConfig] = None, *,
+                           mesh: Optional[Mesh] = None,
+                           param_sharding=None, cache_sharding=None
                            ) -> Callable:
     """(params, slot_cache, tokens (B,), keys (B,2)) ->
-    (slot_cache, tokens (B, K), keys)."""
+    (slot_cache, tokens (B, K), keys).
+
+    With ``mesh`` (+ NamedSharding trees for params and the slot cache) the
+    decode program is compiled tensor-parallel over the ``"model"`` axis and
+    slot-parallel over ``"data"``: one jit per mesh shape, cache resident
+    per shard (see ``ArchSharding.serve_slot_cache_specs``).
+    """
     linkage.validate()
-    return _link_decode_fn(make_slot_decode_fn(cfg, opts, linkage, sampling),
-                           linkage)
+    fn = make_slot_decode_fn(cfg, opts, linkage, sampling)
+    if linkage.level == L0_EAGER:
+        if mesh is not None:
+            raise ValueError("mesh serving needs a jitted linkage level")
+
+        def eager(params, cache, tokens, keys):
+            with jax.disable_jit():
+                return fn(params, cache, tokens, keys)
+        return eager
+    return jax.jit(fn, **_serve_jit_kwargs(linkage, mesh, param_sharding,
+                                           cache_sharding))
 
 
 def make_paged_decode_fn(cfg: ArchConfig, opts: ModelOptions,
@@ -332,16 +371,84 @@ def make_paged_decode_fn(cfg: ArchConfig, opts: ModelOptions,
 
 def build_paged_decode_step(cfg: ArchConfig, opts: ModelOptions,
                             linkage: LinkageConfig, max_len: int,
-                            sampling: Optional[SamplingConfig] = None
+                            sampling: Optional[SamplingConfig] = None, *,
+                            mesh: Optional[Mesh] = None,
+                            param_sharding=None, cache_sharding=None
                             ) -> Callable:
     """(params, paged_cache, tokens (B,), keys (B,2), tables (B, nb)) ->
-    (paged_cache, tokens (B, K), keys)."""
+    (paged_cache, tokens (B, K), keys).
+
+    With ``mesh`` the physical block pools are per-shard resident (KV heads
+    over ``"model"``) while the block table stays one replicated *logical*
+    map — each shard resolves the same logical->physical translation against
+    its own slice of every block (``ArchSharding.serve_paged_cache_specs``).
+    """
     linkage.validate()
     fn = make_paged_decode_fn(cfg, opts, linkage, max_len, sampling)
     if linkage.level == L0_EAGER:
+        if mesh is not None:
+            raise ValueError("mesh serving needs a jitted linkage level")
+
         def eager(params, cache, tokens, keys, tables):
             with jax.disable_jit():
                 return fn(params, cache, tokens, keys, tables)
         return eager
-    kwargs = {"donate_argnums": (1,)} if linkage.donate else {}
-    return jax.jit(fn, **kwargs)
+    return jax.jit(fn, **_serve_jit_kwargs(linkage, mesh, param_sharding,
+                                           cache_sharding, n_extra=1))
+
+
+def build_prefill_fn(cfg: ArchConfig, opts: ModelOptions, max_len: int, *,
+                     bucket_fn: Optional[Callable[[int], int]] = None,
+                     mesh: Optional[Mesh] = None,
+                     param_sharding=None) -> Callable:
+    """Jitted full-prompt admission prefill shared by both KV backends
+    (identical program => trivially bit-identical admissions across
+    backends). Returns ``prefill_prompt(params, prompt (P,) np.int32) ->
+    (logits, cache)``.
+
+    With ``bucket_fn`` the prompt is right-padded to its bucket and
+    prefilled with a traced ``true_len`` — one compile per bucket, not per
+    length. Prompts must be non-empty: ``true_len == 0`` would silently
+    clamp the logit slice to position 0 of pure padding, so it is guarded
+    here instead.
+
+    With ``mesh`` the program takes tensor-parallel weights and returns a
+    replicated batch-1 cache (the slot/scatter writers reshard it into the
+    engine's per-shard resident cache).
+    """
+    import numpy as np
+
+    jit_kwargs: Dict[str, Any] = {}
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        n_in = 2 if bucket_fn is None else 3
+        jit_kwargs["in_shardings"] = (param_sharding,) + (repl,) * (n_in - 1)
+        jit_kwargs["out_shardings"] = repl
+
+    if bucket_fn is None:
+        fn = jax.jit(lambda p, t: prefill(p, t, cfg, opts, max_len=max_len),
+                     **jit_kwargs)
+
+        def prefill_prompt(params, prompt):
+            if int(prompt.shape[0]) < 1:
+                raise ValueError("cannot prefill an empty prompt")
+            return fn(params, jnp.asarray(prompt)[None])
+    else:
+        fn = jax.jit(lambda p, t, n: prefill(p, t, cfg, opts,
+                                             max_len=max_len, true_len=n),
+                     **jit_kwargs)
+
+        def prefill_prompt(params, prompt):
+            P_ = int(prompt.shape[0])
+            if P_ < 1:
+                raise ValueError("cannot prefill an empty prompt")
+            bucket = bucket_fn(P_)
+            if bucket < P_:
+                raise ValueError(
+                    f"bucket_fn({P_}) = {bucket} is smaller than the prompt "
+                    "— buckets must cover the prompt length")
+            padded = np.zeros((bucket,), np.int32)
+            padded[:P_] = prompt
+            return fn(params, jnp.asarray(padded)[None],
+                      jnp.asarray(P_, jnp.int32))
+    return prefill_prompt

@@ -42,6 +42,34 @@ def decode_attention_ref(q, k, v, valid, *, scale=None):
     return out.reshape(B, HQ, dh)
 
 
+def slot_decode_attention_ref(q, k, v, valid, *, scale=None):
+    """Slot-aware decode oracle: like ``decode_attention_ref`` but every
+    batch row is an independent serving slot with its own validity mask.
+    q:(B,HQ,dh); k,v:(B,T,HKV,dh); valid:(B,T) bool."""
+    B, HQ, dh = q.shape
+    HKV = k.shape[2]
+    G = HQ // HKV
+    scale = scale or 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, HKV, G, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v)
+    return out.reshape(B, HQ, dh)
+
+
+def paged_decode_attention_ref(q, kp, vp, tables, valid, *, scale=None):
+    """Paged decode oracle: gather each slot's logical view through its
+    block table, then slot-decode over it. q:(B,HQ,dh); kp,vp:
+    (P+1,bs,HKV,dh) physical pools; tables:(B,nb) int32; valid:(B,nb*bs)."""
+    B = q.shape[0]
+    bs, HKV, dh = kp.shape[1], kp.shape[2], kp.shape[3]
+    nb = tables.shape[1]
+    kg = kp[tables].reshape(B, nb * bs, HKV, dh)
+    vg = vp[tables].reshape(B, nb * bs, HKV, dh)
+    return slot_decode_attention_ref(q, kg, vg, valid, scale=scale)
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

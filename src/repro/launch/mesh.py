@@ -20,3 +20,36 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec):
+    """``"data,model"`` string (e.g. ``"1,2"``) -> (data, model) ints.
+    Returns None for None/empty/"1,1" — the single-device path."""
+    if not spec:
+        return None
+    parts = [p.strip() for p in str(spec).split(",")]
+    if len(parts) != 2:
+        raise ValueError(f"--mesh wants 'data,model' (got {spec!r})")
+    data, model = int(parts[0]), int(parts[1])
+    if data < 1 or model < 1:
+        raise ValueError(f"--mesh axes must be >= 1 (got {spec!r})")
+    if data == model == 1:
+        return None
+    return data, model
+
+
+def make_serve_mesh(spec):
+    """Serving mesh from a ``--mesh data,model`` flag. None when the spec is
+    single-device. On CPU CI, force virtual devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    parsed = parse_mesh_spec(spec)
+    if parsed is None:
+        return None
+    data, model = parsed
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(
+            f"--mesh {spec} needs {data * model} devices, have {n}; on CPU "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{data * model}")
+    return make_host_mesh(data=data, model=model)

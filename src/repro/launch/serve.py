@@ -15,6 +15,9 @@ Two paths share one model/linkage setup:
           --slots 8 --requests 32
       python -m repro.launch.serve --preset nss_shortcut --kv paged \
           --block-size 16 --shared-prefix-len 16 --bucket-prompts
+      XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+          python -m repro.launch.serve --preset nss_shortcut --kv paged \
+          --mesh 1,2      # sharded: TP weights + per-shard KV residency
 
   sequential        the original one-request-at-a-time loop (``--load seq``,
                     also ``run_server`` for benchmarks): the baseline the
@@ -70,9 +73,11 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                kv: str = "slotted", block_size: int = 16,
                num_blocks: int = 0, bucket_prompts: bool = False,
                temperature: float = 0.0, top_k: int = 0,
-               eos_id: int = -1, shared_prefix_len: int = 0):
+               eos_id: int = -1, shared_prefix_len: int = 0,
+               mesh: str = ""):
     """Continuous-batching serving run; returns the engine report dict."""
     from repro.core import SamplingConfig
+    from repro.launch.mesh import make_serve_mesh
     from repro.serve import ServeEngine, serve_report, synthetic_requests
 
     if requests < 1:
@@ -86,7 +91,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
     eng = ServeEngine(cfg, params, opts, lk, n_slots=n_slots, max_len=max_len,
                       kv=kv, block_size=block_size,
                       num_blocks=num_blocks or None,
-                      sampling=sampling, bucket_prompts=bucket_prompts)
+                      sampling=sampling, bucket_prompts=bucket_prompts,
+                      mesh=make_serve_mesh(mesh))
 
     # warmup: compile prefill + decode + admission writers outside the timed
     # region (one decode program suffices — same compiled shapes as the run).
@@ -211,6 +217,12 @@ def main(argv=None) -> int:
     p.add_argument("--shared-prefix-len", type=int, default=0,
                    help="prepend a common prefix of this many tokens to "
                         "every prompt (exercises paged CoW prefix sharing)")
+    p.add_argument("--mesh", default="",
+                   help="serving mesh as 'data,model' (e.g. 1,2): weights "
+                        "tensor-parallel over 'model', KV heads per-shard "
+                        "resident, slots over 'data'. On CPU set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N first. "
+                        "Empty or 1,1 = single device")
     p.add_argument("--rate", type=float, default=25.0,
                    help="open-loop offered load, requests/s")
     p.add_argument("--concurrency", type=int, default=0,
@@ -245,7 +257,8 @@ def main(argv=None) -> int:
                          bucket_prompts=args.bucket_prompts,
                          temperature=args.temperature, top_k=args.top_k,
                          eos_id=args.eos_id,
-                         shared_prefix_len=args.shared_prefix_len)
+                         shared_prefix_len=args.shared_prefix_len,
+                         mesh=args.mesh)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.models.transformer import init_cache, prefill
+from repro.models.transformer import init_cache
 
 
 def slotify(cache: Any) -> Any:
@@ -62,12 +62,14 @@ def init_slot_cache(cfg: ArchConfig, n_slots: int, max_len: int,
     return tuple(dict(g, pos=jnp.zeros_like(g["pos"])) for g in base)
 
 
-def make_slot_writer():
+def make_slot_writer(mesh=None, cache_sharding=None):
     """Jitted ``(engine_cache, prefilled_cache_B1, slot) -> engine_cache``.
 
     Writes a freshly prefilled single-sequence cache (slot layout, batch 1)
     into row ``slot`` of the engine cache. The engine cache is donated: the
-    write is in-place on device, no reallocation per admission.
+    write is in-place on device, no reallocation per admission. With
+    ``mesh`` the engine cache stays per-shard resident through the write
+    (the replicated batch-1 source is resharded into it).
     """
 
     def write(dst, src, slot):
@@ -76,40 +78,27 @@ def make_slot_writer():
                                                          slot, axis=1),
             dst, src)
 
-    return jax.jit(write, donate_argnums=(0,))
+    kwargs = {}
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        repl = NamedSharding(mesh, P())
+        kwargs = dict(in_shardings=(cache_sharding, repl, repl),
+                      out_shardings=cache_sharding)
+    return jax.jit(write, donate_argnums=(0,), **kwargs)
 
 
 # ---------------------------------------------------------------------------
 # KV backends: the engine's pluggable device-memory subsystem
 # ---------------------------------------------------------------------------
 
-def make_prefill_fn(cfg: ArchConfig, opts, max_len: int, bucket_fn):
-    """Jitted full-prompt prefill shared by both KV backends (identical
-    program => trivially bit-identical admissions across backends).
-
-    Returns ``prefill_prompt(params, prompt (P,) np.int32) -> (logits,
-    cache)``. With ``bucket_fn`` the prompt is right-padded to its bucket
-    and prefilled with a traced ``true_len`` — one compile per bucket, not
-    per length.
-    """
-    import numpy as np
-
-    if bucket_fn is None:
-        fn = jax.jit(lambda p, t: prefill(p, t, cfg, opts, max_len=max_len))
-
-        def prefill_prompt(params, prompt):
-            return fn(params, jnp.asarray(prompt)[None])
-    else:
-        fn = jax.jit(lambda p, t, n: prefill(p, t, cfg, opts,
-                                             max_len=max_len, true_len=n))
-
-        def prefill_prompt(params, prompt):
-            P = int(prompt.shape[0])
-            padded = np.zeros((bucket_fn(P),), np.int32)
-            padded[:P] = prompt
-            return fn(params, jnp.asarray(padded)[None],
-                      jnp.asarray(P, jnp.int32))
-    return prefill_prompt
+def make_prefill_fn(cfg: ArchConfig, opts, max_len: int, bucket_fn,
+                    mesh=None, param_sharding=None):
+    """Jitted full-prompt prefill shared by both KV backends — thin wrapper
+    over ``repro.core.step.build_prefill_fn`` (the linkage-layer owner of
+    the prefill program and its mesh shardings)."""
+    from repro.core.step import build_prefill_fn
+    return build_prefill_fn(cfg, opts, max_len, bucket_fn=bucket_fn,
+                            mesh=mesh, param_sharding=param_sharding)
 
 
 class KVBackend(Protocol):
@@ -160,21 +149,39 @@ class KVBackend(Protocol):
 
 
 class SlottedKV:
-    """Dense slot-row backend (the PR-1 layout) behind the KVBackend API."""
+    """Dense slot-row backend (the PR-1 layout) behind the KVBackend API.
+
+    With ``mesh`` the engine cache is sharded per ``serve_slot_cache_specs``
+    (KV heads tensor-parallel over "model", slots over "data") and the
+    decode program is jitted once per mesh shape with explicit shardings.
+    """
 
     kind = "slotted"
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
-                 max_len: int, sampling=None, bucket_fn=None):
+                 max_len: int, sampling=None, bucket_fn=None, mesh=None):
         from repro.core.step import (build_slot_decode_step, make_sampler)
         self.cfg, self.params, self.opts = cfg, params, opts
         self.n_slots, self.max_len = n_slots, max_len
         self.bucket_fn = bucket_fn
-        self._dec = build_slot_decode_step(cfg, opts, linkage, sampling)
-        self._write = make_slot_writer()
-        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn)
-        self._sample = jax.jit(make_sampler(sampling))
+        self.mesh = mesh
         self.cache = init_slot_cache(cfg, n_slots, max_len, opts.dtype)
+        param_sh = cache_sh = None
+        if mesh is not None:
+            from repro.sharding.rules import ArchSharding, named
+            sh = ArchSharding(cfg, mesh)
+            param_sh = named(mesh, sh.serve_param_specs(params))
+            cache_sh = named(mesh, sh.serve_slot_cache_specs(self.cache,
+                                                             n_slots))
+            self.params = params = jax.device_put(params, param_sh)
+            self.cache = jax.device_put(self.cache, cache_sh)
+        self._dec = build_slot_decode_step(cfg, opts, linkage, sampling,
+                                           mesh=mesh, param_sharding=param_sh,
+                                           cache_sharding=cache_sh)
+        self._write = make_slot_writer(mesh, cache_sh)
+        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
+                                        mesh, param_sh)
+        self._sample = jax.jit(make_sampler(sampling))
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
 
     def admit(self, slot: int, prompt: np.ndarray, key: jax.Array):

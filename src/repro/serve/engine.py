@@ -56,11 +56,15 @@ KV_BACKENDS = ("slotted", "paged")
 class ServeEngine:
     """Request-level continuous batching over a fixed slot pool."""
 
+    #: smallest admission bucket — prompts shorter than this share one
+    #: compiled prefill instead of one program per tiny length
+    MIN_BUCKET = 8
+
     def __init__(self, cfg: ArchConfig, params, opts, linkage: LinkageConfig,
                  n_slots: int, max_len: int, *, kv: str = "slotted",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  sampling: Optional[SamplingConfig] = None,
-                 bucket_prompts: bool = False):
+                 bucket_prompts: bool = False, mesh=None):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -72,6 +76,7 @@ class ServeEngine:
         self.linkage = linkage
         self.n_slots = n_slots
         self.max_len = max_len
+        self.mesh = mesh
         self.sampling = sampling or SamplingConfig()
         self.tokens_per_program = (linkage.decode_steps
                                    if linkage.level == L3_NSS else 1)
@@ -79,12 +84,13 @@ class ServeEngine:
         if kv == "slotted":
             self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
                                            n_slots, max_len, self.sampling,
-                                           bucket_fn)
+                                           bucket_fn, mesh=mesh)
         elif kv == "paged":
             from repro.serve.paging import PagedKV
             self.kv = PagedKV(cfg, params, opts, linkage, n_slots, max_len,
                               self.sampling, bucket_fn,
-                              block_size=block_size, num_blocks=num_blocks)
+                              block_size=block_size, num_blocks=num_blocks,
+                              mesh=mesh)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
@@ -95,9 +101,14 @@ class ServeEngine:
         self.preemptions = 0         # paged: recompute-preempted admissions
 
     def _bucket(self, n: int) -> int:
-        """Power-of-two prompt bucket (clipped to max_len): bounds the jit
-        prefill cache under mixed-length load."""
-        return min(1 << max(n - 1, 0).bit_length(), self.max_len)
+        """Power-of-two prompt bucket, floored at MIN_BUCKET and clipped to
+        max_len: bounds the jit prefill cache under mixed-length load. The
+        floor keeps 1..7-token prompts from each minting their own compiled
+        program; ``true_len`` fixes up positions/logits so the padding is
+        exact (empty prompts are rejected in ``build_prefill_fn`` — a
+        ``true_len`` of 0 would silently read position 0 of pure padding)."""
+        return min(max(1 << max(n - 1, 0).bit_length(), self.MIN_BUCKET),
+                   self.max_len)
 
     # -- admission ----------------------------------------------------------
 
@@ -269,6 +280,15 @@ class ServeEngine:
             "preemptions": self.preemptions,
         }
         u.update(self.kv.utilization())
+        if self.mesh is not None:
+            u["mesh"] = "x".join(str(self.mesh.shape[a])
+                                 for a in self.mesh.axis_names)
+            u["kv_bytes_per_shard"] = _kv_bytes_per_shard(self.kv.cache)
+            if "kv_blocks_hwm" in u:
+                # resident high-watermark in per-shard bytes (+1: trash row)
+                u["kv_hwm_bytes_per_shard"] = int(
+                    u["kv_bytes_per_shard"] * u["kv_blocks_hwm"]
+                    / (u["kv_blocks_total"] + 1))
         return u
 
     def reset_counters(self) -> None:
@@ -282,6 +302,17 @@ class ServeEngine:
 # ---------------------------------------------------------------------------
 # Reporting
 # ---------------------------------------------------------------------------
+
+def _kv_bytes_per_shard(cache) -> int:
+    """Device bytes one mesh shard holds for the KV store (what "per-shard
+    KV residency" buys: the sharded leaves divide by the model axis)."""
+    import jax
+    total = 0
+    for leaf in jax.tree.leaves(cache):
+        shards = getattr(leaf, "addressable_shards", None)
+        total += shards[0].data.nbytes if shards else leaf.nbytes
+    return int(total)
+
 
 def serve_report(completions: List[Completion], wall_s: float,
                  utilization: Optional[dict] = None) -> dict:

@@ -252,7 +252,20 @@ def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
     return tuple(out)
 
 
-def _make_scatter():
+def _sharding_kwargs(mesh, cache_sharding, n_extra: int, *,
+                     out_replicated: bool = False):
+    """jit kwargs pinning the physical pools per-shard resident: (cache,
+    *extras) -> cache (or a replicated view); every non-cache operand
+    replicated."""
+    if mesh is None:
+        return {}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    repl = NamedSharding(mesh, P())
+    return dict(in_shardings=(cache_sharding,) + (repl,) * n_extra,
+                out_shardings=repl if out_replicated else cache_sharding)
+
+
+def _make_scatter(mesh=None, cache_sharding=None):
     """Jitted ``(cache, kvs, blks, offs, slot, new_pos) -> cache``: write a
     prefilled K/V run into physical (block, offset) destinations and set the
     slot's position. Padding rows target the trash block. Donated: the pool
@@ -269,13 +282,16 @@ def _make_scatter():
             out.append(dict(g, kp=kp, vp=vp, pos=pos))
         return tuple(out)
 
-    return jax.jit(scatter, donate_argnums=(0,))
+    return jax.jit(scatter, donate_argnums=(0,),
+                   **_sharding_kwargs(mesh, cache_sharding, 5))
 
 
-def _make_gather(max_len: int):
+def _make_gather(max_len: int, mesh=None, cache_sharding=None):
     """Jitted ``(cache, table_row (nb,)) -> tuple of {"k","v"}``: assemble
     one slot's logical prefix view (L, 1, max_len, HKV, dh) from the pool —
-    the input the shared-prefix suffix prefill attends over."""
+    the input the shared-prefix suffix prefill attends over. Under a mesh
+    the view is returned replicated (the suffix prefill runs per-request,
+    batch 1, on replicated activations)."""
 
     def gather(cache, row):
         out = []
@@ -288,19 +304,22 @@ def _make_gather(max_len: int):
             out.append({"k": view(g["kp"]), "v": view(g["vp"])})
         return tuple(out)
 
-    return jax.jit(gather)
+    return jax.jit(gather, **_sharding_kwargs(mesh, cache_sharding, 1,
+                                              out_replicated=True))
 
 
-def _make_copy_block():
+def _make_copy_block(mesh=None, cache_sharding=None):
     """Jitted ``(cache, src, dst) -> cache``: device-side block copy — the
-    copy half of copy-on-write. Donated."""
+    copy half of copy-on-write. Donated. Under a mesh each shard copies its
+    own slice of the block (no cross-shard traffic)."""
 
     def copy(cache, src, dst):
         return tuple(dict(g, kp=g["kp"].at[:, dst].set(g["kp"][:, src]),
                           vp=g["vp"].at[:, dst].set(g["vp"][:, src]))
                      for g in cache)
 
-    return jax.jit(copy, donate_argnums=(0,))
+    return jax.jit(copy, donate_argnums=(0,),
+                   **_sharding_kwargs(mesh, cache_sharding, 2))
 
 
 # ---------------------------------------------------------------------------
@@ -314,7 +333,8 @@ class PagedKV:
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
                  max_len: int, sampling=None, bucket_fn=None,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 mesh=None):
         from repro.core.linkage import L3_NSS
         from repro.core.step import build_paged_decode_step, make_sampler
         _check_pageable(cfg, "PagedKV")
@@ -329,6 +349,7 @@ class PagedKV:
         self.trash = num_blocks                      # reserved pool row
         self.K = linkage.decode_steps if linkage.level == L3_NSS else 1
         self.bucket_fn = bucket_fn
+        self.mesh = mesh
 
         self.pool = BlockPool(num_blocks, block_size)
         self.index = PrefixIndex(block_size)
@@ -341,19 +362,38 @@ class PagedKV:
         self.cow_forks = 0
         self.prefix_shared_tokens = 0
 
+        param_sh = cache_sh = None
+        if mesh is not None:
+            from repro.sharding.rules import ArchSharding, named
+            sh = ArchSharding(cfg, mesh)
+            param_sh = named(mesh, sh.serve_param_specs(params))
+            cache_sh = named(mesh, sh.serve_paged_cache_specs(self.cache))
+            self.params = params = jax.device_put(params, param_sh)
+            self.cache = jax.device_put(self.cache, cache_sh)
+
         self._dec = build_paged_decode_step(cfg, opts, linkage, max_len,
-                                            sampling)
+                                            sampling, mesh=mesh,
+                                            param_sharding=param_sh,
+                                            cache_sharding=cache_sh)
         self._sample = jax.jit(make_sampler(sampling))
-        self._scatter = _make_scatter()
-        self._gather = _make_gather(max_len)
-        self._copy = _make_copy_block()
+        self._scatter = _make_scatter(mesh, cache_sh)
+        self._gather = _make_gather(max_len, mesh, cache_sh)
+        self._copy = _make_copy_block(mesh, cache_sh)
         # full-prompt prefill (the no-sharing path) — the same program as
         # the slotted backend's, so non-shared admissions are trivially
         # bit-identical across backends
-        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn)
+        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
+                                        mesh, param_sh)
+        suffix_kwargs = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            repl = NamedSharding(mesh, P())
+            suffix_kwargs = dict(in_shardings=(param_sh,) + (repl,) * 4,
+                                 out_shardings=repl)
         self._suffix = jax.jit(
             lambda p, t, pre, plen, n: prefill_suffix(p, t, pre, plen, cfg,
-                                                      opts, true_len=n))
+                                                      opts, true_len=n),
+            **suffix_kwargs)
 
     # -- allocation ---------------------------------------------------------
 

@@ -92,6 +92,11 @@ class SlotScheduler:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1 (the "
                 "prefill itself yields the first generated token)")
+        if int(np.asarray(req.prompt).shape[0]) < 1:
+            raise ValueError(
+                f"request {req.rid}: prompt must be non-empty (a bucketed "
+                "prefill with true_len == 0 would silently read logits from "
+                "pure padding)")
         self._queue.append(req)
 
     def requeue_front(self, req: Request) -> None:

@@ -243,6 +243,74 @@ class ArchSharding:
 
         return jax.tree_util.tree_map_with_path(walk, cache_tree)
 
+    # -- serving (engine-resident) specs ------------------------------------
+    def serve_param_specs(self, params) -> Any:
+        """Serving weights: tensor-parallel over ``"model"`` where head /
+        expert / ff boundaries divide, replicated over the data axes (the
+        engine keeps weights device-resident — no FSDP re-gather per token).
+        Row-parallel projections (attention/MLP ``wo``) partial-sum over the
+        model axis, so *logits* match the unsharded program only to float
+        accumulation order (~1e-7); greedy/sampled *token streams* are
+        asserted bit-identical in tests/test_mesh_serve.py."""
+        return self.param_specs(params, replicate_fsdp=True)
+
+    def _serve_slot_axis(self, n_slots: int):
+        """Slots shard over the data axes when they divide evenly (each
+        shard owns whole sequences — reductions never cross shards)."""
+        if _div(n_slots, dp_size(self.mesh)):
+            return self.fsdp
+        return None
+
+    def serve_slot_cache_specs(self, cache_tree, n_slots: int) -> Any:
+        """Slot-layout engine cache (leading dim = stacked layers, then the
+        slot axis): KV heads tensor-parallel over ``"model"`` when divisible
+        (per-shard KV residency — each shard holds its heads' slice of every
+        slot), slots over the data axes when divisible. Unlike the training
+        ``cache_specs``, the TIME axis is never sharded: serving identity
+        requires every softmax reduction to stay shard-local."""
+        b = self._serve_slot_axis(n_slots)
+        kv = "model" if self.tp_kv else None
+
+        def walk(path, leaf):
+            names = tuple(p.key if hasattr(p, "key") else "" for p in path)
+            name = names[-1] if names else ""
+            if name in ("k", "v"):                     # (L,B,T,HKV,dh)
+                return P(None, b, None, kv, None)
+            if name in ("xk", "xv"):                   # (L,B,Txc,HKV,dh)
+                return P(None, b, None, kv, None)
+            if name == "slot_pos":                     # (L,B,T)
+                return P(None, b, None)
+            if name == "pos":                          # (L,B)
+                return P(None, b)
+            if name == "conv":                         # (L,B,dconv-1,di)
+                return P(None, b, None, "model" if self.tp_di else None)
+            if name == "ssm":                          # (L,B,di,ds)
+                return P(None, b, "model" if self.tp_di else None, None)
+            if name == "state":                        # (L,B,nh,hd,hd)
+                return P(None, b, "model" if self.tp_rwkv else None,
+                         None, None)
+            if name in ("shift", "shift_mlp"):         # (L,B,1,D)
+                return P(None, b, None, None)
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+    def serve_paged_cache_specs(self, cache_tree) -> Any:
+        """Paged engine cache: the physical block pools shard their KV-head
+        axis over ``"model"`` (one *logical* block table, per-shard physical
+        blocks — each shard resident-holds its heads' slice of every block);
+        per-slot positions stay replicated (tiny, host-mirrored)."""
+        kv = "model" if self.tp_kv else None
+
+        def walk(path, leaf):
+            names = tuple(p.key if hasattr(p, "key") else "" for p in path)
+            name = names[-1] if names else ""
+            if name in ("kp", "vp"):                   # (L,P+1,bs,HKV,dh)
+                return P(None, None, None, kv, None)
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
 
 def named(mesh: Mesh, tree_of_specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,

@@ -1,6 +1,21 @@
-"""Shared fixtures. NOTE: XLA_FLAGS is deliberately NOT set here — smoke
-tests and benches must see the real (1-device) platform; only
-launch/dryrun.py requests 512 placeholder devices (assignment contract)."""
+"""Shared fixtures.
+
+The test process forces 4 virtual host devices (set BEFORE the first jax
+import — jax locks the device count at first initialization) so the sharded
+serving identity matrix (tests/test_mesh_serve.py) can build 1x2 / 2x1 /
+2x2 ``(data, model)`` meshes on CPU CI. Single-device tests are unaffected:
+uncommitted arrays and unsharded jits still resolve to device 0, so every
+pre-mesh test sees exactly the old semantics. The production 512-device
+dry-run still runs via subprocess with its own XLA_FLAGS
+(launch/dryrun.py)."""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
+                                                                ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4"
+                               ).strip()
+
 import jax
 import jax.numpy as jnp
 import pytest

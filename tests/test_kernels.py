@@ -122,6 +122,63 @@ def test_moe_route(N, D, E, K, bn):
     assert (np.asarray(i) == np.asarray(ir)).all()
 
 
+# ---------------------------------------------------------------------------
+# Serving decode kernels vs ref.py oracles: odd-shape parity sweep
+# (non-power-of-two head counts, small block sizes, single-slot edges)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,HQ,HKV,dh,block_t,lives,dt", [
+    (3, 32, 4, 2, 64, 16, (5, 20, 1), jnp.float32),    # mixed occupancy
+    (2, 24, 6, 3, 64, 8, (24, 7), jnp.float32),        # non-pow2 heads (3)
+    (2, 40, 8, 2, 80, 16, (33, 2), jnp.float32),       # odd dh=80, ragged T
+    (1, 8, 4, 4, 64, 8, (1,), jnp.float32),            # single slot, 1 live
+    (2, 32, 4, 1, 128, 16, (31, 16), jnp.bfloat16),    # MQA, bf16
+])
+def test_slot_decode_kernel_parity(B, T, HQ, HKV, dh, block_t, lives, dt):
+    from repro.kernels.slot_decode import slot_decode_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, HQ, dh), dt)
+    k = jax.random.normal(ks[1], (B, T, HKV, dh), dt)
+    v = jax.random.normal(ks[2], (B, T, HKV, dh), dt)
+    valid = np.zeros((B, T), bool)
+    for b, live in enumerate(lives):
+        valid[b, :live] = True
+    valid = jnp.asarray(valid)
+    out = slot_decode_attention(q, k, v, valid, block_t=block_t,
+                                interpret=True)
+    ref = kref.slot_decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("P1,bs,nb,B,HQ,HKV,dh,lives,dt", [
+    (7, 8, 3, 2, 4, 2, 64, (13, 1), jnp.float32),      # mid-block boundary
+    (9, 16, 2, 2, 6, 3, 64, (17, 32), jnp.float32),    # bs=16, non-pow2 heads
+    (5, 8, 2, 1, 8, 2, 80, (9,), jnp.float32),         # single slot, odd dh
+    (4, 16, 1, 3, 4, 4, 64, (1, 16, 7), jnp.float32),  # one logical block
+    (6, 8, 3, 2, 4, 1, 128, (23, 8), jnp.bfloat16),    # MQA, bf16
+])
+def test_paged_decode_kernel_parity(P1, bs, nb, B, HQ, HKV, dh, lives, dt):
+    from repro.kernels.paged_decode import paged_decode_attention
+    ks = jax.random.split(KEY, 4)
+    kp = jax.random.normal(ks[0], (P1, bs, HKV, dh), dt)
+    vp = jax.random.normal(ks[1], (P1, bs, HKV, dh), dt)
+    q = jax.random.normal(ks[2], (B, HQ, dh), dt)
+    # a deterministic permuted block table over the pool (no aliasing)
+    rng = np.random.default_rng(P1 * bs + B)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(P1)[:nb] for _ in range(B)]).astype(np.int32))
+    valid = np.zeros((B, nb * bs), bool)
+    for b, live in enumerate(lives):
+        valid[b, :live] = True
+    out = paged_decode_attention(q, kp, vp, tables, jnp.asarray(valid),
+                                 interpret=True)
+    ref = kref.paged_decode_attention_ref(q, kp, vp, tables,
+                                          jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
 def test_flash_attention_grad_matches_ref():
     """The kernel must be differentiable (used in training at L4)."""
     B, S, H, dh = 1, 64, 2, 64

@@ -1,0 +1,259 @@
+"""Sharded serving: the cross-backend identity matrix over a device mesh.
+
+The load-bearing claim extends PR 1/2's: sharding the engine over a
+``(data, model)`` mesh — weights tensor-parallel over "model", KV heads
+per-shard resident (slot rows and physical block pools alike), slots over
+"data" — changes *placement only*. Every request's token stream must be
+bit-identical to the single-device engine and to running it alone through
+prefill + sequential decode, across {slotted, paged} x {base, nss_shortcut,
+ret_byp_shortcut} x {1x1, 1x2, 2x1}, including shared-prefix CoW and
+recompute-preemption workloads.
+
+The test process runs with 4 forced virtual host devices (tests/conftest.py)
+so the meshes exist on CPU CI. Representatives run in tier-1; the exhaustive
+matrix is marked ``slow`` (--runslow).
+
+Note on "bit-identical": the guarantee is on *token streams*. Row-parallel
+projections partial-sum over the model axis, so logits match the unsharded
+program only to float accumulation order (~1e-7) — which greedy argmax and
+the per-request sampling key chains are insensitive to at these margins.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import preset
+from repro.launch.mesh import make_host_mesh
+from repro.models import ModelOptions, decode_step, init_params, prefill
+from repro.serve import ServeEngine, synthetic_requests
+
+CFG = get_config("tinyllama-1.1b").smoke()
+REF_OPTS = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+MAX_LEN = 48
+
+MESHES = {"1x1": None, "1x2": (1, 2), "2x1": (2, 1)}
+PRESETS = ("base", "nss_shortcut", "ret_byp_shortcut")
+BACKENDS = ("slotted", "paged")
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="mesh serving tests need >= 2 (virtual) devices; see conftest.py")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _linkage_opts(preset_name):
+    lk = preset(preset_name)
+    opts = lk.model_options(REF_OPTS, on_tpu=False) if lk.shortcut \
+        else REF_OPTS
+    return lk, opts
+
+
+def _mesh(mesh_name):
+    shape = MESHES[mesh_name]
+    return None if shape is None else make_host_mesh(*shape)
+
+
+# compiled-program and reference-stream caches: jitting inside helpers would
+# recompile per call (new lambda identity), and the matrix reuses the same
+# sequential references across many cells
+_SEQ_FNS = {}
+_SEQ_STREAMS = {}
+
+
+def sequential_tokens(params, preset_name, req):
+    """Reference: the request alone, prefill + one-token decode loop, at the
+    cell's own ModelOptions (shortcut presets lower through the blockwise
+    forms exactly like the engine does)."""
+    key = (preset_name, req.rid, req.prompt.tobytes(), req.max_new_tokens)
+    if key in _SEQ_STREAMS:
+        return _SEQ_STREAMS[key]
+    if preset_name not in _SEQ_FNS:
+        _, opts = _linkage_opts(preset_name)
+        _SEQ_FNS[preset_name] = (
+            jax.jit(lambda p, t: prefill(p, t, CFG, opts, max_len=MAX_LEN)),
+            jax.jit(lambda p, c, t: decode_step(p, c, t, CFG, opts)))
+    pf, dec = _SEQ_FNS[preset_name]
+    logits, cache = pf(params, jnp.asarray(req.prompt)[None])
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [int(nxt[0])]
+    for _ in range(req.max_new_tokens - 1):
+        logits, cache = dec(params, cache, nxt)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(int(nxt[0]))
+    _SEQ_STREAMS[key] = out
+    return out
+
+
+def run_cell(params, kv, preset_name, mesh_name, reqs, *, n_slots=2, **kw):
+    lk, opts = _linkage_opts(preset_name)
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=n_slots, max_len=MAX_LEN,
+                      kv=kv, mesh=_mesh(mesh_name), **kw)
+    comps, _ = eng.run(reqs, load="closed")
+    assert len(comps) == len(reqs)
+    return {c.rid: c.tokens.tolist() for c in comps}, eng
+
+
+def _matrix_requests():
+    """The identity workload: mixed slot reuse (4 requests, 2 slots) plus an
+    8-token shared prefix so paged cells exercise prefix sharing too."""
+    return synthetic_requests(4, prompt_len=12, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=7,
+                              shared_prefix_len=8)
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 representatives (one per mesh shape, spanning backends and presets)
+# ---------------------------------------------------------------------------
+
+REPRESENTATIVES = [("slotted", "nss_shortcut", "1x2"),
+                   ("paged", "base", "1x2"),
+                   ("paged", "ret_byp_shortcut", "2x1")]
+
+
+@needs_devices
+@pytest.mark.parametrize("kv,preset_name,mesh_name", REPRESENTATIVES)
+def test_mesh_identity_representative(params, kv, preset_name, mesh_name):
+    reqs = _matrix_requests()
+    got, _ = run_cell(params, kv, preset_name, mesh_name, reqs, block_size=8)
+    for req in reqs:
+        want = sequential_tokens(params, preset_name, req)
+        assert got[req.rid] == want, (
+            f"{kv}/{preset_name}/{mesh_name} rid {req.rid}: "
+            f"mesh {got[req.rid]} != sequential {want}")
+
+
+# ---------------------------------------------------------------------------
+# The full matrix (slow): mesh engine == 1-device engine == sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@needs_devices
+@pytest.mark.parametrize("mesh_name", [m for m in MESHES if m != "1x1"])
+@pytest.mark.parametrize("preset_name", PRESETS)
+@pytest.mark.parametrize("kv", BACKENDS)
+def test_mesh_identity_matrix(params, kv, preset_name, mesh_name):
+    reqs = _matrix_requests()
+    # the 1x1 column of the matrix: the single-device engine every mesh cell
+    # must reproduce (itself asserted against sequential below)
+    one_dev, _ = run_cell(params, kv, preset_name, "1x1", reqs, block_size=8)
+    got, eng = run_cell(params, kv, preset_name, mesh_name, reqs,
+                        block_size=8)
+    assert got == one_dev, f"{kv}/{preset_name}/{mesh_name} != 1-device"
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, preset_name, req), (
+            kv, preset_name, mesh_name, req.rid)
+    if kv == "paged":
+        assert eng.utilization()["kv_prefix_shared_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix CoW and recompute-preemption under sharding (tier-1)
+# ---------------------------------------------------------------------------
+
+@needs_devices
+def test_mesh_paged_cow_identity(params):
+    """Identical prompts on a 1x2 mesh: later admissions are full-prefix
+    radix hits, prefill one token, and CoW-fork the tail block — each shard
+    copying its own slice. Streams match the 1-device paged engine and
+    sequential decode."""
+    base = synthetic_requests(1, prompt_len=16, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=9)[0]
+    reqs = [dataclasses.replace(base, rid=i) for i in range(3)]
+    one_dev, _ = run_cell(params, "paged", "base", "1x1", reqs, block_size=8)
+    got, eng = run_cell(params, "paged", "base", "1x2", reqs, block_size=8)
+    assert got == one_dev
+    u = eng.utilization()
+    assert u["kv_cow_forks"] >= 2                   # rids 1,2 forked the tail
+    assert u["kv_prefix_shared_tokens"] == 15 * 2   # P-1 shared each
+    want = sequential_tokens(params, "base", base)
+    for rid in got:
+        assert got[rid] == want
+
+
+@needs_devices
+def test_mesh_paged_preemption_identity(params):
+    """A pool far smaller than worst-case forces recompute-preemption on the
+    mesh; preempted requests replay bit-identically on re-admission, same as
+    on one device."""
+    reqs = synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                              vocab_size=CFG.vocab_size, seed=3)
+    kw = dict(n_slots=3, block_size=4, num_blocks=9)
+    one_dev, _ = run_cell(params, "paged", "base", "1x1", reqs, **kw)
+    got, eng = run_cell(params, "paged", "base", "1x2", reqs, **kw)
+    assert got == one_dev
+    assert eng.preemptions > 0
+    assert eng.kv.pool.hwm <= 9
+
+
+# ---------------------------------------------------------------------------
+# Sampling on the mesh: streams are a function of (request, seed) only
+# ---------------------------------------------------------------------------
+
+@needs_devices
+def test_mesh_sampling_replays(params):
+    """Per-request sampling key chains thread through the sharded decode
+    program unchanged: sampled streams match the 1-device engine exactly."""
+    from repro.core import SamplingConfig
+    sc = SamplingConfig(temperature=0.7, top_k=16, seed=42)
+    reqs = synthetic_requests(2, prompt_len=8, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=2)
+    one_dev, _ = run_cell(params, "slotted", "base", "1x1", reqs,
+                          sampling=sc)
+    got, _ = run_cell(params, "slotted", "base", "1x2", reqs, sampling=sc)
+    assert got == one_dev
+    greedy, _ = run_cell(params, "slotted", "base", "1x2", reqs)
+    assert got != greedy                            # it actually sampled
+
+
+# ---------------------------------------------------------------------------
+# The memory claim: per-shard KV residency (no decode run needed — engines
+# build their sharded state eagerly, programs compile lazily)
+# ---------------------------------------------------------------------------
+
+@needs_devices
+def test_mesh_shards_kv_memory_and_specs(params):
+    from jax.sharding import PartitionSpec as P
+    lk, opts = _linkage_opts("base")
+    mesh = make_host_mesh(1, 2)
+
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                      kv="slotted", mesh=mesh)
+    k = eng.kv.cache[0]["k"]                       # (L, B, T, HKV, dh)
+    assert k.sharding.spec[3] == "model"           # KV heads tensor-parallel
+    assert k.addressable_shards[0].data.nbytes == k.nbytes // 2
+    # weights are tensor-parallel too (smoke tinyllama: 4 heads, 2 kv heads)
+    wq = eng.kv.params["blocks"][0]["mixer"]["wq"]
+    assert "model" in tuple(wq.sharding.spec)
+
+    eng_p = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                        kv="paged", block_size=8, mesh=mesh)
+    kp = eng_p.kv.cache[0]["kp"]                   # (L, P+1, bs, HKV, dh)
+    assert kp.sharding.spec == P(None, None, None, "model", None)
+    assert kp.addressable_shards[0].data.nbytes == kp.nbytes // 2
+    # one *logical* block table drives the per-shard physical pools
+    assert isinstance(eng_p.kv.tables_host, np.ndarray)
+
+    # slots shard over "data" on a 2x1 mesh
+    eng_d = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                        kv="slotted", mesh=make_host_mesh(2, 1))
+    k = eng_d.kv.cache[0]["k"]
+    slot_axis = k.sharding.spec[1]
+    assert "data" in (slot_axis if isinstance(slot_axis, tuple)
+                      else (slot_axis,))
+    assert k.addressable_shards[0].data.nbytes == k.nbytes // 2
+
+
+@needs_devices
+def test_mesh_requires_jitted_linkage(params):
+    with pytest.raises(ValueError, match="jitted linkage"):
+        ServeEngine(CFG, params, REF_OPTS, preset("linux"), n_slots=1,
+                    max_len=16, mesh=make_host_mesh(1, 2))

@@ -139,6 +139,92 @@ def test_prefix_index_interior_not_evictable_while_child_held():
 # ---------------------------------------------------------------------------
 
 
+def test_pool_scheduler_differential_deterministic():
+    """Deterministic twin of test_properties.PoolSchedulerMachine (runs even
+    without the optional hypothesis dep): a seeded random admit /
+    demand-reserve / CoW-fork / finish / preempt sequence through a real
+    BlockPool, differentially checked against a pure-Python model of
+    refcounts and free-list size after every operation."""
+    rng = np.random.default_rng(42)
+    N = 12
+    pool = BlockPool(N, block_size=4)
+    refs = {}                       # blk -> modeled refcount
+    chains = {}                     # slot -> [blk]
+    order = []                      # admission order (youngest last)
+    next_slot = [0]
+
+    def alloc():
+        blk = pool.alloc()
+        if blk is None:
+            assert pool.n_free == 0
+            return None
+        assert refs.get(blk, 0) == 0
+        assert blk == min(set(range(N)) - set(refs))   # lowest-free-first
+        refs[blk] = 1
+        return blk
+
+    def drop(blk):
+        pool.free(blk)
+        refs[blk] -= 1
+        if refs[blk] == 0:
+            del refs[blk]
+
+    def teardown(slot):
+        for b in chains.pop(slot):
+            drop(b)
+        order.remove(slot)
+
+    for op in rng.integers(0, 5, size=400):
+        if op == 0:                                    # admit (maybe shared)
+            n = int(rng.integers(1, 5))
+            chain = []
+            if rng.random() < 0.5 and order:
+                for blk in chains[order[0]][:n - 1]:
+                    pool.retain(blk)
+                    refs[blk] += 1
+                    chain.append(blk)
+            ok = True
+            while len(chain) < n:
+                blk = alloc()
+                if blk is None:
+                    for b in chain:
+                        drop(b)
+                    ok = False
+                    break
+                chain.append(blk)
+            if ok:
+                chains[next_slot[0]] = chain
+                order.append(next_slot[0])
+                next_slot[0] += 1
+        elif op == 1 and chains:                       # demand-reserve
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            blk = alloc()
+            if blk is not None:
+                chains[slot].append(blk)
+        elif op == 2:                                  # CoW fork
+            shared = [(s, i) for s, c in chains.items()
+                      for i, b in enumerate(c) if pool.refs[b] > 1]
+            if shared:
+                slot, i = shared[int(rng.integers(len(shared)))]
+                new = alloc()
+                if new is not None:
+                    drop(chains[slot][i])
+                    chains[slot][i] = new
+        elif op == 3 and chains:                       # finish
+            teardown(sorted(chains)[int(rng.integers(len(chains)))])
+        elif op == 4 and order:                        # preempt youngest
+            teardown(order[-1])
+        # differential invariants, every step
+        for blk in range(N):
+            assert pool.refs[blk] == refs.get(blk, 0), blk
+        assert pool.n_free == N - len(refs)
+        assert pool.n_resident == len(refs)
+        assert pool.n_resident <= pool.hwm <= N
+    for slot in list(order):                           # clean teardown
+        teardown(slot)
+    assert pool.n_free == N and (pool.refs == 0).all()
+
+
 def test_pool_random_workload_refcounts_exact():
     """Deterministic version of the hypothesis pool property (runs even
     without the optional dep): random alloc/retain/free interleavings keep

@@ -8,6 +8,8 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional hypothesis dep "
     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
 
 from repro.kernels import ref as kref
 from repro.models import layers as L
@@ -204,6 +206,124 @@ def test_block_pool_refcount_invariants(ops, num_blocks):
         for b in set(live):
             assert pool.refs[b] == live.count(b)
     assert pool.hwm <= num_blocks
+
+
+class PoolSchedulerMachine(RuleBasedStateMachine):
+    """Differential fuzz of the serving allocator: drive random admit /
+    demand-reserve / CoW-fork / finish / preempt sequences (the engine's
+    block-level lifecycle) through a real ``BlockPool`` while mirroring
+    every reference in a pure-Python model of refcounts + free-list size.
+    Any divergence shrinks to a minimal op sequence (hypothesis stateful).
+    """
+
+    NUM_BLOCKS = 12
+
+    def __init__(self):
+        super().__init__()
+        from repro.serve import BlockPool
+        self.pool = BlockPool(self.NUM_BLOCKS, block_size=4)
+        self.refs = {}                 # blk -> modeled refcount (absent = 0)
+        self.chains = {}               # slot -> [blk] (a live block table)
+        self.order = []                # admission order (youngest = last)
+        self.next_slot = 0
+
+    # -- model helpers ------------------------------------------------------
+    def _alloc(self):
+        blk = self.pool.alloc()
+        if blk is None:
+            assert self.pool.n_free == 0, "alloc failed with blocks free"
+            return None
+        assert self.refs.get(blk, 0) == 0, "pool handed out a live block"
+        # determinism: lowest free id first (schedule-replay invariant)
+        assert blk == min(set(range(self.NUM_BLOCKS)) - set(self.refs))
+        self.refs[blk] = 1
+        return blk
+
+    def _drop(self, blk):
+        self.pool.free(blk)
+        self.refs[blk] -= 1
+        if self.refs[blk] == 0:
+            del self.refs[blk]
+
+    def _teardown(self, slot):
+        for b in self.chains.pop(slot):
+            self._drop(b)
+        self.order.remove(slot)
+
+    # -- engine-shaped operations -------------------------------------------
+    @rule(n=st.integers(1, 4), share=st.booleans())
+    def admit(self, n, share):
+        """Admission: allocate a prompt's chain; with ``share``, retain a
+        prefix of the oldest chain first (the radix-hit analogue)."""
+        chain = []
+        if share and self.order:
+            donor = self.chains[self.order[0]]
+            for blk in donor[:n - 1]:
+                self.pool.retain(blk)
+                self.refs[blk] += 1
+                chain.append(blk)
+        while len(chain) < n:
+            blk = self._alloc()
+            if blk is None:                 # pool dry: roll the admit back
+                for b in chain:
+                    self._drop(b)
+                return
+            chain.append(blk)
+        self.chains[self.next_slot] = chain
+        self.order.append(self.next_slot)
+        self.next_slot += 1
+
+    @precondition(lambda self: self.chains)
+    @rule(data=st.data())
+    def reserve_next_block(self, data):
+        """Decode crossing a block boundary: demand-allocate one block."""
+        slot = data.draw(st.sampled_from(sorted(self.chains)))
+        blk = self._alloc()
+        if blk is not None:
+            self.chains[slot].append(blk)
+
+    @rule(data=st.data())
+    def cow_fork(self, data):
+        """Write into a shared block: fork it (alloc + swap + decref)."""
+        shared = [(s, i) for s, c in self.chains.items()
+                  for i, b in enumerate(c) if self.pool.refs[b] > 1]
+        if not shared:
+            return
+        slot, i = data.draw(st.sampled_from(shared))
+        new = self._alloc()
+        if new is None:
+            return
+        self._drop(self.chains[slot][i])
+        self.chains[slot][i] = new
+
+    @precondition(lambda self: self.chains)
+    @rule(data=st.data())
+    def finish(self, data):
+        """Completion: free the slot's whole chain."""
+        self._teardown(data.draw(st.sampled_from(sorted(self.chains))))
+
+    @precondition(lambda self: self.order)
+    @rule()
+    def preempt_youngest(self):
+        """Recompute-preemption: the youngest admission releases its chain."""
+        self._teardown(self.order[-1])
+
+    # -- differential invariants --------------------------------------------
+    @invariant()
+    def refcounts_match_model(self):
+        for blk in range(self.NUM_BLOCKS):
+            assert self.pool.refs[blk] == self.refs.get(blk, 0), blk
+
+    @invariant()
+    def free_list_size_exact(self):
+        assert self.pool.n_free == self.NUM_BLOCKS - len(self.refs)
+        assert self.pool.n_resident == len(self.refs)
+        assert self.pool.n_resident <= self.pool.hwm <= self.NUM_BLOCKS
+
+
+PoolSchedulerMachine.TestCase.settings = settings(
+    max_examples=20, stateful_step_count=40, deadline=None)
+TestPoolSchedulerDifferential = PoolSchedulerMachine.TestCase
 
 
 @settings(**SETTINGS)

@@ -306,6 +306,46 @@ def test_bucketed_prompts_identical_streams(params):
         assert bucketed[req.rid] == sequential_tokens(params, req)
 
 
+def test_bucket_floor_and_short_prompts(params):
+    """Satellite fix: buckets are floored at MIN_BUCKET so 1..7-token
+    prompts share one compiled prefill instead of one program per tiny
+    length, and prompts shorter than the smallest bucket still stream
+    exactly (``true_len`` fixes up positions/logits)."""
+    reqs = synthetic_requests(4, prompt_len=0, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=13,
+                              prompt_lens=[1, 2, 3, 5])
+    plain, _ = _greedy_streams(params, reqs, preset("byp"))
+    bucketed, eng = _greedy_streams(params, reqs, preset("byp"),
+                                    bucket_prompts=True)
+    assert plain == bucketed
+    assert eng._bucket(1) == eng._bucket(7) == eng.MIN_BUCKET == 8
+    assert eng._bucket(9) == 16
+    for req in reqs:
+        assert bucketed[req.rid] == sequential_tokens(params, req)
+
+
+def test_empty_prompt_rejected_not_padded(params):
+    """An empty prompt would bucket-prefill with true_len == 0 and silently
+    read logits from position 0 of pure padding — both the scheduler and
+    the prefill builder reject it instead."""
+    from repro.core import build_prefill_fn
+    s = SlotScheduler(1)
+    with pytest.raises(ValueError, match="non-empty"):
+        s.enqueue(Request(rid=0, prompt=np.zeros(0, np.int32),
+                          max_new_tokens=2))
+    fn = build_prefill_fn(CFG, OPTS, MAX_LEN, bucket_fn=lambda n: 8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        fn(params, np.zeros((0,), np.int32))
+    plain = build_prefill_fn(CFG, OPTS, MAX_LEN)
+    with pytest.raises(ValueError, match="empty prompt"):
+        plain(params, np.zeros((0,), np.int32))
+    # a bucket_fn that under-covers the prompt is a loud error, not a
+    # silent truncation
+    bad = build_prefill_fn(CFG, OPTS, MAX_LEN, bucket_fn=lambda n: 4)
+    with pytest.raises(ValueError, match="smaller than the prompt"):
+        bad(params, np.zeros((6,), np.int32))
+
+
 # ---------------------------------------------------------------------------
 # Co-processes
 # ---------------------------------------------------------------------------

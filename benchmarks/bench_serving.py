@@ -20,11 +20,113 @@ footprint/high-watermark — what tensor-parallel slot/block pools buy.
 """
 from __future__ import annotations
 
+import json
+
 from benchmarks.common import row
 from repro.launch.serve import run_engine, run_server
 
 PRESETS = ["base", "byp", "ret_byp", "ret_byp_shortcut", "nss_shortcut"]
 PAGED_PRESETS = ["base", "nss_shortcut"]
+CHUNKED_PROMPT_LENS = [32, 128, 512]
+BENCH_JSON = "BENCH_serving.json"
+
+
+def _stall_cell(chunked: bool, budget: int):
+    """The decode-stall scenario chunking exists for: a long-generation
+    victim is mid-decode when 512-token prompts start arriving. In the
+    two-phase engine every admission runs a blocking whole-prompt prefill
+    — the victim's worst inter-token gap is the prefill duration; chunked
+    bounds it at one budget-packed step."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.launch.serve import _setup
+    from repro.serve import (Request, ServeEngine, serve_report,
+                             synthetic_requests)
+
+    cfg, lk, opts, params = _setup("tinyllama-1.1b", "nss_shortcut",
+                                   gen_len=64, decode_steps=8)
+    rng = np.random.default_rng(0)
+    prompt = lambda n: rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+    victim = Request(rid=0, prompt=prompt(16), max_new_tokens=64)
+    longs = [Request(rid=i, prompt=prompt(512), max_new_tokens=4,
+                     arrival_s=0.03 * i) for i in (1, 2, 3)]
+    kw = dict(chunked=True, chunk_budget=budget) if chunked else {}
+    eng = ServeEngine(cfg, params, opts, lk, n_slots=2, max_len=600,
+                      kv="paged", block_size=16, **kw)
+    # warmup: compile the prefill/serve/decode shapes outside the timed run
+    warm = [dataclasses.replace(victim, rid=100),
+            dataclasses.replace(longs[0], rid=101, arrival_s=0.0)]
+    eng.run(warm, load="closed")
+    eng.kv.drop_prefix_cache()
+    eng.reset_counters()
+    comps, wall = eng.run([victim] + longs, load="open")
+    rep = serve_report(comps, wall, utilization=eng.utilization())
+    rep["workload"] = "decode_stall_under_admission"
+    rep["victim_max_stall_s"] = float(
+        next(c for c in comps if c.rid == 0).max_stall_s)
+    return rep
+
+
+def run_chunked(budget: int = 64, json_rows=None):
+    """Two-phase vs chunked, three lenses:
+
+    1. decode-heavy closed loop — chunked's pure-decode fast path IS the
+       two-phase decode program, so throughput must match;
+    2. the prompt-length sweep {32,128,512} — the TTFT-vs-throughput trade
+       the budget knob controls (splitting a prompt over N programs costs
+       program dispatches; what it buys is lens 3);
+    3. decode stall under admission — the victim's worst inter-token gap
+       while 512-token prompts arrive: blocking whole-prompt prefills vs
+       budget-bounded steps.
+    """
+    cells = {}
+    for mode, kw in [("two_phase", {}),
+                     ("chunked", {"chunked": True, "budget": budget})]:
+        rep = run_engine("tinyllama-1.1b", "nss_shortcut", n_slots=4,
+                         prompt_len=16, gen_len=48, requests=8,
+                         load="closed", decode_steps=8, kv="paged",
+                         block_size=16, **kw)
+        rep["workload"] = "decode_heavy"
+        cells[mode] = rep
+        row(f"table7_decode_heavy_{mode}", rep["mean_latency_s"] * 1e6,
+            f"tokens_per_s={rep['tokens_per_s']:.0f};"
+            f"programs={rep['programs_run']}")
+        if json_rows is not None:
+            json_rows.append(rep)
+    row("table7_decode_heavy_tput_ratio",
+        cells["chunked"]["tokens_per_s"] / cells["two_phase"]["tokens_per_s"]
+        * 1e6,
+        f"chunked_vs_two_phase="
+        f"{cells['chunked']['tokens_per_s'] / cells['two_phase']['tokens_per_s']:.2f}x")
+
+    for plen in CHUNKED_PROMPT_LENS:
+        for mode, kw in [("two_phase", {}),
+                         ("chunked", {"chunked": True, "budget": budget})]:
+            rep = run_engine("tinyllama-1.1b", "nss_shortcut", n_slots=4,
+                             prompt_len=plen, gen_len=16, requests=6,
+                             load="closed", decode_steps=8, kv="paged",
+                             block_size=16, **kw)
+            rep["workload"] = f"prompt_sweep_p{plen}"
+            row(f"table7_chunked_p{plen}_{mode}",
+                rep["mean_latency_s"] * 1e6,
+                f"tokens_per_s={rep['tokens_per_s']:.0f};"
+                f"p50_ttft_s={rep['p50_ttft_s']:.4f};"
+                f"p50_prefill_s={rep['p50_prefill_s']:.4f};"
+                f"programs={rep['programs_run']};"
+                f"prefill_tok_per_step={rep.get('prefill_tokens_per_step', 0)}")
+            if json_rows is not None:
+                json_rows.append(rep)
+
+    for mode, chunked in [("two_phase", False), ("chunked", True)]:
+        rep = _stall_cell(chunked, budget)
+        row(f"table7_stall_{mode}", rep["victim_max_stall_s"] * 1e6,
+            f"victim_max_stall_s={rep['victim_max_stall_s']:.4f};"
+            f"max_decode_stall_s={rep['max_decode_stall_s']:.4f};"
+            f"tokens_per_s={rep['tokens_per_s']:.0f}")
+        if json_rows is not None:
+            json_rows.append(rep)
 
 
 def run_mesh(mesh: str):
@@ -50,7 +152,8 @@ def run_mesh(mesh: str):
             f"kv_bytes_per_shard={rep['kv_bytes_per_shard']}")
 
 
-def run(mesh: str = ""):
+def run(mesh: str = "", budget: int = 64):
+    json_rows = []
     seq = run_server("tinyllama-1.1b", "base", batch=4, prompt_len=32,
                      gen_len=32, requests=8)
     row("table4_serving_sequential_base",
@@ -93,8 +196,15 @@ def run(mesh: str = ""):
                 f"cow_forks={rep['kv_cow_forks']};"
                 f"shared_tokens={rep['kv_prefix_shared_tokens']}")
 
+    run_chunked(budget=budget, json_rows=json_rows)
+
     if mesh:
         run_mesh(mesh)
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(json_rows, f, indent=1)
+    print(f"# wrote {len(json_rows)} chunked-vs-two-phase rows to "
+          f"{BENCH_JSON}")
 
 
 if __name__ == "__main__":
@@ -104,4 +214,7 @@ if __name__ == "__main__":
                     help="also run sharded-serving rows on a 'data,model' "
                          "mesh (CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count first)")
-    run(mesh=ap.parse_args().mesh)
+    ap.add_argument("--budget", type=int, default=64,
+                    help="chunked rows: target tokens per serve step")
+    args = ap.parse_args()
+    run(mesh=args.mesh, budget=args.budget)

@@ -18,10 +18,16 @@ python -m repro.launch.serve --preset nss_shortcut --load open \
     --requests 4 --slots 2 --prompt-len 16 --gen-len 16 \
     --kv paged --block-size 8 --shared-prefix-len 8
 
-echo "== smoke: slotted-vs-paged token identity =="
-python scripts/paged_smoke.py
+echo "== smoke: slotted-vs-paged token identity (incl. chunked prefill) =="
+python scripts/paged_smoke.py --chunked
 
-echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh) =="
-python scripts/paged_smoke.py --mesh 1,2
+echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh, "
+echo "          two-phase + chunked engines) =="
+python scripts/paged_smoke.py --chunked --mesh 1,2
+
+echo "== smoke: chunked-prefill serve launcher (open-loop) =="
+python -m repro.launch.serve --preset nss_shortcut --load open \
+    --requests 4 --slots 2 --prompt-len 16 --gen-len 16 \
+    --kv paged --block-size 8 --chunked --budget 16
 
 echo "CI OK"

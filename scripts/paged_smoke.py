@@ -5,13 +5,18 @@ Runs the same shared-prefix request list through both KV backends at a fused
 subsystem's UKL-style invariant (specialization without app-visible change)
 checked end-to-end on every CI run, faster than the full pytest matrix.
 
-With ``--mesh data,model`` (e.g. ``--mesh 1,2``) both engines run sharded
+With ``--chunked`` both backends ALSO run in chunked-prefill mode (the
+unified serve step: decode tokens first, budget-packed prompt chunks after)
+and every chunked stream must match the two-phase streams as well — four
+engines, one token matrix.
+
+With ``--mesh data,model`` (e.g. ``--mesh 1,2``) every engine runs sharded
 over a host device mesh (weights tensor-parallel over "model", per-shard KV
 residency) and the same identity must hold — the multi-device smoke of
 tests/test_mesh_serve.py. Virtual CPU devices are forced automatically when
 the mesh needs more than the host has.
 
-Usage: PYTHONPATH=src python scripts/paged_smoke.py [--mesh 1,2]
+Usage: PYTHONPATH=src python scripts/paged_smoke.py [--chunked] [--mesh 1,2]
 """
 from __future__ import annotations
 
@@ -24,17 +29,23 @@ def _parse_args(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--mesh", default="",
                    help="serving mesh 'data,model' (empty = single device)")
+    p.add_argument("--chunked", action="store_true",
+                   help="also run both backends with chunked prefill and "
+                        "assert identity against the two-phase streams")
+    p.add_argument("--budget", type=int, default=6,
+                   help="chunked: tokens per serve step (small by default "
+                        "so the smoke prompts split into several chunks)")
     return p.parse_args(argv)
 
 
-# XLA locks the host device count at first jax init, so the mesh flag must
-# be handled before any jax import.
+# XLA locks the host device count at first use, so the mesh flag must be
+# handled before jax initializes a backend (mesh_device_count is pure
+# string parsing — see repro.launch.mesh).
 _ARGS = _parse_args()
 if _ARGS.mesh and "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
-    _need = 1
-    for _p in _ARGS.mesh.split(","):
-        _need *= max(int(_p), 1)
+    from repro.launch.mesh import mesh_device_count
+    _need = mesh_device_count(_ARGS.mesh)
     if _need > 1:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
@@ -61,24 +72,34 @@ def main() -> int:
                               vocab_size=cfg.vocab_size, seed=0,
                               shared_prefix_len=8)
 
+    cells = [("slotted", False), ("paged", False)]
+    if _ARGS.chunked:
+        cells += [("slotted", True), ("paged", True)]
     streams = {}
-    for kv in ("slotted", "paged"):
+    for kv, chunked in cells:
+        kw = dict(chunked=True, chunk_budget=_ARGS.budget) if chunked else {}
         eng = ServeEngine(cfg, params, opts, lk, n_slots=2, max_len=32,
-                          kv=kv, block_size=8, mesh=mesh)
+                          kv=kv, block_size=8, mesh=mesh, **kw)
         comps, _ = eng.run(reqs, load="closed")
-        streams[kv] = {c.rid: c.tokens.tolist() for c in comps}
-        print(f"{kv}: {eng.utilization()}")
+        name = f"{kv}{'+chunked' if chunked else ''}"
+        streams[name] = {c.rid: c.tokens.tolist() for c in comps}
+        print(f"{name}: {eng.utilization()}")
 
-    if streams["slotted"] != streams["paged"]:
-        print("FAIL: paged streams diverge from slotted", file=sys.stderr)
-        for rid in sorted(streams["slotted"]):
-            s, p = streams["slotted"][rid], streams["paged"][rid]
-            if s != p:
-                print(f"  rid {rid}: slotted={s} paged={p}", file=sys.stderr)
+    names = list(streams)
+    baseline = streams[names[0]]
+    bad = [n for n in names[1:] if streams[n] != baseline]
+    if bad:
+        print(f"FAIL: streams diverge from {names[0]}: {bad}",
+              file=sys.stderr)
+        for n in bad:
+            for rid in sorted(baseline):
+                if streams[n][rid] != baseline[rid]:
+                    print(f"  {n} rid {rid}: {streams[n][rid]} != "
+                          f"{baseline[rid]}", file=sys.stderr)
         return 1
     tag = f" on mesh {_ARGS.mesh}" if mesh is not None else ""
     print(f"paged smoke OK: {len(reqs)} shared-prefix requests bit-identical "
-          f"across KV backends{tag}")
+          f"across {len(cells)} engines ({', '.join(names)}){tag}")
     return 0
 
 

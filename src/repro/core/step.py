@@ -20,7 +20,9 @@ from repro.core.linkage import L0_EAGER, L3_NSS, LinkageConfig
 from repro.models import (init_params, loss_fn, prefill,
                           decode_step as model_decode,
                           decode_step_paged as model_decode_paged,
-                          decode_step_slots as model_decode_slots)
+                          decode_step_slots as model_decode_slots,
+                          serve_chunk_step as model_serve_chunk,
+                          serve_chunk_step_paged as model_serve_chunk_paged)
 from repro.models.layers import ModelOptions
 from repro.optim import adamw
 from repro.sharding.rules import ArchSharding, named
@@ -395,6 +397,118 @@ def build_paged_decode_step(cfg: ArchConfig, opts: ModelOptions,
         return eager
     return jax.jit(fn, **_serve_jit_kwargs(linkage, mesh, param_sharding,
                                            cache_sharding, n_extra=1))
+
+
+def build_serve_step(cfg: ArchConfig, opts: ModelOptions,
+                     linkage: LinkageConfig, max_len: int,
+                     sampling: Optional[SamplingConfig] = None, *,
+                     kv_kind: str = "slotted", mesh: Optional[Mesh] = None,
+                     param_sharding=None, cache_sharding=None) -> Callable:
+    """The *unified* serve program: one jitted entry per engine step.
+
+    Chunked-prefill serving has no separate prefill phase — every program
+    is [chunk pass] + [K fused decode microsteps]:
+
+      1. Chunk pass: each slot absorbs its own variable-length prompt chunk
+         (decode/empty slots carry a zero-length chunk), K/V written then
+         attended with per-row positions; rows whose chunk completes their
+         prompt sample their first token from the chunk's last-position
+         logits (``emit0`` gates the sampling-key advance).
+      2. Decode scan: the linkage level's K microsteps — exactly the
+         two-phase engine's decode body — advance the rows already past
+         prefill (``dec_mask`` gates their key chains; other rows' garbage
+         writes land beyond their resident positions / in the trash block
+         and are invisible to the chunk pass's causal mask).
+
+    Signature (slotted):
+      (params, cache, chunk_tokens (B,W) i32, clen (B,) i32, start (B,) i32,
+       reset (B,) bool, emit0 (B,) bool, dec_tok (B,) i32, dec_mask (B,)
+       bool, keys (B,2) u32) -> (cache, t0 (B,) i32, seq (B,K) i32, keys)
+    paged adds trailing ``tables (B,nb)`` (chunk pass) and ``scan_tables``
+    (decode scan: mid-prefill/empty rows redirected wholesale to trash).
+
+    W (the compiled chunk width) is implicit in the traced shapes — the
+    engine pads every step to one fixed width, so this program jits a
+    single shape where the two-phase engine compiled one prefill per
+    bucket (the engine dispatches the plain decode program instead when no
+    slot is mid-prefill, so steady-state decode pays no chunk pass; masked
+    rows must therefore leave the cache — including per-row positions —
+    bit-exact, which the selects below enforce). With ``mesh``, prefill
+    chunks ride
+    the same (data, model) shardings as decode: weights tensor-parallel,
+    cache per-shard resident, every host-built operand replicated
+    (``ArchSharding.serve_chunk_operand_specs``) — there is no replicated
+    batch-1 prefill program left.
+    """
+    linkage.validate()
+    sampler = make_sampler(sampling)
+    K = linkage.decode_steps if linkage.level == L3_NSS else 1
+    paged = kv_kind == "paged"
+    if kv_kind not in ("slotted", "paged"):
+        raise ValueError(f"unknown kv_kind {kv_kind!r}")
+
+    def fn(params, cache, chunk_toks, clen, start, reset, emit0, dec_tok,
+           dec_mask, keys, *tabs):
+        if paged:
+            tables, scan_tables = tabs
+            logits, cache = model_serve_chunk_paged(
+                params, cache, chunk_toks, tables, start, clen, cfg, opts,
+                max_len)
+        else:
+            logits, cache = model_serve_chunk(
+                params, cache, chunk_toks, start, clen, reset, cfg, opts)
+        t0, keys_c = sampler(logits, keys)
+        keys = jnp.where(emit0[:, None], keys_c, keys)
+
+        def body(carry, _):
+            c, toks, ks = carry
+            if paged:
+                # non-decode rows were redirected wholesale to the trash
+                # block via scan_tables — their garbage never lands — but
+                # they must also keep their per-row position: the engine's
+                # pure-decode fast path trusts device pos between programs
+                lg, c2 = model_decode_paged(params, c, toks, scan_tables,
+                                            cfg, opts, max_len)
+                c = tuple(dict(g2, pos=jnp.where(dec_mask[None, :],
+                                                 g2["pos"], g["pos"]))
+                          for g2, g in zip(c2, c))
+            else:
+                # non-decode rows keep their cache bit-exact: a garbage
+                # microstep write would wrap the circular row (pos % T) and
+                # clobber resident prefill state whenever pos + K > T
+                lg, c2 = model_decode_slots(params, c, toks, cfg, opts)
+                c = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        dec_mask.reshape((1, -1) + (1,) * (new.ndim - 2)),
+                        new, old), c2, c)
+            nxt, ks2 = sampler(lg, ks)
+            ks = jnp.where(dec_mask[:, None], ks2, ks)
+            return (c, nxt, ks), nxt
+
+        (cache, _, keys), seq = lax.scan(body, (cache, dec_tok, keys), None,
+                                         length=K)
+        return cache, t0, seq.swapaxes(0, 1), keys
+
+    if linkage.level == L0_EAGER:
+        if mesh is not None:
+            raise ValueError("mesh serving needs a jitted linkage level")
+
+        def eager(*args):
+            with jax.disable_jit():
+                return fn(*args)
+        return eager
+
+    kwargs: Dict[str, Any] = {}
+    if linkage.donate:
+        kwargs["donate_argnums"] = (1,)
+    if mesh is not None:
+        operand_specs = ArchSharding(cfg, mesh).serve_chunk_operand_specs(
+            paged)
+        kwargs["in_shardings"] = (param_sharding, cache_sharding) + tuple(
+            NamedSharding(mesh, s) for s in operand_specs)
+        repl = NamedSharding(mesh, P())
+        kwargs["out_shardings"] = (cache_sharding, repl, repl, repl)
+    return jax.jit(fn, **kwargs)
 
 
 def build_prefill_fn(cfg: ArchConfig, opts: ModelOptions, max_len: int, *,

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import (decode_attention as _dec, flash_attention as _fa,
                            mamba_ssm as _mamba, moe_route as _route,
-                           paged_decode as _paged, rmsnorm as _rms,
+                           paged_decode as _paged,
+                           paged_prefill as _paged_pf, rmsnorm as _rms,
                            rwkv6 as _rwkv, slot_decode as _slot)
 
 
@@ -70,6 +71,18 @@ def paged_decode_attention(q, kp, vp, tables, pos):
     out = _paged.paged_decode_attention(q[:, 0], kp, vp, tables, valid,
                                         interpret=_interpret())
     return out[:, None]
+
+
+def paged_prefill_attention(q, kp, vp, tables, start):
+    """Paged chunked-prefill: every slot's prompt chunk attends over its
+    resident block chain (the rectangular generalization of paged decode).
+
+    q: (B,W,HQ,dh) chunk queries (the chunk's own K/V already scattered into
+    the pools); kp/vp: (P+1,bs,HKV,dh) physical pools; tables: (B,nb) int32
+    logical->physical map; start: (B,) first chunk position per row.
+    """
+    return _paged_pf.paged_prefill_attention(q, kp, vp, tables, start,
+                                             interpret=_interpret())
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256):

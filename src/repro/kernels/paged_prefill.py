@@ -1,0 +1,140 @@
+"""Paged *prefill* attention: flash chunk-attention over a block-table cache.
+
+The chunked-prefill serve step (``repro.core.step.build_serve_step``) hands
+every slot a variable-length prompt chunk whose K/V was just scattered into
+the slot's physical blocks. This kernel computes the chunk's queries against
+the slot's whole resident prefix — the rectangular (W queries x resident
+keys) generalization of ``paged_decode``, and the roadmap's missing paged
+prefill kernel:
+
+  * the grid's inner axis walks the slot's *logical* blocks and a
+    scalar-prefetched block table translates each step to a physical pool
+    row in the BlockSpec index map (the gather happens in the DMA engine,
+    never materialized in HBM);
+  * a second scalar-prefetched operand carries each row's chunk start
+    position, so the causal mask ``k_pos <= q_pos`` is computed from grid
+    coordinates alone — tokens already resident are visible to every chunk
+    query, later chunk positions are masked per query row. Garbage beyond a
+    row's resident end always sits at positions above every real query, so
+    it is masked by the same comparison (padding query rows are discarded
+    by the caller).
+
+All W queries of one (batch, kv-head) program are processed together
+(W·G x bs score tiles), so each KV block is read exactly once per head —
+one pass over the resident cache, the roofline minimum.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 names the Mosaic compiler-params dataclass TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+from repro.kernels.decode_attention import NEG_INF
+
+
+def _paged_prefill_kernel(tbl_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, scale: float, nt: int,
+                          bs: int, G: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (W*G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bs, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    WG = q.shape[0]
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale
+    # causal mask from grid coordinates: query w sits at start[b] + w, key
+    # lane j of logical block i sits at i*bs + j
+    q_pos = start_ref[b] + lax.broadcasted_iota(jnp.int32, (WG, bs), 0) // G
+    k_pos = i * bs + lax.broadcasted_iota(jnp.int32, (WG, bs), 1)
+    live = k_pos <= q_pos
+    s = jnp.where(live, s, NEG_INF)
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.where(live, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(i == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, kp, vp, tables, start, *,
+                            interpret: bool = False):
+    """q:(B,W,HQ,dh) chunk queries; kp,vp:(P+1,bs,HKV,dh) physical pools;
+    tables:(B,nb) int32 logical->physical block map; start:(B,) int32 first
+    position of each row's chunk. -> (B,W,HQ,dh).
+
+    The chunk's own K/V must already be scattered into the pools (the serve
+    step writes before it attends). Query rows past a row's true chunk
+    length produce garbage the caller discards.
+    """
+    B, W, HQ, dh = q.shape
+    bs, HKV = kp.shape[1], kp.shape[2]
+    nb = tables.shape[1]
+    G = HQ // HKV
+    scale = 1.0 / math.sqrt(dh)
+    kT = kp.transpose(0, 2, 1, 3)                      # (P+1, HKV, bs, dh)
+    vT = vp.transpose(0, 2, 1, 3)
+    dhp = (-dh) % 128
+    if dhp:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, 0), (0, dhp)))
+    dhf = dh + dhp
+    # (B, W, HKV, G, dhf) -> (B, HKV, W*G, dhf): all of one KV head's chunk
+    # queries ride one program
+    qg = q.reshape(B, W, HKV, G, dhf).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, HKV, W * G, dhf)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, HKV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, W * G, dhf),
+                         lambda b, h, i, tbl, st: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dhf),
+                         lambda b, h, i, tbl, st: (tbl[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dhf),
+                         lambda b, h, i, tbl, st: (tbl[b, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, W * G, dhf),
+                               lambda b, h, i, tbl, st: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((W * G, 128), jnp.float32),
+            pltpu.VMEM((W * G, 128), jnp.float32),
+            pltpu.VMEM((W * G, dhf), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, scale=scale, nt=nb, bs=bs,
+                          G=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, HKV, W * G, dhf), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, start.astype(jnp.int32), qg, kT, vT)
+    return out.reshape(B, HKV, W, G, dhf).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, W, HQ, dhf)[..., :dh]

@@ -70,6 +70,30 @@ def paged_decode_attention_ref(q, kp, vp, tables, valid, *, scale=None):
     return slot_decode_attention_ref(q, kg, vg, valid, scale=scale)
 
 
+def paged_prefill_attention_ref(q, kp, vp, tables, start, *, scale=None):
+    """Paged chunked-prefill oracle: gather each slot's logical view through
+    its block table, then rectangular chunk attention with the per-query
+    causal mask ``k_pos <= start + w``. q:(B,W,HQ,dh); kp,vp:(P+1,bs,HKV,dh)
+    physical pools; tables:(B,nb) int32; start:(B,) first chunk position.
+    Query rows past a row's true chunk length are garbage by contract."""
+    B, W, HQ, dh = q.shape
+    bs, HKV = kp.shape[1], kp.shape[2]
+    nb = tables.shape[1]
+    G = HQ // HKV
+    scale = scale or 1.0 / math.sqrt(dh)
+    kg = kp[tables].reshape(B, nb * bs, HKV, dh)
+    vg = vp[tables].reshape(B, nb * bs, HKV, dh)
+    q_pos = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B,W)
+    k_pos = jnp.arange(nb * bs, dtype=jnp.int32)
+    live = k_pos[None, None, :] <= q_pos[:, :, None]                # (B,W,T)
+    qg = q.reshape(B, W, HKV, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kg).astype(jnp.float32) * scale
+    s = jnp.where(live[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(q.dtype), vg)
+    return out.reshape(B, W, HQ, dh)
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

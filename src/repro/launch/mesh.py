@@ -38,6 +38,20 @@ def parse_mesh_spec(spec):
     return data, model
 
 
+def mesh_device_count(spec) -> int:
+    """Devices a ``--mesh data,model`` spec needs (1 for the single-device
+    path). Pure string parsing, no device access — safe to call before
+    jax's backend initializes, which is where callers need it: XLA locks
+    the host device count at first use, so
+    ``--xla_force_host_platform_device_count`` must be computed and set
+    first (scripts/paged_smoke.py, benchmarks/bench_serving.py)."""
+    parsed = parse_mesh_spec(spec)
+    if parsed is None:
+        return 1
+    data, model = parsed
+    return data * model
+
+
 def make_serve_mesh(spec):
     """Serving mesh from a ``--mesh data,model`` flag. None when the spec is
     single-device. On CPU CI, force virtual devices first:

@@ -74,7 +74,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                num_blocks: int = 0, bucket_prompts: bool = False,
                temperature: float = 0.0, top_k: int = 0,
                eos_id: int = -1, shared_prefix_len: int = 0,
-               mesh: str = ""):
+               mesh: str = "", chunked: bool = False, budget: int = 256,
+               chunk_width: int = 0):
     """Continuous-batching serving run; returns the engine report dict."""
     from repro.core import SamplingConfig
     from repro.launch.mesh import make_serve_mesh
@@ -92,7 +93,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                       kv=kv, block_size=block_size,
                       num_blocks=num_blocks or None,
                       sampling=sampling, bucket_prompts=bucket_prompts,
-                      mesh=make_serve_mesh(mesh))
+                      mesh=make_serve_mesh(mesh), chunked=chunked,
+                      chunk_budget=budget, chunk_width=chunk_width)
 
     # warmup: compile prefill + decode + admission writers outside the timed
     # region (one decode program suffices — same compiled shapes as the run).
@@ -205,6 +207,16 @@ def main(argv=None) -> int:
     p.add_argument("--num-blocks", type=int, default=0,
                    help="paged: physical pool size (0 = slots*max_len/bs, "
                         "the slotted-equivalent footprint)")
+    p.add_argument("--chunked", action="store_true",
+                   help="chunked prefill: one unified program per engine "
+                        "step (decode tokens first, budget-packed prompt "
+                        "chunks after) — admission never stalls decode")
+    p.add_argument("--budget", type=int, default=256,
+                   help="chunked: target tokens per serve step (decode "
+                        "always wins; leftover goes to prompt chunks)")
+    p.add_argument("--chunk-width", type=int, default=0,
+                   help="chunked: compiled per-row chunk width W "
+                        "(0 = min(budget, max_len))")
     p.add_argument("--bucket-prompts", action="store_true",
                    help="pad admitted prompts to power-of-two buckets "
                         "(bounds the jit prefill cache under mixed lengths)")
@@ -258,7 +270,8 @@ def main(argv=None) -> int:
                          temperature=args.temperature, top_k=args.top_k,
                          eos_id=args.eos_id,
                          shared_prefix_len=args.shared_prefix_len,
-                         mesh=args.mesh)
+                         mesh=args.mesh, chunked=args.chunked,
+                         budget=args.budget, chunk_width=args.chunk_width)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

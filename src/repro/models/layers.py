@@ -523,6 +523,128 @@ def attention_decode_paged(params: Params, x: jax.Array, cache: Params,
     return y, new_cache
 
 
+def attention_serve_chunk(params: Params, x: jax.Array, cache: Params,
+                          cfg: ArchConfig, opts: ModelOptions,
+                          start: jax.Array, clen: jax.Array
+                          ) -> Tuple[jax.Array, Params]:
+    """Variable-length *chunk* attention against the slot cache — the unified
+    serve step's prefill half (chunked prefill; see ``repro.core.step``).
+
+    Every batch row processes up to W tokens starting at its own position:
+
+      x:     (B, W, D) chunk hidden states (right-padded per row)
+      cache: slot layout {"k"/"v": (B,T,HKV,dh), "slot_pos": (B,T),
+             "pos": (B,)}
+      start: (B,) first position each row's chunk occupies
+      clen:  (B,) real tokens in the row's chunk (0 = row has no chunk)
+
+    The chunk K/V is written at positions ``start + j`` for ``j < clen``
+    (padding positions write their *old* value back, so a row near max_len
+    never clobbers resident state), then all W queries attend over the
+    updated row with the per-query causal mask ``slot_pos <= q_pos`` — each
+    real row computes exactly what a full prefill computes for it, which is
+    what keeps chunked streams identical to two-phase streams. Garbage the
+    fused decode microsteps may have marked valid at positions >= start+clen
+    (mid-prefill rows riding an NSS program) is masked out by the same
+    causal comparison until the covering chunk overwrites it. ``pos`` is
+    host-authoritative in chunked serving: it is set to ``start + clen``
+    regardless of its stale device value.
+    """
+    B, W, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)                      # (B, W, H, dh)
+    q_pos = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B, W)
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, q_pos, cfg.rope_theta)
+    T = cache["k"].shape[1]
+    idx = q_pos % T                                     # (B, W) write slots
+    real = jnp.arange(W, dtype=jnp.int32)[None] < clen[:, None]     # (B, W)
+
+    def row_write(c, u, ix, m):
+        old = c[ix]
+        return c.at[ix].set(jnp.where(m.reshape((-1,) + (1,) * (u.ndim - 1)),
+                                      u, old))
+
+    ck = jax.vmap(row_write)(cache["k"], k.astype(cache["k"].dtype), idx, real)
+    cv = jax.vmap(row_write)(cache["v"], v.astype(cache["v"].dtype), idx, real)
+    slot_pos = jax.vmap(row_write)(cache["slot_pos"], q_pos, idx, real)
+
+    # dense masked attention: (B, W) queries over the (B, T) row. The same
+    # einsum/softmax structure as the slotted decode ref path, so a width-1
+    # chunk reduces to exactly the decode computation.
+    valid = (slot_pos[:, None, :] >= 0) & \
+        (slot_pos[:, None, :] <= q_pos[:, :, None])     # (B, W, T)
+    qg = q.reshape(B, W, hkv, hq // hkv, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32)
+    s = s / math.sqrt(dh)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv).reshape(B, W, hq * dh)
+
+    y = out @ params["wo"].astype(x.dtype)
+    new_cache = dict(cache, k=ck, v=cv, slot_pos=slot_pos, pos=start + clen)
+    return y, new_cache
+
+
+def attention_serve_chunk_paged(params: Params, x: jax.Array, cache: Params,
+                                tables: jax.Array, cfg: ArchConfig,
+                                opts: ModelOptions, start: jax.Array,
+                                clen: jax.Array, max_len: int
+                                ) -> Tuple[jax.Array, Params]:
+    """``attention_serve_chunk`` re-addressed through a paged block pool.
+
+      cache:  {"kp"/"vp": (P+1, bs, HKV, dh), "pos": (B,)}
+      tables: (B, nb) logical->physical block map
+
+    Chunk K/V scatters to ``(tables[b, p // bs], p % bs)`` for real positions
+    and to the trash row for padding (the engine CoW-forked / demand-
+    allocated every block in the write span, so real destinations are
+    exclusively owned). The gather path masks by logical position
+    ``t <= q_pos`` — garbage beyond a row's resident end always sits at
+    positions above every real query, so it is invisible by the same causal
+    comparison. The pallas path is the scalar-prefetched block-table flash
+    kernel ``repro.kernels.paged_prefill`` (the roadmap's paged prefill
+    kernel).
+    """
+    B, W, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)
+    q_pos = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B, W)
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, q_pos, cfg.rope_theta)
+    bs = cache["kp"].shape[1]
+    nb = tables.shape[1]
+    trash = cache["kp"].shape[0] - 1
+    real = jnp.arange(W, dtype=jnp.int32)[None] < clen[:, None]     # (B, W)
+    logical_blk = jnp.clip(q_pos // bs, 0, nb - 1)
+    blk = jnp.take_along_axis(tables, logical_blk, axis=1)          # (B, W)
+    blk = jnp.where(real, blk, trash)
+    off = q_pos % bs
+    kp = cache["kp"].at[blk, off].set(k.astype(cache["kp"].dtype))
+    vp = cache["vp"].at[blk, off].set(v.astype(cache["vp"].dtype))
+
+    if opts.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.paged_prefill_attention(q, kp, vp, tables, start)
+    else:
+        # gather fallback: assemble each row's logical view and mask by
+        # position — same shapes and reductions as the dense chunk path
+        kg = kp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        vg = vp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        valid = jnp.arange(max_len, dtype=jnp.int32)[None, None, :] \
+            <= q_pos[:, :, None]                        # (B, W, max_len)
+        qg = q.reshape(B, W, hkv, hq // hkv, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kg).astype(jnp.float32)
+        s = s / math.sqrt(dh)
+        s = jnp.where(valid[:, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vg).reshape(B, W, hq, dh)
+
+    y = out.reshape(B, W, -1) @ params["wo"].astype(x.dtype)
+    new_cache = dict(cache, kp=kp, vp=vp, pos=start + clen)
+    return y, new_cache
+
+
 def _xattn_cached(params, x, cache, cfg):
     B = x.shape[0]
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim

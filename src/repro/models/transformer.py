@@ -391,6 +391,108 @@ def decode_step_paged(params: Params, cache, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Serve chunk step: the unified serve program's prefill half
+# ---------------------------------------------------------------------------
+
+def _serve_chunk_block(params: Params, cache, h, cfg: ArchConfig,
+                       opts: ModelOptions, layer_fn):
+    """Shared block loop for the serve chunk passes: scan (or unroll) the
+    stacked blocks threading the cache, finishing with final norm + per-row
+    last-real-position logits."""
+    def block_fn(x, xs):
+        block_params, cache_b = xs
+        new_c = []
+        for spec, bp, cl in zip(cfg.block_pattern, block_params, cache_b):
+            x, cl = layer_fn(spec, bp, x, cl)
+            new_c.append(cl)
+        return x, tuple(new_c)
+
+    if opts.scan_blocks:
+        h, new_cache = lax.scan(block_fn, h, (params["blocks"], cache))
+    else:
+        outs = []
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            cb = jax.tree.map(lambda a: a[i], cache)
+            h, nc = block_fn(h, (blk, cb))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, new_cache
+
+
+def _chunk_mlp(p: Params, x, cfg: ArchConfig, spec: LayerSpec,
+               opts: ModelOptions):
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps, opts)
+    if spec.mlp == MOE:
+        out, _ = L.moe(p["mlp"], h, cfg, opts)
+    else:
+        out = L.mlp(p["mlp"], h)
+    return x + out
+
+
+def _chunk_logits(params: Params, h, clen, cfg: ArchConfig,
+                  opts: ModelOptions):
+    """Logits at each row's last real chunk position (clamped for rows with
+    no chunk — their output is discarded by the caller's emit mask)."""
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    last = jnp.take_along_axis(
+        h, jnp.clip(clen - 1, 0, h.shape[1] - 1)[:, None, None], axis=1)
+    return unembed_logits(params, last, cfg)[:, 0]
+
+
+def serve_chunk_step(params: Params, cache, tokens: jax.Array,
+                     start: jax.Array, clen: jax.Array, reset: jax.Array,
+                     cfg: ArchConfig, opts: ModelOptions
+                     ) -> Tuple[jax.Array, Any]:
+    """Chunked-prefill pass over the slot cache: every row absorbs its own
+    variable-length prompt chunk in one program (see ``build_serve_step``).
+
+    tokens: (B, W) right-padded chunk ids; start/clen: (B,) per-row write
+    position and true length; reset: (B,) bool — rows admitted this step
+    get their stale ``slot_pos`` marks invalidated before the write.
+    Returns (per-row logits at position ``start + clen - 1``, new cache).
+    """
+    _check_pageable(cfg, "serve_chunk_step")
+    cache = tuple(dict(g, slot_pos=jnp.where(reset[None, :, None], -1,
+                                             g["slot_pos"]))
+                  for g in cache)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(opts.dtype)
+
+    def layer_fn(spec, bp, x, cl):
+        hh = L.rmsnorm(bp["norm1"], x, cfg.norm_eps, opts)
+        mix, cl = L.attention_serve_chunk(bp["mixer"], hh, cl, cfg, opts,
+                                          start, clen)
+        x = _chunk_mlp(bp, x + mix, cfg, spec, opts)
+        return x, cl
+
+    h, new_cache = _serve_chunk_block(params, cache, h, cfg, opts, layer_fn)
+    return _chunk_logits(params, h, clen, cfg, opts), new_cache
+
+
+def serve_chunk_step_paged(params: Params, cache, tokens: jax.Array,
+                           tables: jax.Array, start: jax.Array,
+                           clen: jax.Array, cfg: ArchConfig,
+                           opts: ModelOptions, max_len: int
+                           ) -> Tuple[jax.Array, Any]:
+    """``serve_chunk_step`` against the paged block pools (tables: (B, nb)).
+    No reset mask: paged validity is positional, and released slots point
+    at the trash block."""
+    _check_pageable(cfg, "serve_chunk_step_paged")
+    h = jnp.take(params["embed"], tokens, axis=0).astype(opts.dtype)
+
+    def layer_fn(spec, bp, x, cl):
+        hh = L.rmsnorm(bp["norm1"], x, cfg.norm_eps, opts)
+        mix, cl = L.attention_serve_chunk_paged(bp["mixer"], hh, cl, tables,
+                                                cfg, opts, start, clen,
+                                                max_len)
+        x = _chunk_mlp(bp, x + mix, cfg, spec, opts)
+        return x, cl
+
+    h, new_cache = _serve_chunk_block(params, cache, h, cfg, opts, layer_fn)
+    return _chunk_logits(params, h, clen, cfg, opts), new_cache
+
+
+# ---------------------------------------------------------------------------
 # Prefill: full forward that also fills the cache
 # ---------------------------------------------------------------------------
 

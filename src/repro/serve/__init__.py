@@ -10,12 +10,14 @@ from repro.serve.cache import (KVBackend, SlottedKV, init_slot_cache,
                                make_slot_writer, slotify)
 from repro.serve.engine import KV_BACKENDS, ServeEngine, serve_report
 from repro.serve.paging import BlockPool, BlockTable, PagedKV, PrefixIndex
-from repro.serve.scheduler import (Completion, Request, SlotScheduler,
-                                   SlotState, synthetic_requests)
+from repro.serve.scheduler import (MIN_BUCKET, Completion, Request,
+                                   SlotScheduler, SlotState, bucket_len,
+                                   pack_chunks, synthetic_requests)
 
 __all__ = [
     "BlockPool", "BlockTable", "Completion", "KVBackend", "KV_BACKENDS",
-    "PagedKV", "PrefixIndex", "Request", "ServeEngine", "SlotScheduler",
-    "SlotState", "SlottedKV", "init_slot_cache", "make_slot_writer",
-    "serve_report", "slotify", "synthetic_requests",
+    "MIN_BUCKET", "PagedKV", "PrefixIndex", "Request", "ServeEngine",
+    "SlotScheduler", "SlotState", "SlottedKV", "bucket_len",
+    "init_slot_cache", "make_slot_writer", "pack_chunks", "serve_report",
+    "slotify", "synthetic_requests",
 ]

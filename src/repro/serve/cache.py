@@ -147,6 +147,31 @@ class KVBackend(Protocol):
         """Zero utilization counters (after a compile-warmup run)."""
         ...
 
+    # -- chunked prefill (the unified serve step) ---------------------------
+
+    def admit_chunked(self, slot: int, prompt: np.ndarray, key: jax.Array
+                      ) -> int:
+        """Begin a chunked admission: host bookkeeping only, no program.
+        Seeds the slot's sampling chain from ``key``. Returns the number of
+        prompt tokens already resident (paged: the radix-shared prefix,
+        capped at P-1 so the final position always computes; slotted: 0)."""
+        ...
+
+    def append_chunk(self, slot: int, start: int, tokens: np.ndarray) -> bool:
+        """Host bookkeeping for the chunk the next serve step will write at
+        positions [start, start+len): paged demand-allocates the covering
+        blocks, CoW-forks any shared one in the span, and registers the
+        completed prompt in the prefix index; slotted rows always have room.
+        False = pool dry: the engine preempts and replans the step."""
+        ...
+
+    def serve_step(self, chunk_tokens, clen, start, reset, emit0, dec_mask,
+                   dec_tok) -> tuple:
+        """Run the unified serve program (``build_serve_step``): the chunk
+        pass plus K fused decode microsteps. Returns (t0 (B,), seq (B,K)) —
+        first tokens of prompt-completing rows and the decode tokens."""
+        ...
+
 
 class SlottedKV:
     """Dense slot-row backend (the PR-1 layout) behind the KVBackend API.
@@ -159,8 +184,10 @@ class SlottedKV:
     kind = "slotted"
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
-                 max_len: int, sampling=None, bucket_fn=None, mesh=None):
-        from repro.core.step import (build_slot_decode_step, make_sampler)
+                 max_len: int, sampling=None, bucket_fn=None, mesh=None,
+                 chunked: bool = False):
+        from repro.core.step import (build_serve_step, build_slot_decode_step,
+                                     make_sampler)
         self.cfg, self.params, self.opts = cfg, params, opts
         self.n_slots, self.max_len = n_slots, max_len
         self.bucket_fn = bucket_fn
@@ -175,13 +202,25 @@ class SlottedKV:
                                                              n_slots))
             self.params = params = jax.device_put(params, param_sh)
             self.cache = jax.device_put(self.cache, cache_sh)
-        self._dec = build_slot_decode_step(cfg, opts, linkage, sampling,
+        # the decode program is shared by both step disciplines: two-phase
+        # decode, and the chunked engine's pure-decode fast path (when no
+        # slot is mid-prefill, the step IS the two-phase decode program —
+        # steady-state decode throughput is identical by construction)
+        self._dec = build_slot_decode_step(
+            cfg, opts, linkage, sampling, mesh=mesh,
+            param_sharding=param_sh, cache_sharding=cache_sh)
+        if chunked:
+            # the unified serve step replaces the admission prefill AND the
+            # mixed prefill+decode program: per-bucket prefill shapes vanish
+            self._serve = build_serve_step(cfg, opts, linkage, max_len,
+                                           sampling, kv_kind="slotted",
                                            mesh=mesh, param_sharding=param_sh,
                                            cache_sharding=cache_sh)
-        self._write = make_slot_writer(mesh, cache_sh)
-        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
-                                        mesh, param_sh)
-        self._sample = jax.jit(make_sampler(sampling))
+        else:
+            self._write = make_slot_writer(mesh, cache_sh)
+            self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
+                                            mesh, param_sh)
+            self._sample = jax.jit(make_sampler(sampling))
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
 
     def admit(self, slot: int, prompt: np.ndarray, key: jax.Array):
@@ -213,3 +252,25 @@ class SlottedKV:
 
     def reset_counters(self) -> None:
         pass
+
+    # -- chunked prefill ----------------------------------------------------
+
+    def admit_chunked(self, slot: int, prompt: np.ndarray, key: jax.Array
+                      ) -> int:
+        """Seed the slot's sampling chain; nothing is resident yet (the
+        dense row has no prefix sharing). The serve step's sampler splits
+        the raw request key exactly like the two-phase admission sampler
+        did, so key chains replay bit-identically across engine modes."""
+        self.keys = self.keys.at[slot].set(key)
+        return 0
+
+    def append_chunk(self, slot: int, start: int, tokens: np.ndarray) -> bool:
+        return True                     # a slot row always holds max_len
+
+    def serve_step(self, chunk_tokens, clen, start, reset, emit0, dec_mask,
+                   dec_tok):
+        self.cache, t0, seq, self.keys = self._serve(
+            self.params, self.cache, jnp.asarray(chunk_tokens),
+            jnp.asarray(clen), jnp.asarray(start), jnp.asarray(reset),
+            jnp.asarray(emit0), dec_tok, jnp.asarray(dec_mask), self.keys)
+        return t0, seq

@@ -48,23 +48,47 @@ from repro.core.coprocess import AdmissionWorker
 from repro.core.linkage import L3_NSS, LinkageConfig
 from repro.core.step import SamplingConfig
 from repro.serve.cache import KVBackend, SlottedKV
-from repro.serve.scheduler import Completion, Request, SlotScheduler
+from repro.serve.scheduler import (MIN_BUCKET, Completion, Request,
+                                   SlotScheduler, bucket_len, pack_chunks)
 
 KV_BACKENDS = ("slotted", "paged")
 
 
 class ServeEngine:
-    """Request-level continuous batching over a fixed slot pool."""
+    """Request-level continuous batching over a fixed slot pool.
 
-    #: smallest admission bucket — prompts shorter than this share one
-    #: compiled prefill instead of one program per tiny length
-    MIN_BUCKET = 8
+    Two step disciplines:
+
+    two-phase (default)  admission runs a blocking full-prompt prefill
+                         program, then occupied slots decode together —
+                         every admission stalls every decoding slot for a
+                         whole prompt.
+    chunked              (``chunked=True``) there is no prefill phase: every
+                         engine step is ONE program with a fixed token
+                         budget, filled with decode tokens from occupied
+                         slots first and prompt *chunks* from admitting
+                         requests after (Sarathi-style chunked prefill);
+                         pure-decode steps dispatch the plain decode
+                         program. Admission never stalls decode (queue
+                         wait and worst inter-token stall drop, admissions
+                         batch into one program), and the per-bucket
+                         compiled-prefill zoo collapses to one serve-step
+                         shape. Token streams are bit-identical to the
+                         two-phase engine and to sequential decode
+                         (tests/test_serve.py, tests/test_paging.py).
+    """
+
+    #: smallest admission bucket (re-exported from the scheduler, which owns
+    #: the bucketing/empty-prompt guards for every admission path)
+    MIN_BUCKET = MIN_BUCKET
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage: LinkageConfig,
                  n_slots: int, max_len: int, *, kv: str = "slotted",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  sampling: Optional[SamplingConfig] = None,
-                 bucket_prompts: bool = False, mesh=None):
+                 bucket_prompts: bool = False, mesh=None,
+                 chunked: bool = False, chunk_budget: int = 256,
+                 chunk_width: int = 0):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -80,17 +104,29 @@ class ServeEngine:
         self.sampling = sampling or SamplingConfig()
         self.tokens_per_program = (linkage.decode_steps
                                    if linkage.level == L3_NSS else 1)
+        self.chunked = chunked
+        if chunked:
+            if chunk_budget < 1:
+                raise ValueError("chunked serving needs chunk_budget >= 1")
+            self.chunk_budget = chunk_budget
+            # W: the compiled per-row chunk width — every step pads to this
+            # one shape, so the whole engine jits a single serve program
+            self.chunk_width = chunk_width or min(chunk_budget, max_len)
+            if not 1 <= self.chunk_width <= max_len:
+                raise ValueError(f"chunk_width must be in [1, max_len] "
+                                 f"(got {self.chunk_width})")
         bucket_fn = self._bucket if bucket_prompts else None
         if kv == "slotted":
             self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
                                            n_slots, max_len, self.sampling,
-                                           bucket_fn, mesh=mesh)
+                                           bucket_fn, mesh=mesh,
+                                           chunked=chunked)
         elif kv == "paged":
             from repro.serve.paging import PagedKV
             self.kv = PagedKV(cfg, params, opts, linkage, n_slots, max_len,
                               self.sampling, bucket_fn,
                               block_size=block_size, num_blocks=num_blocks,
-                              mesh=mesh)
+                              mesh=mesh, chunked=chunked)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
@@ -99,16 +135,13 @@ class ServeEngine:
         self.programs_run = 0
         self.tokens_wasted = 0       # decoded past a request's budget/EOS
         self.preemptions = 0         # paged: recompute-preempted admissions
+        self.prefill_tokens = 0      # prompt tokens admitted (incl. shared)
+        self.decode_tokens = 0       # decode tokens produced
 
     def _bucket(self, n: int) -> int:
-        """Power-of-two prompt bucket, floored at MIN_BUCKET and clipped to
-        max_len: bounds the jit prefill cache under mixed-length load. The
-        floor keeps 1..7-token prompts from each minting their own compiled
-        program; ``true_len`` fixes up positions/logits so the padding is
-        exact (empty prompts are rejected in ``build_prefill_fn`` — a
-        ``true_len`` of 0 would silently read position 0 of pure padding)."""
-        return min(max(1 << max(n - 1, 0).bit_length(), self.MIN_BUCKET),
-                   self.max_len)
+        """Power-of-two admission bucket (owned by the scheduler module —
+        see ``repro.serve.scheduler.bucket_len`` for the guards)."""
+        return bucket_len(n, self.max_len)
 
     # -- admission ----------------------------------------------------------
 
@@ -126,6 +159,7 @@ class ServeEngine:
                 f"{self.kv.kind} KV store (pool too small)")
         first = self.kv.admit(slot, np.asarray(req.prompt, np.int32),
                               self.sampling.request_key(req.rid))
+        self.prefill_tokens += int(req.prompt.shape[0])
         self._next = self._next.at[slot].set(first[0])
         st = self.sched.active[slot]
         # the prefill sample is generated token #1 of the budget
@@ -136,7 +170,10 @@ class ServeEngine:
             st.chunks.append(f)
             if req.eos_id is not None and int(f[0]) == req.eos_id:
                 st.eos_seen = True
-        st.first_token_s = now_fn()
+        st.first_token_s = st.prefill_done_s = now_fn()
+        st.note_emit(st.first_token_s)
+        st.prefill_pos = int(req.prompt.shape[0])   # two-phase: all at once
+        st.fresh = False
         st.produced = 1
         if st.remaining == 0 or st.eos_seen:
             return [self._finalize(slot, now_fn)]
@@ -175,8 +212,17 @@ class ServeEngine:
         toks_host = None
         if not self.linkage.ret_async:
             toks_host = np.asarray(toks)            # "iret": sync every program
+        return self._harvest_decode(sorted(self.sched.active), toks,
+                                    toks_host, now_fn)
+
+    def _harvest_decode(self, slots, toks, toks_host,
+                        now_fn: Callable[[], float]) -> List[Completion]:
+        """Collect this program's decode tokens for ``slots``: append (up to
+        the request budget), check EOS at the sync point, finalize finished.
+        Shared by the two-phase step and the chunked step's decode half."""
+        now = now_fn()
         finished = []
-        for slot in sorted(self.sched.active):
+        for slot in slots:
             st = self.sched.active[slot]
             take = min(self.tokens_per_program, st.remaining)
             self.tokens_wasted += self.tokens_per_program - take
@@ -186,11 +232,139 @@ class ServeEngine:
                      else toks_host[slot, :take])
             st.chunks.append(chunk)
             st.produced += take
+            self.decode_tokens += take
+            st.note_emit(now)
+            if st.first_decode_s is None:
+                st.first_decode_s = now
             if (toks_host is not None and st.req.eos_id is not None
                     and st.req.eos_id in chunk):
                 st.eos_seen = True                  # stop at the sync point
             if st.produced >= st.req.max_new_tokens or st.eos_seen:
                 finished.append(self._finalize(slot, now_fn))
+        return finished
+
+    # -- chunked prefill: the unified serve step ---------------------------
+
+    def _admit_chunked(self, now_fn: Callable[[], float]) -> None:
+        """Chunked admission is pure host bookkeeping — no program runs, so
+        admission can never stall occupied decode slots. The prompt enters
+        the device chunk by chunk through subsequent serve steps."""
+        slot, req = self.sched.admit_next(now_fn())
+        if req.prompt.shape[0] + req.max_new_tokens > self.max_len:
+            self.sched.release(slot)
+            raise ValueError(
+                f"request {req.rid}: prompt+budget exceeds max_len "
+                f"{self.max_len}")
+        if not self.kv.fits(int(req.prompt.shape[0]), req.max_new_tokens):
+            self.sched.release(slot)
+            raise ValueError(
+                f"request {req.rid}: prompt+budget can never fit the "
+                f"{self.kv.kind} KV store (pool too small)")
+        shared = self.kv.admit_chunked(slot, np.asarray(req.prompt, np.int32),
+                                       self.sampling.request_key(req.rid))
+        # count the radix-shared prefix so prefill_tokens means the same
+        # thing in both step modes (prompt tokens admitted, shared or
+        # computed — two-phase _admit counts the full prompt length too;
+        # computed-vs-shared is broken out by kv_prefix_shared_tokens)
+        self.prefill_tokens += shared
+        st = self.sched.active[slot]
+        st.prefill_pos = shared          # radix-shared prefix already resident
+
+    def _plan_chunks(self):
+        """Pack this step's token budget and reserve the memory it needs,
+        preempting the youngest slot (recompute on re-admission) while the
+        paged pool is dry. Returns (decode slots, prefill slots, grants) in
+        FIFO admission order."""
+        K = self.tokens_per_program
+        while True:
+            order = sorted(self.sched.active,
+                           key=lambda s: self.sched.active[s].admit_seq)
+            dec = [s for s in order if not self.sched.active[s].prefilling]
+            pre = [s for s in order if self.sched.active[s].prefilling]
+            grants = pack_chunks(
+                self.chunk_budget, self.chunk_width, K * len(dec),
+                [self.sched.active[s].prompt_len
+                 - self.sched.active[s].prefill_pos for s in pre])
+            ok = all(self.kv.reserve(s, K) for s in dec)
+            if ok:
+                for s, g in zip(pre, grants):
+                    st = self.sched.active[s]
+                    if g and not self.kv.append_chunk(
+                            s, st.prefill_pos,
+                            st.req.prompt[st.prefill_pos:st.prefill_pos + g]):
+                        ok = False
+                        break
+            if ok:
+                return dec, pre, grants
+            if len(self.sched.active) == 1:
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single active request; "
+                    "fits() should have rejected it")
+            self._preempt(self.sched.youngest())
+
+    def _step_chunked(self, now_fn: Callable[[], float]) -> List[Completion]:
+        """One unified serve program: decode tokens for occupied slots plus
+        budget-packed prompt chunks; harvest both halves; evict finished.
+
+        Pure-decode steps (no slot mid-prefill) dispatch the two-phase
+        decode program instead — no dead chunk pass, so steady-state decode
+        throughput is the two-phase engine's by construction. The unified
+        program runs whenever ANY slot is mid-prefill, even on a step whose
+        budget grants it zero chunk tokens: the plain decode path would
+        harvest mid-prefill slots as decode rows and write their garbage
+        through real block tables / circular rows, so only the masked serve
+        step may run while a prompt is partially resident."""
+        if not any(self.sched.active[s].prefilling for s in self.sched.active):
+            return self.step(now_fn)
+        B, W = self.n_slots, self.chunk_width
+        dec, pre, grants = self._plan_chunks()
+        toks = np.zeros((B, W), np.int32)
+        clen = np.zeros(B, np.int32)
+        start = np.zeros(B, np.int32)
+        reset = np.zeros(B, bool)
+        emit0 = np.zeros(B, bool)
+        dec_mask = np.zeros(B, bool)
+        for s in dec:
+            st = self.sched.active[s]
+            start[s] = st.prompt_len + st.produced - 1   # next write position
+            dec_mask[s] = True
+        for s, g in zip(pre, grants):
+            st = self.sched.active[s]
+            start[s] = st.prefill_pos
+            clen[s] = g
+            toks[s, :g] = st.req.prompt[st.prefill_pos:st.prefill_pos + g]
+            if g:
+                reset[s] = st.fresh
+                st.fresh = False
+                emit0[s] = st.prefill_pos + g == st.prompt_len
+
+        t0, seq = self.kv.serve_step(toks, clen, start, reset, emit0,
+                                     dec_mask, self._next)
+        self._next = jnp.where(jnp.asarray(emit0), t0, seq[:, -1])
+        self.programs_run += 1
+        self.prefill_tokens += int(clen.sum())
+        t0_host = seq_host = None
+        if not self.linkage.ret_async:
+            t0_host, seq_host = np.asarray(t0), np.asarray(seq)
+        now = now_fn()
+        finished = []
+        for s, g in zip(pre, grants):
+            st = self.sched.active[s]
+            st.prefill_pos += g
+            if not emit0[s]:
+                continue
+            # the chunk that completed the prompt yields generated token #1
+            first = t0[s:s + 1] if t0_host is None else t0_host[s:s + 1]
+            st.chunks.append(first)
+            if (t0_host is not None and st.req.eos_id is not None
+                    and int(first[0]) == st.req.eos_id):
+                st.eos_seen = True
+            st.first_token_s = st.prefill_done_s = now
+            st.note_emit(now)
+            st.produced = 1
+            if st.remaining == 0 or st.eos_seen:
+                finished.append(self._finalize(s, now_fn))
+        finished += self._harvest_decode(dec, seq, seq_host, now_fn)
         return finished
 
     def _finalize(self, slot: int,
@@ -205,10 +379,13 @@ class ServeEngine:
                 self.tokens_wasted += len(tokens) - (int(hits[0]) + 1)
                 tokens = tokens[:int(hits[0]) + 1]
         done = now_fn()
+        fd = st.first_decode_s if st.first_decode_s is not None else done
         return Completion(
             rid=st.req.rid, prompt_len=int(st.req.prompt.shape[0]),
             tokens=tokens, arrival_s=st.req.arrival_s, admit_s=st.admit_s,
-            first_token_s=st.first_token_s, done_s=done)
+            first_token_s=st.first_token_s, done_s=done,
+            prefill_done_s=st.prefill_done_s, first_decode_s=fd,
+            max_stall_s=st.max_stall_s)
 
     # -- driving loops ------------------------------------------------------
 
@@ -218,9 +395,13 @@ class ServeEngine:
             head = self.sched.peek()
             if not self.kv.has_room(int(head.prompt.shape[0])):
                 break                # FIFO: wait for blocks, don't skip ahead
-            finished += self._admit(now_fn)
+            if self.chunked:
+                self._admit_chunked(now_fn)   # bookkeeping only, no program
+            else:
+                finished += self._admit(now_fn)
         if self.sched.active:
-            finished += self.step(now_fn)
+            finished += (self._step_chunked(now_fn) if self.chunked
+                         else self.step(now_fn))
         return finished
 
     def run(self, requests: List[Request], *, load: str = "closed",
@@ -275,10 +456,23 @@ class ServeEngine:
         """Engine + backend utilization counters (merged into serve_report)."""
         u = {
             "kv_backend": self.kv.kind,
+            "step_mode": "chunked" if self.chunked else "two_phase",
             "programs_run": self.programs_run,
             "tokens_wasted": self.tokens_wasted,
             "preemptions": self.preemptions,
+            # the step batch mix: how the budget split between absorbing
+            # prompts and producing tokens (chunked scheduling observable)
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
         }
+        if self.programs_run:
+            u["prefill_tokens_per_step"] = round(
+                self.prefill_tokens / self.programs_run, 2)
+            u["decode_tokens_per_step"] = round(
+                self.decode_tokens / self.programs_run, 2)
+        if self.chunked:
+            u["chunk_budget"] = self.chunk_budget
+            u["chunk_width"] = self.chunk_width
         u.update(self.kv.utilization())
         if self.mesh is not None:
             u["mesh"] = "x".join(str(self.mesh.shape[a])
@@ -296,6 +490,8 @@ class ServeEngine:
         self.programs_run = 0
         self.tokens_wasted = 0
         self.preemptions = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
         self.kv.reset_counters()
 
 
@@ -320,6 +516,9 @@ def serve_report(completions: List[Completion], wall_s: float,
         raise ValueError("serve_report needs at least one completion")
     lats = np.array([c.latency_s for c in completions])
     ttfts = np.array([c.ttft_s for c in completions])
+    queue = np.array([c.queue_wait_s for c in completions])
+    pfill = np.array([c.prefill_s for c in completions])
+    fdec = np.array([c.first_decode_gap_s for c in completions])
     total_tokens = int(sum(len(c.tokens) for c in completions))
     rep = {
         "requests": len(completions),
@@ -332,6 +531,18 @@ def serve_report(completions: List[Completion], wall_s: float,
         "p99_latency_s": float(np.percentile(lats, 99)),
         "p50_ttft_s": float(np.percentile(ttfts, 50)),
         "p99_ttft_s": float(np.percentile(ttfts, 99)),
+        # TTFT breakdown: time queued for a slot, time absorbing the prompt
+        # (admission -> first token), and the gap to the first decode-phase
+        # tokens — what the chunked budget knob trades against throughput
+        "p50_queue_wait_s": float(np.percentile(queue, 50)),
+        "p99_queue_wait_s": float(np.percentile(queue, 99)),
+        "p50_prefill_s": float(np.percentile(pfill, 50)),
+        "p99_prefill_s": float(np.percentile(pfill, 99)),
+        "p50_first_decode_gap_s": float(np.percentile(fdec, 50)),
+        # worst inter-token stall across requests: in the two-phase engine
+        # this is dominated by blocking admission prefills; chunked bounds
+        # it at one budget-packed step
+        "max_decode_stall_s": float(max(c.max_stall_s for c in completions)),
     }
     if utilization:
         rep.update(utilization)

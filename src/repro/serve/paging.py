@@ -334,9 +334,10 @@ class PagedKV:
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
                  max_len: int, sampling=None, bucket_fn=None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, chunked: bool = False):
         from repro.core.linkage import L3_NSS
-        from repro.core.step import build_paged_decode_step, make_sampler
+        from repro.core.step import (build_paged_decode_step,
+                                     build_serve_step, make_sampler)
         _check_pageable(cfg, "PagedKV")
         self.cfg, self.params, self.opts = cfg, params, opts
         self.n_slots, self.max_len = n_slots, max_len
@@ -371,29 +372,43 @@ class PagedKV:
             self.params = params = jax.device_put(params, param_sh)
             self.cache = jax.device_put(self.cache, cache_sh)
 
+        self.chunked = chunked
+        self._copy = _make_copy_block(mesh, cache_sh)
+        # the decode program is shared by both step disciplines: two-phase
+        # decode, and the chunked engine's pure-decode fast path
         self._dec = build_paged_decode_step(cfg, opts, linkage, max_len,
                                             sampling, mesh=mesh,
                                             param_sharding=param_sh,
                                             cache_sharding=cache_sh)
-        self._sample = jax.jit(make_sampler(sampling))
-        self._scatter = _make_scatter(mesh, cache_sh)
-        self._gather = _make_gather(max_len, mesh, cache_sh)
-        self._copy = _make_copy_block(mesh, cache_sh)
-        # full-prompt prefill (the no-sharing path) — the same program as
-        # the slotted backend's, so non-shared admissions are trivially
-        # bit-identical across backends
-        self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
-                                        mesh, param_sh)
-        suffix_kwargs = {}
-        if mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            repl = NamedSharding(mesh, P())
-            suffix_kwargs = dict(in_shardings=(param_sh,) + (repl,) * 4,
-                                 out_shardings=repl)
-        self._suffix = jax.jit(
-            lambda p, t, pre, plen, n: prefill_suffix(p, t, pre, plen, cfg,
-                                                      opts, true_len=n),
-            **suffix_kwargs)
+        if chunked:
+            # the unified serve step replaces the blocking admission prefill
+            # (full-prompt AND shared-prefix suffix paths) plus the mixed
+            # prefill+decode program: per-bucket prefill shapes vanish
+            self.prompts: Dict[int, np.ndarray] = {}
+            self._serve = build_serve_step(cfg, opts, linkage, max_len,
+                                           sampling, kv_kind="paged",
+                                           mesh=mesh, param_sharding=param_sh,
+                                           cache_sharding=cache_sh)
+        else:
+            self._sample = jax.jit(make_sampler(sampling))
+            self._scatter = _make_scatter(mesh, cache_sh)
+            self._gather = _make_gather(max_len, mesh, cache_sh)
+            # full-prompt prefill (the no-sharing path) — the same program as
+            # the slotted backend's, so non-shared admissions are trivially
+            # bit-identical across backends
+            self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
+                                            mesh, param_sh)
+            suffix_kwargs = {}
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                repl = NamedSharding(mesh, P())
+                suffix_kwargs = dict(in_shardings=(param_sh,) + (repl,) * 4,
+                                     out_shardings=repl)
+            self._suffix = jax.jit(
+                lambda p, t, pre, plen, n: prefill_suffix(p, t, pre, plen,
+                                                          cfg, opts,
+                                                          true_len=n),
+                **suffix_kwargs)
 
     # -- allocation ---------------------------------------------------------
 
@@ -509,9 +524,87 @@ class PagedKV:
                 return False
         return True
 
+    # -- chunked prefill ----------------------------------------------------
+
+    def admit_chunked(self, slot: int, prompt: np.ndarray, key: jax.Array
+                      ) -> int:
+        """Begin a chunked admission: radix-match the prompt, retain the
+        shared prefix blocks (they are resident — an identical system prompt
+        prefills once), and seed the sampling chain. Blocks for the rest of
+        the prompt are demand-allocated chunk by chunk (``append_chunk``),
+        not up front — admission holds only what is actually resident."""
+        P = int(prompt.shape[0])
+        matched = self.index.match(prompt)
+        shared = min(len(matched) * self.bs, P - 1)
+        use = -(-shared // self.bs)
+        chain = BlockTable()
+        for b in matched[:use]:
+            self.pool.retain(b)
+            chain.append(b)
+        self.tables_host[slot, :] = self.trash
+        self.tables_host[slot, :len(chain)] = chain.blocks
+        self.chains[slot] = chain
+        self.prompts[slot] = np.asarray(prompt, np.int32)
+        self.pos_host[slot] = shared
+        self.prefix_shared_tokens += shared
+        self.keys = self.keys.at[slot].set(key)
+        return shared
+
+    def append_chunk(self, slot: int, start: int, tokens: np.ndarray) -> bool:
+        """Demand-allocate (and CoW-fork) the blocks the chunk [start,
+        start+len) will write, then register every prompt block the chunk
+        *completes* in the prefix index — progressively, so an identical
+        prompt admitted while this one is still mid-prefill shares the
+        blocks already landed. (Admissions in the same step still can't
+        share: non-blocking admission has nothing resident yet — the one
+        sharing case blocking two-phase admission got for free.)
+        False = pool dry: the engine preempts a slot and replans (safe to
+        retry — allocation and insertion are idempotent for an unchanged
+        chain)."""
+        n = int(np.asarray(tokens).shape[0])
+        if n == 0:
+            return True
+        chain = self.chains[slot]
+        b0, b1 = start // self.bs, (start + n - 1) // self.bs
+        while len(chain) <= b1:
+            b = self._alloc()
+            if b is None:
+                return False
+            chain.append(b)
+            self.tables_host[slot, len(chain) - 1] = b
+        for bi in range(b0, b1 + 1):
+            if not self._cow(slot, chain, bi):
+                return False
+        prompt = self.prompts[slot]
+        n_full = min(start + n, int(prompt.shape[0])) // self.bs
+        if n_full:
+            self.index.insert(prompt, chain.blocks, n_full, self.pool)
+        return True
+
+    def serve_step(self, chunk_tokens, clen, start, reset, emit0, dec_mask,
+                   dec_tok):
+        tables = jnp.asarray(self.tables_host)
+        # rows not in decode phase ride the scan against the trash block
+        # only: their garbage microsteps can never touch a live block (in
+        # particular not a CoW-shared prefix block)
+        scan_tables = jnp.asarray(
+            np.where(np.asarray(dec_mask)[:, None], self.tables_host,
+                     self.trash).astype(np.int32))
+        self.cache, t0, seq, self.keys = self._serve(
+            self.params, self.cache, jnp.asarray(chunk_tokens),
+            jnp.asarray(clen), jnp.asarray(start), jnp.asarray(reset),
+            jnp.asarray(emit0), dec_tok, jnp.asarray(dec_mask), self.keys,
+            tables, scan_tables)
+        self.pos_host[:] = (np.asarray(start, np.int64)
+                            + np.asarray(clen, np.int64)
+                            + self.K * np.asarray(dec_mask, np.int64))
+        return t0, seq
+
     def release(self, slot: int) -> None:
         for b in self.chains.pop(slot, BlockTable()).blocks:
             self.pool.free(b)
+        if self.chunked:
+            self.prompts.pop(slot, None)
         self.tables_host[slot, :] = self.trash
         self.pos_host[slot] = 0
 

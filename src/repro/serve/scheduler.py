@@ -14,6 +14,68 @@ from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
+#: smallest admission bucket — prompts shorter than this share one compiled
+#: prefill instead of one program per tiny length. Lives here (not on the
+#: engine) so every admission path — two-phase prefill and chunked — goes
+#: through the same guard and the zero-``true_len`` padding-read bug fixed
+#: in PR 3 cannot be resurrected by a new caller.
+MIN_BUCKET = 8
+
+
+def bucket_len(n: int, max_len: int) -> int:
+    """Power-of-two prompt bucket, floored at MIN_BUCKET and clipped to
+    ``max_len``: bounds the jit prefill cache under mixed-length load. The
+    floor keeps 1..7-token prompts from each minting their own compiled
+    program; ``true_len`` fixes up positions/logits so the padding is exact.
+    Empty prompts are rejected loudly — a ``true_len`` of 0 would silently
+    read position 0 of pure padding."""
+    if n < 1:
+        raise ValueError("cannot bucket an empty prompt (true_len == 0 "
+                         "would read logits from pure padding)")
+    return min(max(1 << max(n - 1, 0).bit_length(), MIN_BUCKET), max_len)
+
+
+def pack_chunks(budget: int, width: int, decode_tokens: int,
+                remaining: Sequence[int]) -> List[int]:
+    """Token-budget packer for the unified (chunked-prefill) serve step.
+
+    One engine step runs one program with a fixed token budget. Decode
+    tokens are mandatory — occupied decode slots always advance, so decode
+    never stalls behind admission — and whatever budget is left is handed
+    to mid-prefill slots as prompt chunks, FIFO by admission order.
+
+    budget:        target tokens per step (the --budget knob).
+    width:         compiled per-row chunk width W (a grant never exceeds it).
+    decode_tokens: tokens the decode scan will consume this step.
+    remaining:     per mid-prefill slot, prompt tokens still to prefill,
+                   in FIFO admission order.
+
+    Returns per-slot chunk grants (same order). Invariants — fuzzed against
+    a pure-Python oracle in tests/test_properties.py:
+
+      * sum(grants) <= max(budget - decode_tokens, 0): the budget is never
+        exceeded by chunks, and decode always wins the tie;
+      * FIFO-greedy: slot i+1 receives tokens only after slot i received
+        its full possible grant min(width, remaining[i]);
+      * 0 <= grants[i] <= min(width, remaining[i]);
+      * progress: if any budget is left and prefill work exists, the head
+        slot receives at least one token (no intra-step starvation; across
+        steps, finishing decodes release budget, so prefill always drains).
+    """
+    if budget < 1:
+        raise ValueError("pack_chunks needs budget >= 1")
+    if width < 1:
+        raise ValueError("pack_chunks needs width >= 1")
+    left = max(budget - decode_tokens, 0)
+    grants = []
+    for rem in remaining:
+        if rem < 0:
+            raise ValueError("negative remaining prompt length")
+        g = min(width, rem, left)
+        grants.append(g)
+        left -= g
+    return grants
+
 
 @dataclasses.dataclass
 class Request:
@@ -42,15 +104,47 @@ class SlotState:
     eos_seen: bool = False           # EOS observed at a host sync point
     first_token_s: Optional[float] = None
     chunks: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # chunked prefill (unified serve step): prompt tokens already resident —
+    # radix-shared prefix at admission, then += each granted chunk. A slot
+    # is in *decode phase* once prefill_pos reaches the prompt length.
+    prefill_pos: int = 0
+    fresh: bool = True               # no chunk written yet: the first chunk
+                                     # must reset the slot's stale cache marks
+    prefill_done_s: Optional[float] = None   # last prompt chunk absorbed
+    first_decode_s: Optional[float] = None   # first decode-phase tokens
+    last_emit_s: Optional[float] = None      # last time this slot emitted
+    max_stall_s: float = 0.0                 # worst inter-emission gap — in
+                                             # two-phase mode this exposes
+                                             # decode stalls behind blocking
+                                             # admission prefills
+
+    def note_emit(self, now: float) -> None:
+        if self.last_emit_s is not None:
+            self.max_stall_s = max(self.max_stall_s, now - self.last_emit_s)
+        self.last_emit_s = now
 
     @property
     def remaining(self) -> int:
         return self.req.max_new_tokens - self.produced
 
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.req.prompt).shape[0])
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < self.prompt_len
+
 
 @dataclasses.dataclass
 class Completion:
-    """A finished request with its timeline."""
+    """A finished request with its timeline.
+
+    The TTFT breakdown (``serve_report``): ``queue_wait_s`` (arrival ->
+    admission), ``prefill_s`` (admission -> last prompt chunk absorbed =
+    first token), and ``first_decode_gap_s`` (first token -> first
+    decode-phase tokens). Under chunked prefill the prefill component is
+    what the budget knob trades against decode throughput."""
     rid: int
     prompt_len: int
     tokens: np.ndarray               # (max_new_tokens,) generated ids
@@ -58,6 +152,10 @@ class Completion:
     admit_s: float
     first_token_s: float
     done_s: float
+    prefill_done_s: float = 0.0
+    first_decode_s: float = 0.0
+    max_stall_s: float = 0.0         # worst gap between consecutive token
+                                     # emissions (inter-token stall)
 
     @property
     def latency_s(self) -> float:
@@ -66,6 +164,18 @@ class Completion:
     @property
     def ttft_s(self) -> float:
         return self.first_token_s - self.arrival_s
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admit_s - self.arrival_s
+
+    @property
+    def prefill_s(self) -> float:
+        return self.prefill_done_s - self.admit_s
+
+    @property
+    def first_decode_gap_s(self) -> float:
+        return self.first_decode_s - self.prefill_done_s
 
 
 class SlotScheduler:

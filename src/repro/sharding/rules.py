@@ -295,6 +295,17 @@ class ArchSharding:
 
         return jax.tree_util.tree_map_with_path(walk, cache_tree)
 
+    def serve_chunk_operand_specs(self, paged: bool) -> Tuple[P, ...]:
+        """Non-cache operands of the unified serve step
+        (``repro.core.step.build_serve_step``): chunk tokens, lengths,
+        start positions, masks, sampling keys, and (paged) the two block
+        tables. All replicated — they are tiny host-built schedule metadata;
+        the weights and the KV store carry the real shardings, so prefill
+        chunks partition over (data, model) exactly like decode and the
+        old replicated batch-1 prefill program disappears."""
+        n = 10 if paged else 8
+        return tuple(P() for _ in range(n))
+
     def serve_paged_cache_specs(self, cache_tree) -> Any:
         """Paged engine cache: the physical block pools shard their KV-head
         axis over ``"model"`` (one *logical* block table, per-shard physical

@@ -198,3 +198,54 @@ def test_flash_attention_grad_matches_ref():
     g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g1, g2):
         np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paged *prefill* kernel (chunked-prefill serve step) vs ref.py oracle:
+# non-pow2 heads, block sizes 8/16, chunk lengths 1 / 7 / bucket-boundary,
+# resident prefixes 0 and mid-block
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P1,bs,nb,B,W,HQ,HKV,dh,starts,dt", [
+    (7, 8, 3, 2, 8, 4, 2, 64, (0, 13), jnp.float32),    # resident 0 + mid-blk
+    (9, 16, 2, 2, 7, 6, 3, 64, (5, 17), jnp.float32),   # bs=16, HKV=3, W=7
+    (5, 8, 2, 1, 1, 8, 2, 80, (9,), jnp.float32),       # chunk length 1
+    (6, 8, 3, 3, 16, 4, 1, 128, (0, 8, 3), jnp.float32),  # MQA, W=2 blocks
+    (7, 16, 2, 2, 16, 6, 3, 64, (16, 15), jnp.bfloat16),  # boundary starts
+])
+def test_paged_prefill_kernel_parity(P1, bs, nb, B, W, HQ, HKV, dh, starts,
+                                     dt):
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    ks = jax.random.split(KEY, 3)
+    kp = jax.random.normal(ks[0], (P1, bs, HKV, dh), dt)
+    vp = jax.random.normal(ks[1], (P1, bs, HKV, dh), dt)
+    q = jax.random.normal(ks[2], (B, W, HQ, dh), dt)
+    # a deterministic permuted block table over the pool (no aliasing)
+    rng = np.random.default_rng(P1 * bs + B + W)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(P1)[:nb] for _ in range(B)]).astype(np.int32))
+    start = jnp.asarray(np.array(starts, np.int32))
+    out = paged_prefill_attention(q, kp, vp, tables, start, interpret=True)
+    ref = kref.paged_prefill_attention_ref(q, kp, vp, tables, start)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+def test_paged_prefill_width_one_matches_decode_kernel():
+    """A width-1 chunk is a decode step: the prefill kernel must agree with
+    the decode kernel on the same pool/table/position state."""
+    from repro.kernels.paged_decode import paged_decode_attention
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    P1, bs, nb, B, HQ, HKV, dh = 7, 8, 3, 2, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    kp = jax.random.normal(ks[0], (P1, bs, HKV, dh), jnp.float32)
+    vp = jax.random.normal(ks[1], (P1, bs, HKV, dh), jnp.float32)
+    q = jax.random.normal(ks[2], (B, 1, HQ, dh), jnp.float32)
+    tables = jnp.asarray(np.array([[0, 2, 5], [4, 1, 6]], np.int32))
+    pos = jnp.asarray(np.array([12, 0], np.int32))      # mid-block + fresh
+    out_pf = paged_prefill_attention(q, kp, vp, tables, pos, interpret=True)
+    valid = jnp.arange(nb * bs, dtype=jnp.int32)[None] <= pos[:, None]
+    out_dec = paged_decode_attention(q[:, 0], kp, vp, tables, valid,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(out_pf[:, 0]), np.asarray(out_dec),
+                               atol=2e-5, rtol=2e-5)

@@ -156,6 +156,58 @@ def test_mesh_identity_matrix(params, kv, preset_name, mesh_name):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill on the mesh (PR 4): the unified serve step's prompt chunks
+# ride the same (data, model) shardings as decode — there is no replicated
+# batch-1 prefill program left. Identity bar unchanged.
+# ---------------------------------------------------------------------------
+
+CHUNKED_REPRESENTATIVES = [("slotted", "nss_shortcut", "1x2"),
+                           ("paged", "base", "2x1"),
+                           ("paged", "ret_byp_shortcut", "1x2")]
+
+
+@needs_devices
+@pytest.mark.parametrize("kv,preset_name,mesh_name", CHUNKED_REPRESENTATIVES)
+def test_mesh_chunked_identity_representative(params, kv, preset_name,
+                                              mesh_name):
+    reqs = _matrix_requests()
+    got, eng = run_cell(params, kv, preset_name, mesh_name, reqs,
+                        block_size=8, chunked=True, chunk_budget=6)
+    for req in reqs:
+        want = sequential_tokens(params, preset_name, req)
+        assert got[req.rid] == want, (
+            f"chunked {kv}/{preset_name}/{mesh_name} rid {req.rid}: "
+            f"mesh {got[req.rid]} != sequential {want}")
+    assert eng.utilization()["step_mode"] == "chunked"
+
+
+@pytest.mark.slow
+@needs_devices
+@pytest.mark.parametrize("mesh_name", [m for m in MESHES if m != "1x1"])
+@pytest.mark.parametrize("preset_name", PRESETS)
+@pytest.mark.parametrize("kv", BACKENDS)
+def test_mesh_chunked_identity_matrix(params, kv, preset_name, mesh_name):
+    """The full chunked matrix: chunked-mesh == chunked-1-device ==
+    two-phase-1-device == sequential, across {slotted, paged} x {base,
+    nss_shortcut, ret_byp_shortcut} x {1x2, 2x1} incl. the CoW shared
+    prefix in the workload."""
+    reqs = _matrix_requests()
+    kw = dict(block_size=8, chunked=True, chunk_budget=6)
+    one_dev, _ = run_cell(params, kv, preset_name, "1x1", reqs, **kw)
+    two_phase, _ = run_cell(params, kv, preset_name, "1x1", reqs,
+                            block_size=8)
+    got, eng = run_cell(params, kv, preset_name, mesh_name, reqs, **kw)
+    assert got == one_dev, f"chunked {kv}/{preset_name}/{mesh_name} != 1-dev"
+    assert got == two_phase, (
+        f"chunked {kv}/{preset_name}/{mesh_name} != two-phase")
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, preset_name, req), (
+            kv, preset_name, mesh_name, req.rid)
+    if kv == "paged":
+        assert eng.utilization()["kv_prefix_shared_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
 # Shared-prefix CoW and recompute-preemption under sharding (tier-1)
 # ---------------------------------------------------------------------------
 

@@ -396,3 +396,119 @@ def test_paged_decode_kernel_matches_gathered_ref():
     p = np.asarray(jax.nn.softmax(jnp.asarray(s), axis=-1))
     ref = np.einsum("bhgt,bthd->bhgd", p, vg).reshape(B, HQ, dh)
     np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill over the paged subsystem (PR 4 tentpole): prefix sharing,
+# demand allocation per chunk, and mid-prefill recompute-preemption
+# ---------------------------------------------------------------------------
+
+def _chunked(params, linkage, requests, *, n_slots=2, budget=6, **kw):
+    eng = ServeEngine(CFG, params, OPTS, linkage, n_slots=n_slots,
+                      max_len=MAX_LEN, kv="paged", chunked=True,
+                      chunk_budget=budget, **kw)
+    comps, _ = eng.run(requests, load="closed")
+    assert len(comps) == len(requests)
+    return {c.rid: c.tokens.tolist() for c in comps}, eng
+
+
+def test_chunked_paged_shared_prefix_identity(params):
+    """Shared system prompt under chunked admission: the radix index still
+    resolves the prefix once (prefill starts at ``shared``), suffix chunks
+    split across several steps, and streams match two-phase + sequential."""
+    reqs = synthetic_requests(4, prompt_len=12, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=7,
+                              shared_prefix_len=8)
+    two_phase, _ = run_engine(params, preset("byp"), reqs, kv="paged",
+                              block_size=8)
+    got, eng = _chunked(params, preset("byp"), reqs, budget=5, block_size=8)
+    assert got == two_phase
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, req), req.rid
+    u = eng.utilization()
+    assert u["kv_prefix_shared_tokens"] > 0      # later rids shared 8 tokens
+
+
+def test_chunked_paged_identical_prompts_cow(params):
+    """Identical prompts: a full-prefix radix hit prefills one clipped chunk
+    (the P-1 cap) whose final position CoW-forks the shared tail block, and
+    every stream matches the first request's. Sharing semantics differ from
+    two-phase by design: rids 0 and 1 admit in the same step, and
+    non-blocking admission has nothing resident to share yet — only rid 2
+    (admitted after a completion) hits the index. Streams are unchanged
+    either way."""
+    base = synthetic_requests(1, prompt_len=16, max_new_tokens=4,
+                              vocab_size=CFG.vocab_size, seed=9)[0]
+    reqs = [dataclasses.replace(base, rid=i) for i in range(3)]
+    got, eng = _chunked(params, preset("byp"), reqs, budget=6, block_size=8)
+    want = sequential_tokens(params, base)
+    for rid in got:
+        assert got[rid] == want, rid
+    u = eng.utilization()
+    assert u["kv_cow_forks"] >= 1
+    assert u["kv_prefix_shared_tokens"] == 15           # P-1, rid 2 only
+
+
+def test_chunked_paged_progressive_prefix_insert(params):
+    """Full prompt blocks register in the radix index as their chunks land
+    (not only at prefill completion), so a request admitted while another
+    is mid-prefill shares everything already resident."""
+    from repro.core import preset as _preset
+    eng = ServeEngine(CFG, params, OPTS, _preset("byp"), n_slots=2,
+                      max_len=MAX_LEN, kv="paged", block_size=8,
+                      chunked=True, chunk_budget=8)
+    kv = eng.kv
+    prompt = np.arange(24, dtype=np.int32) % CFG.vocab_size
+    key = eng.sampling.request_key(0)
+    assert kv.admit_chunked(0, prompt, key) == 0
+    # two chunks land 16 tokens = 2 full blocks; prompt NOT complete yet
+    assert kv.append_chunk(0, 0, prompt[:8])
+    assert kv.append_chunk(0, 8, prompt[8:16])
+    assert len(kv.index) == 2
+    # a mid-prefill admission of the same prompt shares those 16 tokens
+    assert kv.admit_chunked(1, prompt, eng.sampling.request_key(1)) == 16
+    assert kv.chains[1].blocks == kv.chains[0].blocks[:2]
+    assert kv.pool.refs[kv.chains[0][0]] == 3           # 2 chains + index
+
+
+def test_chunked_paged_mid_prefill_preemption(params):
+    """Pool pressure while a slot is still absorbing its prompt: the victim
+    may be mid-prefill (its chunks already in blocks). Recompute on
+    re-admission must replay the stream bit-identically — the chunked
+    analogue of two-phase recompute-preemption."""
+    reqs = synthetic_requests(4, prompt_len=12, max_new_tokens=10,
+                              vocab_size=CFG.vocab_size, seed=3)
+    eng = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=3,
+                      max_len=MAX_LEN, kv="paged", block_size=4,
+                      num_blocks=11, chunked=True, chunk_budget=5)
+    preempted_mid_prefill = []
+    orig = eng._preempt
+
+    def spy(slot):
+        preempted_mid_prefill.append(eng.sched.active[slot].prefilling)
+        orig(slot)
+
+    eng._preempt = spy
+    comps, _ = eng.run(reqs, load="closed")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    assert eng.preemptions > 0
+    assert any(preempted_mid_prefill), "no mid-prefill preemption exercised"
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, req), req.rid
+
+
+def test_chunked_paged_nss_shortcut_open_loop(params):
+    """Open-loop arrivals + fused L3 shortcut decode + chunked admission:
+    timing changes, streams don't."""
+    lk = preset("nss_shortcut")
+    opts = lk.model_options(OPTS, on_tpu=False)
+    reqs = synthetic_requests(4, prompt_len=10, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=4, rate=400.0)
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                      kv="paged", block_size=8, chunked=True, chunk_budget=6)
+    comps, _ = eng.run(reqs, load="open")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    eng2 = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                       kv="paged", block_size=8)
+    comps2, _ = eng2.run(reqs, load="closed")
+    assert got == {c.rid: c.tokens.tolist() for c in comps2}

@@ -355,3 +355,92 @@ def test_block_pool_cow_fork_semantics(n_chains, bs, seed):
     for b in base:
         pool.free(b)
     assert pool.n_resident == 0 and (pool.refs == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill token-budget packer: stateful fuzz vs a pure-Python model
+# (deterministic twin in tests/test_serve.py — hypothesis is optional)
+# ---------------------------------------------------------------------------
+
+class ChunkBudgetMachine(RuleBasedStateMachine):
+    """Drive the unified serve step's budget packer through random admission
+    / knob-change / step sequences while a pure-Python model tracks the
+    outstanding prefill and decode work. Asserted contract per step:
+    budget never exceeded, decode tokens always win ties, chunk grants are
+    FIFO-greedy, and the head slot always progresses when budget remains —
+    plus the global property that any workload drains to empty."""
+
+    K = 2                                    # decode tokens per slot per step
+    DECODE_BUDGET = 4                        # model: tokens after prefill
+
+    def __init__(self):
+        super().__init__()
+        from repro.serve import pack_chunks
+        self.pack = pack_chunks
+        self.budget = 8
+        self.width = 4
+        self.prefill = []                    # FIFO remaining prompt tokens
+        self.decode = []                     # remaining decode tokens
+
+    @rule(b=st.integers(1, 32))
+    def set_budget(self, b):
+        self.budget = b
+
+    @rule(w=st.integers(1, 16))
+    def set_width(self, w):
+        self.width = w
+
+    @rule(p=st.integers(1, 40))
+    def admit(self, p):
+        self.prefill.append(p)
+
+    def _one_step(self):
+        dec_tokens = self.K * len(self.decode)
+        grants = self.pack(self.budget, self.width, dec_tokens,
+                           list(self.prefill))
+        left = max(self.budget - dec_tokens, 0)
+        assert sum(grants) <= left                       # budget respected
+        for g, rem in zip(grants, self.prefill):
+            assert 0 <= g <= min(self.width, rem)        # per-grant bounds
+        for i in range(1, len(grants)):                  # FIFO-greedy order
+            if grants[i] > 0:
+                assert grants[i - 1] == min(self.width, self.prefill[i - 1])
+        if left >= 1 and self.prefill:                   # head progress
+            assert grants[0] >= 1
+        # apply the step to the model: decode always advances, a prompt
+        # whose last chunk landed enters decode phase next step
+        self.decode = [d - self.K for d in self.decode if d > self.K]
+        still = []
+        for g, rem in zip(grants, self.prefill):
+            if rem - g > 0:
+                still.append(rem - g)
+            else:
+                self.decode.append(self.DECODE_BUDGET)
+        self.prefill = still
+
+    @rule()
+    def step(self):
+        self._one_step()
+
+    @precondition(lambda self: self.prefill or self.decode)
+    @rule()
+    def drain_to_empty(self):
+        """No starvation across steps: decode completions release budget, so
+        every workload terminates."""
+        for _ in range(10_000):
+            if not (self.prefill or self.decode):
+                return
+            self._one_step()
+        raise AssertionError(
+            f"workload failed to drain: prefill={self.prefill} "
+            f"decode={self.decode} budget={self.budget} width={self.width}")
+
+    @invariant()
+    def work_is_sane(self):
+        assert all(r > 0 for r in self.prefill)
+        assert all(d > 0 for d in self.decode)
+
+
+ChunkBudgetMachine.TestCase.settings = settings(
+    max_examples=20, stateful_step_count=30, deadline=None)
+TestChunkBudgetPacker = ChunkBudgetMachine.TestCase

@@ -17,7 +17,8 @@ from repro.configs import get_config
 from repro.core import L3_NSS, LinkageConfig, MetricWriter, preset
 from repro.core.coprocess import AdmissionWorker
 from repro.models import (ModelOptions, decode_step, init_params, prefill)
-from repro.serve import (Request, ServeEngine, SlotScheduler, serve_report,
+from repro.serve import (MIN_BUCKET, Request, ServeEngine, SlotScheduler,
+                         bucket_len, pack_chunks, serve_report,
                          synthetic_requests)
 
 CFG = get_config("tinyllama-1.1b").smoke()
@@ -344,6 +345,197 @@ def test_empty_prompt_rejected_not_padded(params):
     bad = build_prefill_fn(CFG, OPTS, MAX_LEN, bucket_fn=lambda n: 4)
     with pytest.raises(ValueError, match="smaller than the prompt"):
         bad(params, np.zeros((6,), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: the unified serve step (tentpole). One program per engine
+# step — decode tokens first, budget-packed prompt chunks after — must be
+# bit-identical to BOTH the sequential oracle and the two-phase engine.
+# ---------------------------------------------------------------------------
+
+def _chunked_streams(params, reqs, linkage, *, n_slots=2, budget=6, **kw):
+    eng = ServeEngine(CFG, params, OPTS, linkage, n_slots=n_slots,
+                      max_len=MAX_LEN, chunked=True, chunk_budget=budget,
+                      **kw)
+    comps, wall = eng.run(reqs, load="closed")
+    assert len(comps) == len(reqs)
+    return {c.rid: c.tokens.tolist() for c in comps}, eng, comps, wall
+
+
+def test_chunked_matches_sequential_and_two_phase(params):
+    """Tight budget (smaller than every prompt, so admission takes several
+    chunked steps) with slot reuse: streams match the sequential oracle and
+    the pre-refactor two-phase engine token for token."""
+    reqs = synthetic_requests(5, prompt_len=11, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=0)
+    two_phase, _ = _greedy_streams(params, reqs, preset("byp"))
+    got, eng, _, _ = _chunked_streams(params, reqs, preset("byp"), budget=5)
+    assert got == two_phase
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, req), req.rid
+    # every prompt token was absorbed through the chunk pass
+    assert eng.prefill_tokens == sum(int(r.prompt.shape[0]) for r in reqs)
+    assert eng.utilization()["step_mode"] == "chunked"
+
+
+def test_chunked_nss_ret_identity(params):
+    """L3 + RET: K fused decode microsteps ride the same program as the
+    chunk pass; device futures only sync at completion. Streams stay exact
+    even when the chunk width is smaller than K."""
+    lk = LinkageConfig(level=L3_NSS, ret_async=True, decode_steps=3)
+    reqs = synthetic_requests(5, prompt_len=8, max_new_tokens=7,
+                              vocab_size=CFG.vocab_size, seed=1)
+    two_phase, _ = _greedy_streams(params, reqs, lk)
+    for budget in (2, 6, 64):    # width 2 < K=3 exercises garbage masking
+        got, _, _, _ = _chunked_streams(params, reqs, lk, budget=budget)
+        assert got == two_phase, budget
+    for req in reqs:
+        assert two_phase[req.rid] == sequential_tokens(params, req)
+
+
+def test_chunked_slotted_nss_circular_wrap_regression(params):
+    """K (fused decode microsteps) larger than a row's remaining circular
+    space: rows outside the decode mask must keep their cache bit-exact
+    through the scan — a garbage microstep write would wrap ``pos % T``
+    and clobber resident prompt K/V (caught by scripts/paged_smoke.py at
+    decode_steps=32, max_len=32)."""
+    lk = LinkageConfig(level=L3_NSS, ret_async=True, decode_steps=32)
+    reqs = synthetic_requests(4, prompt_len=16, max_new_tokens=8,
+                              vocab_size=CFG.vocab_size, seed=0,
+                              shared_prefix_len=8)
+    eng = ServeEngine(CFG, params, OPTS, lk, n_slots=2, max_len=32,
+                      chunked=True, chunk_budget=6)
+    comps, _ = eng.run(reqs, load="closed")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, req, max_len=32), \
+            req.rid
+
+
+def test_chunked_admission_never_stalls_decode(params):
+    """The point of the refactor: while a long prompt is being absorbed,
+    already-admitted slots keep producing decode tokens every step (in the
+    two-phase engine they stall for the whole prefill)."""
+    long_p = synthetic_requests(1, prompt_len=32, max_new_tokens=2,
+                                vocab_size=CFG.vocab_size, seed=5)[0]
+    short = synthetic_requests(1, prompt_len=4, max_new_tokens=12,
+                               vocab_size=CFG.vocab_size, seed=6)[0]
+    short = dataclasses.replace(short, rid=1)
+    eng = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                      max_len=MAX_LEN, chunked=True, chunk_budget=8)
+    comps, _ = eng.run([short, long_p], load="closed")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    for req in (short, long_p):
+        assert got[req.rid] == sequential_tokens(params, req)
+    # the long admission took ceil(32/7..8) > 1 steps, and short's decode
+    # tokens were produced during them: programs interleave both kinds
+    u = eng.utilization()
+    assert u["prefill_tokens"] == 36 and u["decode_tokens"] >= 12
+    assert eng.programs_run < 32 + 12      # far fewer than one-per-token
+
+
+def test_chunked_eos_and_sampling_match_two_phase(params):
+    """EOS trims at the same host sync points, and per-request sampling key
+    chains are split identically by the in-program sampler — chunked vs
+    two-phase is invisible in the streams."""
+    from repro.core import SamplingConfig
+    reqs = synthetic_requests(3, prompt_len=8, max_new_tokens=8,
+                              vocab_size=CFG.vocab_size, seed=6)
+    want = {r.rid: sequential_tokens(params, r) for r in reqs}
+    stop_at = next(i for i in range(1, 8)
+                   if want[0].index(want[0][i]) == i)
+    eos = want[0][stop_at]
+    reqs_eos = [dataclasses.replace(r, eos_id=int(eos)) for r in reqs]
+    two_phase, _ = _greedy_streams(params, reqs_eos, preset("base"))
+    got, _, _, _ = _chunked_streams(params, reqs_eos, preset("base"),
+                                    budget=5)
+    assert got == two_phase
+    sc = SamplingConfig(temperature=0.7, top_k=16, seed=42)
+    a, _ = _greedy_streams(params, reqs, preset("byp"), sampling=sc)
+    b, _, _, _ = _chunked_streams(params, reqs, preset("byp"), budget=5,
+                                  sampling=sc)
+    assert a == b and a != {r.rid: want[r.rid] for r in reqs}
+
+
+def test_chunked_ttft_breakdown(params):
+    """Satellite: serve_report splits first-token latency into queue-wait /
+    prefill / first-decode components and reports the per-step batch mix."""
+    reqs = synthetic_requests(4, prompt_len=12, max_new_tokens=5,
+                              vocab_size=CFG.vocab_size, seed=3)
+    got, eng, comps, wall = _chunked_streams(params, reqs, preset("byp"),
+                                             budget=6)
+    rep = serve_report(comps, wall, utilization=eng.utilization())
+    for k in ("p50_queue_wait_s", "p99_queue_wait_s", "p50_prefill_s",
+              "p99_prefill_s", "p50_first_decode_gap_s",
+              "prefill_tokens_per_step", "decode_tokens_per_step",
+              "chunk_budget"):
+        assert k in rep, k
+    for c in comps:
+        assert c.arrival_s <= c.admit_s <= c.prefill_done_s
+        assert c.prefill_done_s == c.first_token_s    # last chunk = token #1
+        assert c.first_token_s <= c.first_decode_s <= c.done_s
+        assert abs((c.queue_wait_s + c.prefill_s) - c.ttft_s) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Token-budget packer: deterministic twin of the hypothesis fuzz
+# (tests/test_properties.py) — hypothesis is an optional dependency
+# ---------------------------------------------------------------------------
+
+def test_pack_chunks_decode_wins_and_fifo():
+    # decode eats 4 of 10; FIFO head takes width-capped 4, next gets 2, rest 0
+    assert pack_chunks(10, 4, 4, [9, 9, 9]) == [4, 2, 0]
+    # no decode: full budget to the head first
+    assert pack_chunks(10, 8, 0, [3, 9]) == [3, 7]
+    # decode alone exceeds the budget: chunks get nothing (decode wins ties)
+    assert pack_chunks(6, 4, 8, [5, 5]) == [0, 0]
+    # grants never exceed remaining
+    assert pack_chunks(100, 50, 0, [1, 2, 3]) == [1, 2, 3]
+    # progress: budget left and work exists => head gets >= 1
+    assert pack_chunks(1, 16, 0, [32])[0] == 1
+    assert pack_chunks(5, 16, 4, [32])[0] == 1
+
+
+def test_pack_chunks_invariants_deterministic_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        budget = int(rng.integers(1, 64))
+        width = int(rng.integers(1, 32))
+        n_dec = int(rng.integers(0, 5))
+        dec_tokens = n_dec * int(rng.integers(1, 8))
+        remaining = [int(rng.integers(1, 40))
+                     for _ in range(int(rng.integers(0, 6)))]
+        grants = pack_chunks(budget, width, dec_tokens, remaining)
+        left = max(budget - dec_tokens, 0)
+        assert sum(grants) <= left                       # budget respected
+        for g, rem in zip(grants, remaining):
+            assert 0 <= g <= min(width, rem)             # per-grant bounds
+        for i in range(1, len(grants)):                  # FIFO-greedy
+            if grants[i] > 0:
+                assert grants[i - 1] == min(width, remaining[i - 1])
+        if left >= 1 and remaining:                      # progress
+            assert grants[0] >= 1
+
+
+def test_pack_chunks_rejects_bad_args():
+    with pytest.raises(ValueError, match="budget"):
+        pack_chunks(0, 4, 0, [1])
+    with pytest.raises(ValueError, match="width"):
+        pack_chunks(4, 0, 0, [1])
+    with pytest.raises(ValueError, match="negative"):
+        pack_chunks(4, 4, 0, [-1])
+
+
+def test_bucket_logic_lives_in_scheduler():
+    """Satellite fix: MIN_BUCKET / bucketing moved from the engine into the
+    scheduler module so every admission path (two-phase AND chunked) shares
+    the empty-prompt guard; the engine delegates."""
+    assert MIN_BUCKET == 8
+    assert bucket_len(1, 48) == bucket_len(7, 48) == 8
+    assert bucket_len(9, 48) == 16
+    assert bucket_len(33, 48) == 48                      # clipped to max_len
+    with pytest.raises(ValueError, match="empty prompt"):
+        bucket_len(0, 48)
 
 
 # ---------------------------------------------------------------------------

@@ -129,6 +129,40 @@ def run_chunked(budget: int = 64, json_rows=None):
             json_rows.append(rep)
 
 
+def run_preempt(json_rows=None):
+    """Swap-out vs recompute preemption under pool pressure, long-prompt
+    victims (the workload recompute is worst at: every preemption re-prefills
+    a 48-token prompt). Reported per mode: wasted prefill tokens (prompt
+    tokens absorbed beyond one pass per request — recompute's bill, ~0 under
+    swap), the victim's worst inter-token stall (re-admission latency), and
+    the swap counters (blocks/bytes through the host tier)."""
+    n_requests, prompt_len = 6, 48
+    cells = {}
+    for mode in ("recompute", "swap"):
+        rep = run_engine("tinyllama-1.1b", "nss_shortcut", n_slots=3,
+                         prompt_len=prompt_len, gen_len=24,
+                         requests=n_requests, load="closed", decode_steps=4,
+                         kv="paged", block_size=8, num_blocks=24,
+                         preempt=mode)
+        rep["workload"] = f"preemption_{mode}"
+        # one prefill pass per request is the floor; anything above it was
+        # recomputed after a preemption (shared/promoted tokens count as
+        # absorbed, so swap's bill stays ~0)
+        rep["wasted_prefill_tokens"] = (rep["prefill_tokens"]
+                                        - n_requests * prompt_len)
+        cells[mode] = rep
+        row(f"table8_preempt_{mode}", rep["mean_latency_s"] * 1e6,
+            f"tokens_per_s={rep['tokens_per_s']:.0f};"
+            f"preemptions={rep['preemptions']};"
+            f"swap_preemptions={rep.get('swap_preemptions', 0)};"
+            f"wasted_prefill_tokens={rep['wasted_prefill_tokens']};"
+            f"max_decode_stall_s={rep['max_decode_stall_s']:.4f};"
+            f"swap_bytes={rep.get('kv_host_bytes_moved', 0)}")
+        if json_rows is not None:
+            json_rows.append(rep)
+    return cells
+
+
 def run_mesh(mesh: str):
     """Sharded-serving rows: slotted + paged engines on a ``data,model``
     mesh, token streams identical to 1-device by construction (asserted in
@@ -197,6 +231,7 @@ def run(mesh: str = "", budget: int = 64):
                 f"shared_tokens={rep['kv_prefix_shared_tokens']}")
 
     run_chunked(budget=budget, json_rows=json_rows)
+    run_preempt(json_rows=json_rows)
 
     if mesh:
         run_mesh(mesh)

@@ -10,19 +10,29 @@ unified serve step: decode tokens first, budget-packed prompt chunks after)
 and every chunked stream must match the two-phase streams as well — four
 engines, one token matrix.
 
+With ``--swap`` the two-tier KV hierarchy joins the matrix: a pool far
+smaller than worst-case forces preemption, and FOUR more engines must still
+match — paged+recompute under pressure, paged+swap (two-phase), paged+swap
+(chunked, mid-prefill victims), and a warm-start restart: the swap engine's
+prefix cache is saved to disk, a fresh engine restores it, and its streams
+must match with nonzero shared tokens on its first batch (no re-prefill of
+persisted prefixes).
+
 With ``--mesh data,model`` (e.g. ``--mesh 1,2``) every engine runs sharded
 over a host device mesh (weights tensor-parallel over "model", per-shard KV
 residency) and the same identity must hold — the multi-device smoke of
 tests/test_mesh_serve.py. Virtual CPU devices are forced automatically when
 the mesh needs more than the host has.
 
-Usage: PYTHONPATH=src python scripts/paged_smoke.py [--chunked] [--mesh 1,2]
+Usage: PYTHONPATH=src python scripts/paged_smoke.py [--chunked] [--swap]
+           [--mesh 1,2]
 """
 from __future__ import annotations
 
 import argparse
 import os
 import sys
+import tempfile
 
 
 def _parse_args(argv=None):
@@ -32,6 +42,10 @@ def _parse_args(argv=None):
     p.add_argument("--chunked", action="store_true",
                    help="also run both backends with chunked prefill and "
                         "assert identity against the two-phase streams")
+    p.add_argument("--swap", action="store_true",
+                   help="also run the two-tier engines under pool pressure "
+                        "(recompute vs swap preemption, chunked swap, and a "
+                        "warm-start restart from a saved prefix cache)")
     p.add_argument("--budget", type=int, default=6,
                    help="chunked: tokens per serve step (small by default "
                         "so the smoke prompts split into several chunks)")
@@ -50,6 +64,8 @@ if _ARGS.mesh and "xla_force_host_platform_device_count" not in \
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={_need}").strip()
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +100,68 @@ def main() -> int:
         name = f"{kv}{'+chunked' if chunked else ''}"
         streams[name] = {c.rid: c.tokens.tolist() for c in comps}
         print(f"{name}: {eng.utilization()}")
+
+    if _ARGS.swap:
+        # pool pressure geometry: one-block prompts admit two slots at
+        # once, then each sequence grows to 3-4 blocks of the 5-block pool
+        # mid-decode — every swap cell must preempt. The swap cells run
+        # short fused programs (K=4; the base cells above keep the
+        # preset's K=32 long-decode regime): at K=32 a smoke request
+        # finishes in one program and decoders never collide.
+        lk_swap = dataclasses.replace(lk, decode_steps=4)
+        swap_reqs = synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                                       vocab_size=cfg.vocab_size, seed=0)
+        press = dict(n_slots=2, max_len=32, kv="paged", block_size=8,
+                     num_blocks=5, mesh=mesh)
+        swap_cells = [
+            ("paged+pressure+recompute", dict(preempt="recompute")),
+            ("paged+pressure+swap", dict(preempt="swap")),
+            # chunked admission staggers pool demand (budget-paced chunks),
+            # so its cell runs one block tighter to force the collision
+            ("paged+pressure+swap+chunked",
+             dict(preempt="swap", chunked=True, chunk_budget=_ARGS.budget,
+                  num_blocks=4)),
+        ]
+        tmpdir = tempfile.TemporaryDirectory()   # cleaned up at exit
+        cache_path = os.path.join(tmpdir.name, "prefix.npz")
+        for name, kw in swap_cells:
+            eng = ServeEngine(cfg, params, opts, lk_swap,
+                              **dict(press, **kw))
+            comps, _ = eng.run(swap_reqs, load="closed")
+            streams[name] = {c.rid: c.tokens.tolist() for c in comps}
+            print(f"{name}: {eng.utilization()}")
+            if "swap" in name and not eng.swap_preemptions:
+                print(f"FAIL: {name} never swap-preempted (pressure "
+                      "geometry too loose)", file=sys.stderr)
+                return 1
+            if name == "paged+pressure+swap":
+                eng.save_prefix_cache(cache_path)
+        # warm-start restart: a fresh engine restores the saved host tier
+        # and must replay the same streams sharing the persisted prefixes
+        eng = ServeEngine(cfg, params, opts, lk_swap, warm_start=cache_path,
+                          **press)
+        comps, _ = eng.run(swap_reqs, load="closed")
+        streams["paged+warm_start"] = {c.rid: c.tokens.tolist()
+                                       for c in comps}
+        u = eng.utilization()
+        print(f"paged+warm_start: {u}")
+        if not (eng.kv.restored_entries and u["kv_prefix_shared_tokens"]):
+            print("FAIL: warm start restored nothing "
+                  f"(restored={eng.kv.restored_entries}, shared="
+                  f"{u['kv_prefix_shared_tokens']})", file=sys.stderr)
+            return 1
+        # the swap cells decode 12 tokens vs the base cells' 8: compare the
+        # swap family against its own recompute baseline
+        base = streams.pop("paged+pressure+recompute")
+        for name in [n for n in streams if n.startswith("paged+pressure")
+                     or n == "paged+warm_start"]:
+            if streams.pop(name) != base:
+                print(f"FAIL: {name} diverges from paged+pressure+recompute",
+                      file=sys.stderr)
+                return 1
+        print(f"swap smoke OK: recompute == swap == chunked-swap == "
+              f"warm-start restart under pool pressure "
+              f"({len(swap_reqs)} requests)")
 
     names = list(streams)
     baseline = streams[names[0]]

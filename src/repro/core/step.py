@@ -399,6 +399,58 @@ def build_paged_decode_step(cfg: ArchConfig, opts: ModelOptions,
                                            cache_sharding, n_extra=1))
 
 
+def build_block_export_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
+                          block_sharding=None) -> Callable:
+    """Jitted ``(paged_cache, blk) -> tuple of {"k","v"}``: read one physical
+    block's K/V out of the device pool — (L, bs, HKV, dh) per layer group —
+    the device half of a device→host block copy (the host tier's copy is
+    ``jax.device_get`` of the result). Used by swap-out preemption and
+    prefix-cache demotion/persistence (repro.serve.paging).
+
+    With ``mesh`` the output keeps the pool's KV-head sharding
+    (``ArchSharding.serve_swap_block_specs``): each shard reads only its own
+    slice of the block — no collective — so the host tier mirrors the
+    physical shard layout on ``(data, model)`` meshes.
+    """
+
+    def export(cache, blk):
+        return tuple({"k": g["kp"][:, blk], "v": g["vp"][:, blk]}
+                     for g in cache)
+
+    kwargs: Dict[str, Any] = {}
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        kwargs = dict(in_shardings=(cache_sharding, repl),
+                      out_shardings=block_sharding)
+    return jax.jit(export, **kwargs)
+
+
+def build_block_import_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
+                          block_sharding=None) -> Callable:
+    """Jitted ``(paged_cache, kvs, blk) -> paged_cache``: write one block's
+    K/V back into the device pool — the host→device half (swap-in resume,
+    host-tier prefix promotion, warm-start restore). The pool is donated.
+
+    With ``mesh`` the incoming block carries the pool's KV-head sharding, so
+    host data placed per-shard (``repro.sharding.rules.host_to_mesh``) lands in
+    each shard's slice without resharding.
+    """
+
+    def imp(cache, kvs, blk):
+        return tuple(
+            dict(g,
+                 kp=g["kp"].at[:, blk].set(kv["k"].astype(g["kp"].dtype)),
+                 vp=g["vp"].at[:, blk].set(kv["v"].astype(g["vp"].dtype)))
+            for g, kv in zip(cache, kvs))
+
+    kwargs: Dict[str, Any] = {"donate_argnums": (0,)}
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        kwargs.update(in_shardings=(cache_sharding, block_sharding, repl),
+                      out_shardings=cache_sharding)
+    return jax.jit(imp, **kwargs)
+
+
 def build_serve_step(cfg: ArchConfig, opts: ModelOptions,
                      linkage: LinkageConfig, max_len: int,
                      sampling: Optional[SamplingConfig] = None, *,

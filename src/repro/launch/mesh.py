@@ -52,6 +52,13 @@ def mesh_device_count(spec) -> int:
     return data * model
 
 
+# Re-export: the host→device placement half of the serving two-tier KV
+# hierarchy rides next to the mesh constructors for launcher/script use;
+# the definition lives with the partition rules (repro.sharding.rules) so
+# the serving library never depends on the launch layer.
+from repro.sharding.rules import host_to_mesh  # noqa: F401,E402
+
+
 def make_serve_mesh(spec):
     """Serving mesh from a ``--mesh data,model`` flag. None when the spec is
     single-device. On CPU CI, force virtual devices first:

@@ -15,6 +15,9 @@ Two paths share one model/linkage setup:
           --slots 8 --requests 32
       python -m repro.launch.serve --preset nss_shortcut --kv paged \
           --block-size 16 --shared-prefix-len 16 --bucket-prompts
+      python -m repro.launch.serve --preset nss_shortcut --kv paged \
+          --preempt swap --prefix-cache /tmp/prefix.npz   # two-tier KV:
+          # swap-out preemption + restart-persistent prefix cache
       XLA_FLAGS=--xla_force_host_platform_device_count=2 \
           python -m repro.launch.serve --preset nss_shortcut --kv paged \
           --mesh 1,2      # sharded: TP weights + per-shard KV residency
@@ -75,26 +78,42 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                temperature: float = 0.0, top_k: int = 0,
                eos_id: int = -1, shared_prefix_len: int = 0,
                mesh: str = "", chunked: bool = False, budget: int = 256,
-               chunk_width: int = 0):
+               chunk_width: int = 0, preempt: str = "recompute",
+               victim: str = "youngest", host_blocks: int = 0,
+               prefix_cache: str = "", ttft_slo: float = 0.0):
     """Continuous-batching serving run; returns the engine report dict."""
+    import os
+
     from repro.core import SamplingConfig
     from repro.launch.mesh import make_serve_mesh
-    from repro.serve import ServeEngine, serve_report, synthetic_requests
+    from repro.serve import (PreemptionPolicy, ServeEngine, serve_report,
+                             synthetic_requests)
 
     if requests < 1:
         raise ValueError("need --requests >= 1")
+    if prefix_cache and kv != "paged":
+        # fail before the (possibly long) run, not at the save afterwards
+        raise ValueError("--prefix-cache needs --kv paged (dense slot rows "
+                         "have no prompt-keyed blocks to persist)")
 
     cfg, lk, opts, params = _setup(arch, preset_name, smoke=smoke, scale=scale,
                                    seed=seed, gen_len=gen_len,
                                    decode_steps=decode_steps)
     max_len = prompt_len + gen_len + 8
     sampling = SamplingConfig(temperature=temperature, top_k=top_k, seed=seed)
+    # --prefix-cache PATH persists the host tier across launcher runs: warm
+    # start from the file when it exists, save back after the timed run
+    warm_start = prefix_cache if prefix_cache and os.path.exists(
+        prefix_cache) else None
     eng = ServeEngine(cfg, params, opts, lk, n_slots=n_slots, max_len=max_len,
                       kv=kv, block_size=block_size,
                       num_blocks=num_blocks or None,
                       sampling=sampling, bucket_prompts=bucket_prompts,
                       mesh=make_serve_mesh(mesh), chunked=chunked,
-                      chunk_budget=budget, chunk_width=chunk_width)
+                      chunk_budget=budget, chunk_width=chunk_width,
+                      preempt=PreemptionPolicy(mode=preempt, victim=victim),
+                      host_blocks=host_blocks, warm_start=warm_start,
+                      ttft_slo_s=ttft_slo / 1e3 if ttft_slo > 0 else None)
 
     # warmup: compile prefill + decode + admission writers outside the timed
     # region (one decode program suffices — same compiled shapes as the run).
@@ -124,6 +143,10 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
     })
     if load == "open":
         rep["offered_rate_req_s"] = rate
+    if warm_start:
+        rep["prefix_cache_restored"] = eng.kv.restored_entries
+    if prefix_cache:
+        rep["prefix_cache_saved"] = eng.save_prefix_cache(prefix_cache)
     return rep
 
 
@@ -207,6 +230,26 @@ def main(argv=None) -> int:
     p.add_argument("--num-blocks", type=int, default=0,
                    help="paged: physical pool size (0 = slots*max_len/bs, "
                         "the slotted-equivalent footprint)")
+    p.add_argument("--preempt", default="recompute",
+                   choices=["recompute", "swap"],
+                   help="paged pool-pressure policy: recompute replays the "
+                        "victim from scratch; swap copies its blocks to the "
+                        "host tier and resumes without re-prefill")
+    p.add_argument("--victim", default="youngest",
+                   choices=["youngest", "lru"],
+                   help="preemption victim selection (scheduler policy): "
+                        "youngest admission, or least-recently-emitting slot")
+    p.add_argument("--host-blocks", type=int, default=0,
+                   help="paged: host-tier pool size in blocks (0 = auto: "
+                        "mirror the device pool when --preempt swap or a "
+                        "prefix cache is in play, else disabled)")
+    p.add_argument("--prefix-cache", default="",
+                   help="paged: persist the prefix cache at this path — "
+                        "warm-start from it when it exists, save back after "
+                        "the run (prompt-token-keyed, config-fingerprinted)")
+    p.add_argument("--ttft-slo", type=float, default=0.0,
+                   help="chunked: target p50 TTFT in ms — AIMD-adjusts the "
+                        "token budget per completion (0 = off)")
     p.add_argument("--chunked", action="store_true",
                    help="chunked prefill: one unified program per engine "
                         "step (decode tokens first, budget-packed prompt "
@@ -271,7 +314,11 @@ def main(argv=None) -> int:
                          eos_id=args.eos_id,
                          shared_prefix_len=args.shared_prefix_len,
                          mesh=args.mesh, chunked=args.chunked,
-                         budget=args.budget, chunk_width=args.chunk_width)
+                         budget=args.budget, chunk_width=args.chunk_width,
+                         preempt=args.preempt, victim=args.victim,
+                         host_blocks=args.host_blocks,
+                         prefix_cache=args.prefix_cache,
+                         ttft_slo=args.ttft_slo)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

@@ -9,15 +9,18 @@ beside it. See docs/serving.md.
 from repro.serve.cache import (KVBackend, SlottedKV, init_slot_cache,
                                make_slot_writer, slotify)
 from repro.serve.engine import KV_BACKENDS, ServeEngine, serve_report
-from repro.serve.paging import BlockPool, BlockTable, PagedKV, PrefixIndex
-from repro.serve.scheduler import (MIN_BUCKET, Completion, Request,
-                                   SlotScheduler, SlotState, bucket_len,
-                                   pack_chunks, synthetic_requests)
+from repro.serve.paging import (BlockPool, BlockTable, HostBlockStore,
+                                PagedKV, PrefixIndex, SwapHandle)
+from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
+                                   PreemptionPolicy, Request, SlotScheduler,
+                                   SlotState, bucket_len, pack_chunks,
+                                   synthetic_requests)
 
 __all__ = [
-    "BlockPool", "BlockTable", "Completion", "KVBackend", "KV_BACKENDS",
-    "MIN_BUCKET", "PagedKV", "PrefixIndex", "Request", "ServeEngine",
-    "SlotScheduler", "SlotState", "SlottedKV", "bucket_len",
-    "init_slot_cache", "make_slot_writer", "pack_chunks", "serve_report",
-    "slotify", "synthetic_requests",
+    "BlockPool", "BlockTable", "BudgetTuner", "Completion", "HostBlockStore",
+    "KVBackend", "KV_BACKENDS", "MIN_BUCKET", "PagedKV", "PreemptionPolicy",
+    "PrefixIndex", "Request", "ServeEngine", "SlotScheduler", "SlotState",
+    "SlottedKV", "SwapHandle", "bucket_len", "init_slot_cache",
+    "make_slot_writer", "pack_chunks", "serve_report", "slotify",
+    "synthetic_requests",
 ]

@@ -147,6 +147,41 @@ class KVBackend(Protocol):
         """Zero utilization counters (after a compile-warmup run)."""
         ...
 
+    # -- two-tier hierarchy: swap preemption + prefix persistence -----------
+    # (Paged implements these against its HostBlockStore; slotted has no
+    # host tier — swap_out returns None so the engine falls back to
+    # recompute, and persistence raises.)
+
+    def swap_out(self, slot: int):
+        """Spill the slot's KV to the host tier and release its device
+        memory; returns an opaque resume handle, or None when there is no
+        host tier / no room (the engine recompute-preempts instead)."""
+        ...
+
+    def can_swap_in(self, handle) -> bool:
+        """Is there device memory to resume this handle right now?"""
+        ...
+
+    def swap_in(self, slot: int, handle) -> bool:
+        """Restore a swapped-out sequence into ``slot`` (blocks, position,
+        sampling-chain row) — decoding continues without re-prefill."""
+        ...
+
+    def drop_swap(self, handle) -> None:
+        """Abandon a swap handle (its request will recompute instead);
+        frees the handle's host-tier blocks."""
+        ...
+
+    def save(self, path: str) -> int:
+        """Persist the prefix cache (host tier + shared device prefixes);
+        returns the number of entries written."""
+        ...
+
+    def restore(self, path: str) -> int:
+        """Load a persisted prefix cache into the host tier; returns the
+        number of entries restored. Raises on config-fingerprint mismatch."""
+        ...
+
     # -- chunked prefill (the unified serve step) ---------------------------
 
     def admit_chunked(self, slot: int, prompt: np.ndarray, key: jax.Array
@@ -252,6 +287,31 @@ class SlottedKV:
 
     def reset_counters(self) -> None:
         pass
+
+    # -- two-tier hierarchy: no host tier behind dense slot rows ------------
+
+    def swap_out(self, slot: int):
+        return None                 # engine falls back to recompute (and a
+                                    # slot row never runs out of blocks)
+
+    def can_swap_in(self, handle) -> bool:
+        return False
+
+    def swap_in(self, slot: int, handle) -> bool:
+        raise RuntimeError("slotted backend has no host tier to swap from")
+
+    def drop_swap(self, handle) -> None:
+        pass                        # swap_out never hands one out
+
+    def save(self, path: str) -> int:
+        raise ValueError("prefix-cache persistence needs the paged backend "
+                         "(kv='paged'): dense slot rows have no "
+                         "prompt-keyed blocks to persist")
+
+    def restore(self, path: str) -> int:
+        raise ValueError("prefix-cache persistence needs the paged backend "
+                         "(kv='paged'): dense slot rows have no "
+                         "prompt-keyed blocks to restore")
 
     # -- chunked prefill ----------------------------------------------------
 

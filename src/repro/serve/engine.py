@@ -21,8 +21,12 @@ Device memory is owned by a pluggable ``KVBackend`` (``--kv``):
   slotted    one dense ``max_len`` row per slot — admission capacity is
              bounded by worst-case length (``repro.serve.cache.SlottedKV``).
   paged      virtual memory for the cache: demand-allocated fixed-size
-             blocks, per-slot block tables, copy-on-write prefix sharing and
-             recompute-preemption under pool pressure
+             blocks, per-slot block tables, copy-on-write prefix sharing,
+             and — under pool pressure — recompute- or swap-out preemption
+             against a host block tier (``PreemptionPolicy``; swapped
+             sequences resume without re-prefill, evicted shared prefixes
+             demote to host and persist across restarts via
+             ``save_prefix_cache``/``warm_start``)
              (``repro.serve.paging.PagedKV``). Admission is gated on free
              *blocks*, so capacity follows tokens actually resident.
 
@@ -48,8 +52,9 @@ from repro.core.coprocess import AdmissionWorker
 from repro.core.linkage import L3_NSS, LinkageConfig
 from repro.core.step import SamplingConfig
 from repro.serve.cache import KVBackend, SlottedKV
-from repro.serve.scheduler import (MIN_BUCKET, Completion, Request,
-                                   SlotScheduler, bucket_len, pack_chunks)
+from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
+                                   PreemptionPolicy, Request, SlotScheduler,
+                                   bucket_len, pack_chunks)
 
 KV_BACKENDS = ("slotted", "paged")
 
@@ -88,7 +93,10 @@ class ServeEngine:
                  sampling: Optional[SamplingConfig] = None,
                  bucket_prompts: bool = False, mesh=None,
                  chunked: bool = False, chunk_budget: int = 256,
-                 chunk_width: int = 0):
+                 chunk_width: int = 0, preempt="recompute",
+                 host_blocks: Optional[int] = 0,
+                 warm_start: Optional[str] = None,
+                 ttft_slo_s: Optional[float] = None):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -115,26 +123,50 @@ class ServeEngine:
             if not 1 <= self.chunk_width <= max_len:
                 raise ValueError(f"chunk_width must be in [1, max_len] "
                                  f"(got {self.chunk_width})")
+        self.preempt = PreemptionPolicy.parse(preempt)
+        if ttft_slo_s is not None and not chunked:
+            raise ValueError("ttft_slo_s tunes the chunked token budget — "
+                             "it needs chunked=True")
         bucket_fn = self._bucket if bucket_prompts else None
         if kv == "slotted":
+            # host_blocks=None means "auto-size the host tier" on paged —
+            # reject it here too, not just explicit sizes
+            if warm_start or host_blocks != 0:
+                raise ValueError("the host tier (host_blocks / warm_start) "
+                                 "needs kv='paged': dense slot rows have no "
+                                 "block structure to spill")
             self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
                                            n_slots, max_len, self.sampling,
                                            bucket_fn, mesh=mesh,
                                            chunked=chunked)
         elif kv == "paged":
             from repro.serve.paging import PagedKV
+            hb = host_blocks
+            if hb in (0, None) and (self.preempt.mode == "swap"
+                                    or warm_start):
+                hb = None            # auto: mirror the device pool (and grow
+                                     # to fit the warm-start file)
             self.kv = PagedKV(cfg, params, opts, linkage, n_slots, max_len,
                               self.sampling, bucket_fn,
                               block_size=block_size, num_blocks=num_blocks,
-                              mesh=mesh, chunked=chunked)
+                              mesh=mesh, chunked=chunked, host_blocks=hb,
+                              warm_start=warm_start)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
+        self.tuner = None
+        if ttft_slo_s is not None:
+            self.tuner = BudgetTuner(
+                slo_s=ttft_slo_s, budget=self.chunk_budget,
+                floor=max(1, self.tokens_per_program),
+                cap=(self.tokens_per_program + self.chunk_width) * n_slots)
         self._next = jnp.zeros((n_slots,), jnp.int32)
         self.sched = SlotScheduler(n_slots)
         self.programs_run = 0
         self.tokens_wasted = 0       # decoded past a request's budget/EOS
         self.preemptions = 0         # paged: recompute-preempted admissions
+        self.swap_preemptions = 0    # paged: swap-out preempted (host tier)
+        self.swap_resumes = 0        # swapped slots resumed via swap-in
         self.prefill_tokens = 0      # prompt tokens admitted (incl. shared)
         self.decode_tokens = 0       # decode tokens produced
 
@@ -195,13 +227,46 @@ class ServeEngine:
                 raise RuntimeError(
                     "paged KV pool cannot hold a single active request; "
                     "fits() should have rejected it")
-            self._preempt(self.sched.youngest())
+            self._preempt(self.sched.choose_victim(self.preempt.victim))
 
     def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` under pool pressure, per the PreemptionPolicy:
+        swap parks the slot state + its host-tier KV for an exact resume;
+        recompute (or a failed swap: no host tier / pinned full) releases
+        everything and requeues the request at the head of the line."""
+        if self.preempt.mode == "swap":
+            handle = self.kv.swap_out(slot)
+            if handle is not None:
+                st = self.sched.release(slot)
+                self.sched.suspend_front(st, (handle, self._next[slot]))
+                self.swap_preemptions += 1
+                return
         st = self.sched.release(slot)
         self.kv.release(slot)
         self.sched.requeue_front(st.req)
         self.preemptions += 1
+
+    def _resume_swapped(self) -> None:
+        """Swap suspended slot states back in, oldest first — they are the
+        head of the FIFO line, so fresh admissions wait behind them (the
+        same discipline recompute's requeue_front imposes). Stops at the
+        first one the device pool cannot hold yet."""
+        while self.sched.can_resume():
+            handle, nxt = self.sched.peek_swapped()[1]
+            if not self.kv.can_swap_in(handle):
+                break                # FIFO: wait for blocks, don't skip ahead
+            slot, st, _ = self.sched.resume_next()
+            if not self.kv.swap_in(slot, handle):
+                # can_swap_in raced nothing (single-threaded) — belt and
+                # braces: fall back to recompute for this request, and free
+                # the handle's host blocks so the tier cannot leak
+                self.kv.drop_swap(handle)
+                self.sched.release(slot)
+                self.sched.requeue_front(st.req)
+                self.preemptions += 1
+                continue
+            self._next = self._next.at[slot].set(nxt)
+            self.swap_resumes += 1
 
     def step(self, now_fn: Callable[[], float]) -> List[Completion]:
         """Run one decode program; harvest tokens; evict finished slots."""
@@ -300,7 +365,7 @@ class ServeEngine:
                 raise RuntimeError(
                     "paged KV pool cannot hold a single active request; "
                     "fits() should have rejected it")
-            self._preempt(self.sched.youngest())
+            self._preempt(self.sched.choose_victim(self.preempt.victim))
 
     def _step_chunked(self, now_fn: Callable[[], float]) -> List[Completion]:
         """One unified serve program: decode tokens for occupied slots plus
@@ -391,7 +456,9 @@ class ServeEngine:
 
     def _admit_and_step(self, now_fn) -> List[Completion]:
         finished = []
-        while self.sched.can_admit():
+        self._resume_swapped()
+        while self.sched.can_admit() and not self.sched.swapped:
+            # swapped slots are the head of the line: fresh admissions wait
             head = self.sched.peek()
             if not self.kv.has_room(int(head.prompt.shape[0])):
                 break                # FIFO: wait for blocks, don't skip ahead
@@ -402,6 +469,9 @@ class ServeEngine:
         if self.sched.active:
             finished += (self._step_chunked(now_fn) if self.chunked
                          else self.step(now_fn))
+        if self.tuner is not None:
+            for c in finished:
+                self.chunk_budget = self.tuner.observe(c.ttft_s)
         return finished
 
     def run(self, requests: List[Request], *, load: str = "closed",
@@ -426,7 +496,7 @@ class ServeEngine:
                 for r in worker.poll():
                     self.sched.enqueue(r)
                 if (not self.sched.active and not self.sched.can_admit()
-                        and not worker.exhausted):
+                        and not self.sched.swapped and not worker.exhausted):
                     r = worker.wait(timeout=0.05)   # device idle: block
                     if r is not None:
                         self.sched.enqueue(r)
@@ -450,6 +520,14 @@ class ServeEngine:
             raise ValueError(f"unknown load mode {load!r}")
         return completions, rel()
 
+    # -- prefix-cache persistence -------------------------------------------
+
+    def save_prefix_cache(self, path: str) -> int:
+        """Persist the KV hierarchy's prefix cache (host tier + shared
+        device prefixes) so a restarted engine (``warm_start=path``) serves
+        the same prompts without re-prefilling them. Paged backend only."""
+        return self.kv.save(path)
+
     # -- reporting ----------------------------------------------------------
 
     def utilization(self) -> dict:
@@ -460,6 +538,9 @@ class ServeEngine:
             "programs_run": self.programs_run,
             "tokens_wasted": self.tokens_wasted,
             "preemptions": self.preemptions,
+            "preempt_policy": f"{self.preempt.mode}/{self.preempt.victim}",
+            "swap_preemptions": self.swap_preemptions,
+            "swap_resumes": self.swap_resumes,
             # the step batch mix: how the budget split between absorbing
             # prompts and producing tokens (chunked scheduling observable)
             "prefill_tokens": self.prefill_tokens,
@@ -473,6 +554,9 @@ class ServeEngine:
         if self.chunked:
             u["chunk_budget"] = self.chunk_budget
             u["chunk_width"] = self.chunk_width
+        if self.tuner is not None:
+            u["ttft_slo_s"] = self.tuner.slo_s
+            u["budget_adjustments"] = self.tuner.adjustments
         u.update(self.kv.utilization())
         if self.mesh is not None:
             u["mesh"] = "x".join(str(self.mesh.shape[a])
@@ -490,8 +574,12 @@ class ServeEngine:
         self.programs_run = 0
         self.tokens_wasted = 0
         self.preemptions = 0
+        self.swap_preemptions = 0
+        self.swap_resumes = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        if self.tuner is not None:
+            self.tuner.adjustments = 0
         self.kv.reset_counters()
 
 

@@ -19,10 +19,28 @@ sequence length; here capacity is bounded by tokens actually resident:
                 physical blocks, so they are prefilled once and shared
                 copy-on-write afterwards. Index-only blocks are evicted LRU
                 under pool pressure.
+  HostBlockStore  the second tier: a host-memory (numpy) pool with the same
+                block geometry, its own free list, refcounts and LRU ticks.
+                Cold KV state spills here instead of dying — swapped-out
+                victim chains (pinned until swap-in) and demoted prefix
+                blocks (evictable LRU) — and it is what
+                ``save``/``restore`` persist across engine restarts.
   PagedKV       the ``KVBackend`` implementation tying these to the device
                 pool: demand allocation at decode-time block boundaries,
-                CoW forks before any write to a shared block, and
-                recompute-preemption support when the pool runs dry.
+                CoW forks before any write to a shared block, and — under
+                pool pressure — either recompute-preemption or swap-out
+                preemption (device→host block copy, resume via swap-in
+                without re-prefill; the engine's ``PreemptionPolicy``
+                chooses).
+
+The two tiers talk through one-block jitted copy programs
+(``repro.core.step.build_block_export_fn`` / ``build_block_import_fn``);
+under a mesh the copies are per-shard (``ArchSharding.serve_swap_block_specs``
++ ``repro.sharding.rules.host_to_mesh``), so the host tier mirrors the
+physical shard layout. Evicted shared prefixes demote device→host and
+promote back on a radix hit; ``save(path)``/``restore(path)`` persist the
+host tier (plus a lossless export of the device radix index)
+prompt-token-keyed and config-fingerprinted.
 
 The subsystem is invisible to the application: token streams are
 bit-identical to the slotted backend (and to sequential decode) — the
@@ -33,8 +51,10 @@ generation); a full-prefix hit therefore prefills one token instead of P.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+import json
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -43,6 +63,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import prefill_suffix
+from repro.sharding.rules import host_to_mesh
 from repro.models.transformer import _check_pageable
 from repro.serve.cache import make_prefill_fn
 
@@ -120,6 +141,70 @@ class BlockTable:
 
     def replace(self, i: int, blk: int) -> None:
         self.blocks[i] = blk
+
+
+class HostBlockStore(BlockPool):
+    """The host tier of the two-tier KV hierarchy: the same ref-counted
+    free-list allocator as the device ``BlockPool`` (alloc touches, for
+    LRU), plus per-block LRU ticks and optional numpy storage. Holds
+    swapped-out sequence chains (pinned by their SwapHandles) and demoted
+    prefix blocks (one reference from the owner's prefix map — evictable
+    least-recently-touched when the tier fills).
+
+    Constructed without ``group_shapes`` it is allocator-only (refcount
+    bookkeeping with no storage) — the mode the differential fuzz in
+    tests/test_properties.py drives. With shapes — (L, bs, HKV, dh) per
+    layer group — it owns the buffers the jitted block export/import
+    programs copy through.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 group_shapes: Optional[List[Tuple[int, ...]]] = None,
+                 dtype=np.float32):
+        super().__init__(num_blocks, block_size)
+        self.tick = np.zeros(num_blocks, np.int64)
+        self._tick = 0
+        self.k = self.v = None
+        if group_shapes is not None:
+            dt = np.dtype(dtype)
+            self.k = [np.zeros((s[0], num_blocks) + tuple(s[1:]), dt)
+                      for s in group_shapes]
+            self.v = [np.zeros((s[0], num_blocks) + tuple(s[1:]), dt)
+                      for s in group_shapes]
+
+    def alloc(self) -> Optional[int]:
+        blk = super().alloc()
+        if blk is not None:
+            self.touch(blk)
+        return blk
+
+    def touch(self, blk: int) -> None:
+        self._tick += 1
+        self.tick[blk] = self._tick
+
+    def write(self, blk: int, kvs) -> None:
+        """Store one exported device block (tuple of {"k","v"} per group)."""
+        for g, kv in enumerate(kvs):
+            self.k[g][:, blk] = np.asarray(kv["k"])
+            self.v[g][:, blk] = np.asarray(kv["v"])
+
+    def read(self, blk: int):
+        """The block's K/V as the import program's operand type (copies —
+        safe to free the host block as soon as the import is dispatched)."""
+        return tuple({"k": self.k[g][:, blk].copy(),
+                      "v": self.v[g][:, blk].copy()}
+                     for g in range(len(self.k)))
+
+
+@dataclasses.dataclass
+class SwapHandle:
+    """A swapped-out sequence: its KV blocks parked in the host tier plus
+    the per-slot device state needed to resume without re-prefill."""
+    hblks: List[int]                     # host-tier block ids (chain order)
+    pos: int                             # sequence position at swap-out
+    key: jax.Array                       # (2,) uint32 sampling-chain row
+    prompt: Optional[np.ndarray] = None  # chunked: prompt source for the
+                                         # remaining (mid-prefill) chunks
 
 
 class _Node:
@@ -206,11 +291,35 @@ class PrefixIndex:
             return count + (1 if mine else 0), mine
         return sum(walk(c)[0] for c in self.root.children.values())
 
-    def evict(self, pool: BlockPool, need: int) -> int:
+    def node_tokens(self, node: _Node) -> np.ndarray:
+        """The full token prefix a node covers (root → node key concat) —
+        the host-tier / persistence key for its block."""
+        parts = []
+        while node.parent is not None:
+            parts.append(node.key)
+            node = node.parent
+        return np.array([t for key in reversed(parts) for t in key],
+                        np.int32)
+
+    def walk(self):
+        """Yield every node, parents before children (deterministic:
+        insertion order) — the persistence export order."""
+        stack = list(reversed(list(self.root.children.values())))
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(reversed(list(node.children.values())))
+
+    def evict(self, pool: BlockPool, need: int, on_evict=None) -> int:
         """Free up to ``need`` blocks, least-recently-touched leaves first
         (evicting a leaf may expose its parent — the candidate heap grows
         inward instead of rescanning the tree per block). Returns how many
-        were physically freed."""
+        were physically freed.
+
+        ``on_evict(node)``, when given, runs before each block is freed
+        (its device content is still intact) — the hook the two-tier
+        hierarchy uses to demote evicted prefixes to the host tier instead
+        of dropping them."""
         cands = [(n.tick, n.block) for n in self._by_block.values()
                  if not n.children and pool.refs[n.block] == 1]
         heapq.heapify(cands)
@@ -221,6 +330,8 @@ class PrefixIndex:
             if (node is None or node.children or node.tick != tick
                     or pool.refs[blk] != 1):
                 continue                       # stale heap entry
+            if on_evict is not None:
+                on_evict(node)
             parent = node.parent
             del parent.children[node.key]
             del self._by_block[blk]
@@ -322,6 +433,19 @@ def _make_copy_block(mesh=None, cache_sharding=None):
                    **_sharding_kwargs(mesh, cache_sharding, 2))
 
 
+def _make_set_pos(mesh=None, cache_sharding=None):
+    """Jitted ``(cache, slot, pos) -> cache``: restore one slot's device
+    position after a swap-in (the scatter program normally sets it at
+    admission; swap-in bypasses admission). Donated."""
+
+    def set_pos(cache, slot, pos):
+        return tuple(dict(g, pos=g["pos"].at[:, slot].set(pos))
+                     for g in cache)
+
+    return jax.jit(set_pos, donate_argnums=(0,),
+                   **_sharding_kwargs(mesh, cache_sharding, 2))
+
+
 # ---------------------------------------------------------------------------
 # The KV backend
 # ---------------------------------------------------------------------------
@@ -334,9 +458,13 @@ class PagedKV:
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
                  max_len: int, sampling=None, bucket_fn=None,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 mesh=None, chunked: bool = False):
+                 mesh=None, chunked: bool = False,
+                 host_blocks: Optional[int] = 0,
+                 warm_start: Optional[str] = None):
         from repro.core.linkage import L3_NSS
-        from repro.core.step import (build_paged_decode_step,
+        from repro.core.step import (build_block_export_fn,
+                                     build_block_import_fn,
+                                     build_paged_decode_step,
                                      build_serve_step, make_sampler)
         _check_pageable(cfg, "PagedKV")
         self.cfg, self.params, self.opts = cfg, params, opts
@@ -362,18 +490,52 @@ class PagedKV:
                                       opts.dtype)
         self.cow_forks = 0
         self.prefix_shared_tokens = 0
+        self.swap_out_blocks = 0
+        self.swap_in_blocks = 0
+        self.bytes_moved = 0          # every block crossing the tier boundary
+        self.prefix_demotions = 0
+        self.prefix_promotions = 0
+        self.restored_entries = 0
 
-        param_sh = cache_sh = None
+        # -- the host tier ---------------------------------------------------
+        # host_blocks: 0 disables it; None sizes it like the device pool (the
+        # swap-preemption default); warm_start grows it to fit the file.
+        if host_blocks is None:
+            host_blocks = num_blocks
+        n_persisted = 0
+        if warm_start:
+            with np.load(warm_start) as data:
+                n_persisted = int(data["n"])
+            host_blocks = max(host_blocks, n_persisted)
+        group_shapes = [(cfg.num_blocks, block_size, cfg.n_kv_heads,
+                         cfg.head_dim) for _ in cfg.block_pattern]
+        self.host: Optional[HostBlockStore] = None
+        if host_blocks > 0:
+            self.host = HostBlockStore(host_blocks, block_size,
+                                       group_shapes=group_shapes,
+                                       dtype=opts.dtype)
+        self.host_map: Dict[bytes, int] = {}     # token-prefix key -> hblk
+        self.host_keys: Dict[int, Tuple[bytes, np.ndarray]] = {}
+        self._block_bytes = sum(
+            2 * int(np.prod(s)) * np.dtype(opts.dtype).itemsize
+            for s in group_shapes)
+
+        param_sh = cache_sh = blk_sh = None
         if mesh is not None:
             from repro.sharding.rules import ArchSharding, named
             sh = ArchSharding(cfg, mesh)
             param_sh = named(mesh, sh.serve_param_specs(params))
             cache_sh = named(mesh, sh.serve_paged_cache_specs(self.cache))
+            blk_sh = named(mesh, sh.serve_swap_block_specs(self.cache))
             self.params = params = jax.device_put(params, param_sh)
             self.cache = jax.device_put(self.cache, cache_sh)
+        self._blk_sh = blk_sh
 
         self.chunked = chunked
         self._copy = _make_copy_block(mesh, cache_sh)
+        self._export = build_block_export_fn(mesh, cache_sh, blk_sh)
+        self._import = build_block_import_fn(mesh, cache_sh, blk_sh)
+        self._setpos = _make_set_pos(mesh, cache_sh)
         # the decode program is shared by both step disciplines: two-phase
         # decode, and the chunked engine's pure-decode fast path
         self._dec = build_paged_decode_step(cfg, opts, linkage, max_len,
@@ -410,11 +572,15 @@ class PagedKV:
                                                           true_len=n),
                 **suffix_kwargs)
 
+        if warm_start:
+            self.restored_entries = self.restore(warm_start)
+
     # -- allocation ---------------------------------------------------------
 
     def _alloc(self) -> Optional[int]:
         blk = self.pool.alloc()
-        if blk is None and self.index.evict(self.pool, 1):
+        if blk is None and self.index.evict(self.pool, 1,
+                                            on_evict=self._demote):
             blk = self.pool.alloc()
         return blk
 
@@ -434,12 +600,263 @@ class PagedKV:
         self.cow_forks += 1
         return True
 
+    # -- the host tier: demotion / promotion / swap -------------------------
+
+    def _host_alloc(self) -> Optional[int]:
+        """A free host block, evicting least-recently-touched *prefix map*
+        entries to make room (swapped chains are pinned by their handles)."""
+        if self.host is None:
+            return None
+        h = self.host.alloc()
+        while h is None and self._host_evict_lru():
+            h = self.host.alloc()
+        return h
+
+    def _host_evict_lru(self) -> bool:
+        cands = [(self.host.tick[h], h) for h in self.host_map.values()
+                 if self.host.refs[h] == 1]
+        if not cands:
+            return False
+        _, h = min(cands)
+        key, _ = self.host_keys.pop(h)
+        del self.host_map[key]
+        self.host.free(h)
+        return True
+
+    def _demote(self, node) -> None:
+        """Device index eviction hook: copy the block's K/V into the host
+        tier (keyed by its full token prefix) before the device block is
+        freed — evicted shared prefixes spill instead of dying."""
+        if self.host is None:
+            return
+        h = self._host_alloc()
+        if h is None:
+            return                    # host tier pinned full: drop as before
+        kvs = jax.device_get(
+            self._export(self.cache, jnp.asarray(node.block, jnp.int32)))
+        self.host.write(h, kvs)
+        tokens = self.index.node_tokens(node)
+        key = tokens.tobytes()
+        old = self.host_map.pop(key, None)
+        if old is not None:           # stale duplicate: keep the fresh copy
+            del self.host_keys[old]
+            self.host.free(old)
+        self.host_map[key] = h
+        self.host_keys[h] = (key, tokens)
+        self.host.touch(h)
+        self.prefix_demotions += 1
+        self.bytes_moved += self._block_bytes
+
+    def _promote(self, prompt: np.ndarray, matched: List[int]) -> List[int]:
+        """Extend a device radix match with host-tier hits: pop each
+        matching host entry, copy it back into a fresh device block, and
+        adopt the promoted chain into the device index (so later admissions
+        share on-device). Returns the promoted blocks — index-owned, like
+        ``PrefixIndex.match`` results."""
+        if self.host is None or not self.host_map:
+            return []
+        for b in matched:             # pin against demote-eviction below
+            self.pool.retain(b)
+        P = int(prompt.shape[0])
+        out: List[int] = []
+        i = len(matched)
+        while (i + 1) * self.bs <= P:
+            key = prompt[:(i + 1) * self.bs].tobytes()
+            h = self.host_map.pop(key, None)
+            if h is None:
+                break
+            del self.host_keys[h]
+            b = self._alloc()
+            if b is None:             # device dry: put the entry back
+                self.host_map[key] = h
+                self.host_keys[h] = (key,
+                                     prompt[:(i + 1) * self.bs].copy())
+                break
+            kvs = host_to_mesh(self.host.read(h), self._blk_sh)
+            self.cache = self._import(self.cache, kvs,
+                                      jnp.asarray(b, jnp.int32))
+            self.host.free(h)
+            out.append(b)
+            i += 1
+            self.prefix_promotions += 1
+            self.bytes_moved += self._block_bytes
+        if out:
+            self.index.insert(prompt, matched + out,
+                              len(matched) + len(out), self.pool)
+            for b in out:             # hand ownership to the index
+                self.pool.free(b)
+        for b in matched:             # drop the pins
+            self.pool.free(b)
+        return out
+
+    def _match_resident(self, prompt: np.ndarray) -> List[int]:
+        """The full resident prefix chain for a prompt: device radix match
+        extended by host-tier promotion."""
+        matched = self.index.match(prompt)
+        return matched + self._promote(prompt, matched)
+
+    def swap_out(self, slot: int) -> Optional[SwapHandle]:
+        """Copy the slot's chain into the host tier and release its device
+        memory; the returned handle resumes it via ``swap_in`` without
+        re-prefill. None when no host tier exists or it is pinned full —
+        the engine falls back to recompute-preemption."""
+        if self.host is None:
+            return None
+        chain = self.chains.get(slot)
+        if chain is None:
+            return None
+        hblks: List[int] = []
+        for _ in chain.blocks:
+            h = self._host_alloc()
+            if h is None:
+                for hb in hblks:
+                    self.host.free(hb)
+                return None
+            hblks.append(h)
+        for dblk, h in zip(chain.blocks, hblks):
+            kvs = jax.device_get(
+                self._export(self.cache, jnp.asarray(dblk, jnp.int32)))
+            self.host.write(h, kvs)
+        handle = SwapHandle(
+            hblks=hblks, pos=int(self.pos_host[slot]), key=self.keys[slot],
+            prompt=self.prompts.get(slot) if self.chunked else None)
+        self.swap_out_blocks += len(hblks)
+        self.bytes_moved += len(hblks) * self._block_bytes
+        self.release(slot)
+        return handle
+
+    def drop_swap(self, handle: SwapHandle) -> None:
+        """Abandon a swapped-out sequence (its request will recompute):
+        release the handle's host-tier blocks so they cannot leak."""
+        for h in handle.hblks:
+            self.host.free(h)
+        handle.hblks = []
+
+    def can_swap_in(self, handle: SwapHandle) -> bool:
+        """Is there device memory to resume this chain now? (Mirrors
+        ``has_room``: +1 headroom for the next demand block, free blocks
+        plus what LRU index eviction can reclaim.)"""
+        need = min(len(handle.hblks) + 1, self.pool.num_blocks)
+        if self.pool.n_free >= need:
+            return True
+        return need <= self.pool.n_free + self.index.n_evictable(self.pool)
+
+    def swap_in(self, slot: int, handle: SwapHandle) -> bool:
+        """Restore a swapped-out chain into ``slot``: host→device block
+        copies into fresh blocks, then the slot's table / position /
+        sampling-chain row. False = device pool dry (caller gates with
+        ``can_swap_in``)."""
+        dblks: List[int] = []
+        for _ in handle.hblks:
+            b = self._alloc()
+            if b is None:
+                for db in dblks:
+                    self.pool.free(db)
+                return False
+            dblks.append(b)
+        for h, b in zip(handle.hblks, dblks):
+            kvs = host_to_mesh(self.host.read(h), self._blk_sh)
+            self.cache = self._import(self.cache, kvs,
+                                      jnp.asarray(b, jnp.int32))
+        for h in handle.hblks:
+            self.host.free(h)
+        self.chains[slot] = BlockTable(dblks)
+        self.tables_host[slot, :] = self.trash
+        self.tables_host[slot, :len(dblks)] = dblks
+        self.pos_host[slot] = handle.pos
+        self.cache = self._setpos(self.cache, jnp.asarray(slot, jnp.int32),
+                                  jnp.asarray(handle.pos, jnp.int32))
+        self.keys = self.keys.at[slot].set(handle.key)
+        if self.chunked and handle.prompt is not None:
+            self.prompts[slot] = handle.prompt
+        self.swap_in_blocks += len(dblks)
+        self.bytes_moved += len(dblks) * self._block_bytes
+        return True
+
+    # -- persistence --------------------------------------------------------
+
+    def _fingerprint(self) -> str:
+        """The cache-compatibility key: KV geometry only. NOT covered:
+        parameter values — pair a cache file with the checkpoint it was
+        built from (docs/serving.md §KV memory hierarchy)."""
+        return json.dumps({
+            "arch": self.cfg.name, "layers": self.cfg.num_blocks,
+            "groups": len(self.cfg.block_pattern),
+            "n_kv_heads": self.cfg.n_kv_heads,
+            "head_dim": self.cfg.head_dim, "block_size": self.bs,
+            "dtype": np.dtype(self.opts.dtype).name}, sort_keys=True)
+
+    def save(self, path: str) -> int:
+        """Persist every prefix block the hierarchy knows — host-tier
+        entries plus a lossless export of the device radix index — keyed by
+        prompt tokens, fingerprinted by config, stored float32 (lossless
+        for f32 and bf16 pools). Returns the number of entries written."""
+        entries = []                   # (tokens, kvs) in LRU-ish order
+        seen = set()
+        for key, h in self.host_map.items():
+            entries.append((self.host_keys[h][1], self.host.read(h)))
+            seen.add(key)
+        for node in self.index.walk():
+            tokens = self.index.node_tokens(node)
+            if tokens.tobytes() in seen:
+                continue
+            kvs = jax.device_get(
+                self._export(self.cache, jnp.asarray(node.block, jnp.int32)))
+            entries.append((tokens, kvs))
+        payload: Dict[str, Any] = {
+            "fingerprint": np.array(self._fingerprint()),
+            "n": np.int64(len(entries)),
+        }
+        for i, (tokens, kvs) in enumerate(entries):
+            payload[f"tok_{i}"] = tokens
+            for g, kv in enumerate(kvs):
+                payload[f"k_{i}_{g}"] = np.asarray(kv["k"], np.float32)
+                payload[f"v_{i}_{g}"] = np.asarray(kv["v"], np.float32)
+        with open(path, "wb") as f:
+            np.savez(f, **payload)
+        return len(entries)
+
+    def restore(self, path: str) -> int:
+        """Load persisted prefix blocks into the host tier (they promote to
+        device on the first radix hit — no re-prefill). Raises on a config
+        fingerprint mismatch; keeps what fits when the tier is smaller than
+        the file. Returns the number of entries restored."""
+        dt = np.dtype(self.opts.dtype)
+        with np.load(path) as data:
+            fp = str(data["fingerprint"])
+            if fp != self._fingerprint():
+                raise ValueError(
+                    f"prefix cache at {path!r} was saved under a different "
+                    f"config: {fp} != {self._fingerprint()}")
+            restored = 0
+            for i in range(int(data["n"])):
+                tokens = data[f"tok_{i}"].astype(np.int32)
+                key = tokens.tobytes()
+                if key in self.host_map:
+                    continue
+                # plain alloc, not _host_alloc: evicting earlier-restored
+                # entries to admit later ones would churn forever and lie
+                # about the count — a full tier genuinely keeps what fits
+                h = self.host.alloc()
+                if h is None:
+                    break              # host tier full: keep what fits
+                kvs = tuple(
+                    {"k": data[f"k_{i}_{g}"].astype(dt),
+                     "v": data[f"v_{i}_{g}"].astype(dt)}
+                    for g in range(len(self.cfg.block_pattern)))
+                self.host.write(h, kvs)
+                self.host_map[key] = h
+                self.host_keys[h] = (key, tokens)
+                self.host.touch(h)
+                restored += 1
+        return restored
+
     # -- KVBackend ----------------------------------------------------------
 
     def admit(self, slot: int, prompt: np.ndarray, key: jax.Array):
         P = int(prompt.shape[0])
         n_prompt_blocks = -(-P // self.bs)
-        matched = self.index.match(prompt)
+        matched = self._match_resident(prompt)
         shared = min(len(matched) * self.bs, P - 1)
         use = -(-shared // self.bs)
         chain = BlockTable()
@@ -534,7 +951,7 @@ class PagedKV:
         the prompt are demand-allocated chunk by chunk (``append_chunk``),
         not up front — admission holds only what is actually resident."""
         P = int(prompt.shape[0])
-        matched = self.index.match(prompt)
+        matched = self._match_resident(prompt)
         shared = min(len(matched) * self.bs, P - 1)
         use = -(-shared // self.bs)
         chain = BlockTable()
@@ -622,7 +1039,7 @@ class PagedKV:
         return need <= self.pool.n_free + self.index.n_evictable(self.pool)
 
     def utilization(self) -> dict:
-        return {
+        u = {
             "kv_blocks_total": self.pool.num_blocks,
             "kv_block_size": self.bs,
             "kv_blocks_resident": self.pool.n_resident,
@@ -630,11 +1047,30 @@ class PagedKV:
             "kv_cow_forks": self.cow_forks,
             "kv_prefix_shared_tokens": self.prefix_shared_tokens,
         }
+        if self.host is not None:
+            u.update({
+                "kv_host_blocks_total": self.host.num_blocks,
+                "kv_host_blocks_resident": self.host.n_resident,
+                "kv_host_blocks_hwm": self.host.hwm,
+                "kv_swap_out_blocks": self.swap_out_blocks,
+                "kv_swap_in_blocks": self.swap_in_blocks,
+                "kv_host_bytes_moved": self.bytes_moved,
+                "kv_prefix_demotions": self.prefix_demotions,
+                "kv_prefix_promotions": self.prefix_promotions,
+            })
+        return u
 
     def reset_counters(self) -> None:
         self.cow_forks = 0
         self.prefix_shared_tokens = 0
         self.pool.hwm = self.pool.n_resident
+        self.swap_out_blocks = 0
+        self.swap_in_blocks = 0
+        self.bytes_moved = 0
+        self.prefix_demotions = 0
+        self.prefix_promotions = 0
+        if self.host is not None:
+            self.host.hwm = self.host.n_resident
 
     def drop_prefix_cache(self) -> int:
         """Evict every index-only block (e.g. to shed warmup residue before

@@ -10,9 +10,80 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """What the engine does when the paged pool runs dry mid-flight.
+
+    ``mode``:
+      recompute  release the victim's blocks and requeue its request at the
+                 head of the line — re-admission replays the stream from
+                 scratch (prefill included).
+      swap       copy the victim's blocks to the host tier
+                 (``PagedKV.swap_out``) and park its slot state; it resumes
+                 via swap-in without re-prefill. Falls back to recompute
+                 when the backend has no host tier or it is pinned full.
+
+    ``victim`` names the ``SlotScheduler.choose_victim`` policy — victim
+    selection is the scheduler's call, not the memory subsystem's.
+    """
+    mode: str = "recompute"
+    victim: str = "youngest"
+
+    MODES = ("recompute", "swap")
+    VICTIMS = ("youngest", "lru")
+
+    def validate(self) -> "PreemptionPolicy":
+        if self.mode not in self.MODES:
+            raise ValueError(f"unknown preemption mode {self.mode!r}; "
+                             f"known: {self.MODES}")
+        if self.victim not in self.VICTIMS:
+            raise ValueError(f"unknown victim policy {self.victim!r}; "
+                             f"known: {self.VICTIMS}")
+        return self
+
+    @classmethod
+    def parse(cls, spec) -> "PreemptionPolicy":
+        """A PreemptionPolicy, or a bare mode string ("recompute"|"swap")."""
+        if isinstance(spec, cls):
+            return spec.validate()
+        return cls(mode=str(spec)).validate()
+
+
+@dataclasses.dataclass
+class BudgetTuner:
+    """AIMD controller tying the chunked engine's token budget to a TTFT
+    SLO (``--ttft-slo``), fed one observation per completion.
+
+    A completion's TTFT over the SLO → additive-increase the budget (absorb
+    prompts in fewer, bigger steps); TTFT comfortably inside the SLO
+    (< ``margin`` · slo) → multiplicative-decrease toward the floor
+    (smaller steps bound every other slot's decode stall). In between:
+    hold. The budget is a host-side knob — no recompilation; the compiled
+    chunk width W caps any single grant regardless.
+    """
+    slo_s: float
+    budget: int
+    floor: int = 1
+    cap: int = 1 << 16
+    add: int = 16
+    mult: float = 0.75
+    margin: float = 0.5
+    adjustments: int = 0
+
+    def observe(self, ttft_s: float) -> int:
+        prev = self.budget
+        if ttft_s > self.slo_s:
+            self.budget = min(self.cap, self.budget + self.add)
+        elif ttft_s < self.margin * self.slo_s:
+            self.budget = max(self.floor, int(self.budget * self.mult))
+        if self.budget != prev:
+            self.adjustments += 1
+        return self.budget
 
 #: smallest admission bucket — prompts shorter than this share one compiled
 #: prefill instead of one program per tiny length. Lives here (not on the
@@ -188,6 +259,10 @@ class SlotScheduler:
         self._queue: Deque[Request] = deque()
         self.active: Dict[int, SlotState] = {}
         self._admit_seq = 0
+        #: swap-preempted slot states waiting to resume (oldest first) —
+        #: ahead of the request queue in the FIFO line, exactly like
+        #: ``requeue_front`` puts recompute victims ahead of it
+        self.swapped: Deque[Tuple[SlotState, Any]] = deque()
 
     @property
     def n_free(self) -> int:
@@ -237,7 +312,56 @@ class SlotScheduler:
 
     def youngest(self) -> int:
         """The most recently admitted active slot (the preemption victim)."""
-        return max(self.active, key=lambda s: self.active[s].admit_seq)
+        return self.choose_victim("youngest")
+
+    def choose_victim(self, policy: str = "youngest") -> int:
+        """Pick the preemption victim among active slots.
+
+        youngest  max ``admit_seq`` — the last admission loses (the default:
+                  it has the least sunk work and the head of the line keeps
+                  progressing).
+        lru       the slot that least recently emitted a token (a slot that
+                  never emitted counts as its admission time); ties go to
+                  the youngest. Under open-loop load with mid-prefill slots
+                  this preempts the stream a consumer has waited on
+                  longest to restart — the staleness-first alternative.
+        """
+        if policy == "youngest":
+            return max(self.active, key=lambda s: self.active[s].admit_seq)
+        if policy == "lru":
+            def staleness(s):
+                st = self.active[s]
+                last = (st.last_emit_s if st.last_emit_s is not None
+                        else st.admit_s)
+                return (last, -st.admit_seq)
+            return min(self.active, key=staleness)
+        raise ValueError(f"unknown victim policy {policy!r}; known: "
+                         f"{PreemptionPolicy.VICTIMS}")
+
+    # -- swap-preemption (suspended slot states) ----------------------------
+
+    def suspend_front(self, st: SlotState, handle: Any) -> None:
+        """Park a swap-preempted slot state at the head of the line (the
+        swap analogue of ``requeue_front``: preemption order unwinds back
+        to admission order)."""
+        self.swapped.appendleft((st, handle))
+
+    def peek_swapped(self) -> Optional[Tuple[SlotState, Any]]:
+        return self.swapped[0] if self.swapped else None
+
+    def can_resume(self) -> bool:
+        return bool(self.swapped) and bool(self._free)
+
+    def resume_next(self) -> tuple:
+        """Pop the oldest suspended state into the lowest free slot. The
+        resumed slot takes a fresh ``admit_seq`` — it is the youngest again,
+        exactly like a recompute victim re-admitted from the queue head."""
+        st, handle = self.swapped.popleft()
+        slot = heapq.heappop(self._free)
+        self._admit_seq += 1
+        st.admit_seq = self._admit_seq
+        self.active[slot] = st
+        return slot, st, handle
 
 
 # ---------------------------------------------------------------------------

@@ -306,6 +306,17 @@ class ArchSharding:
         n = 10 if paged else 8
         return tuple(P() for _ in range(n))
 
+    def serve_swap_block_specs(self, cache_tree) -> Any:
+        """One exported physical block — (L, bs, HKV, dh) per layer group,
+        the in/out type of ``repro.core.step.build_block_export_fn`` /
+        ``build_block_import_fn``. The KV-head axis keeps the pool's
+        ``"model"`` sharding so device↔host block copies are per-shard
+        (each shard moves only its heads' slice; the host tier mirrors the
+        physical shard layout)."""
+        kv = "model" if self.tp_kv else None
+        blk = P(None, None, kv, None)
+        return tuple({"k": blk, "v": blk} for _ in cache_tree)
+
     def serve_paged_cache_specs(self, cache_tree) -> Any:
         """Paged engine cache: the physical block pools shard their KV-head
         axis over ``"model"`` (one *logical* block table, per-shard physical
@@ -326,3 +337,16 @@ class ArchSharding:
 def named(mesh: Mesh, tree_of_specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def host_to_mesh(tree, shardings=None):
+    """Place a host (numpy) tree onto devices under explicit shardings — the
+    host→device path of the two-tier KV hierarchy (swap-in, prefix
+    promotion, warm-start restore). With ``shardings`` (a matching tree of
+    NamedShardings, e.g. ``named(mesh, serve_swap_block_specs(...))``) every
+    device receives only its slice of each leaf — no full-array broadcast
+    followed by a reshard; without, a plain single-device transfer."""
+    import jax.numpy as jnp
+    if shardings is None:
+        return jax.tree.map(jnp.asarray, tree)
+    return jax.device_put(tree, shardings)

@@ -309,3 +309,79 @@ def test_mesh_requires_jitted_linkage(params):
     with pytest.raises(ValueError, match="jitted linkage"):
         ServeEngine(CFG, params, REF_OPTS, preset("linux"), n_slots=1,
                     max_len=16, mesh=make_host_mesh(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Two-tier hierarchy on the mesh: swap-vs-recompute identity (per-shard
+# device↔host block copies) and a warm-start restart. The 1x1 column of
+# this matrix lives in tests/test_paging.py.
+# ---------------------------------------------------------------------------
+
+def _swap_cell(params, preset_name, mesh_name, reqs, *, preempt, **kw):
+    lk, opts = _linkage_opts(preset_name)
+    if lk.decode_steps > 4:
+        # short fused programs so the pressure geometry overlaps decoders
+        lk = dataclasses.replace(lk, decode_steps=4)
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=3, max_len=MAX_LEN,
+                      kv="paged", block_size=4, num_blocks=9,
+                      mesh=_mesh(mesh_name), preempt=preempt, **kw)
+    comps, _ = eng.run(reqs, load="closed")
+    return {c.rid: c.tokens.tolist() for c in comps}, eng
+
+
+def _swap_requests():
+    return synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                              vocab_size=CFG.vocab_size, seed=3)
+
+
+@needs_devices
+def test_mesh_swap_vs_recompute_identity_representative(params):
+    """1x2 nss_shortcut: swap-preempted streams == recompute-preempted ==
+    the 1-device engine, with the host tier mirroring per-shard copies
+    (each shard exports/imports only its slice of every block)."""
+    reqs = _swap_requests()
+    one_dev, _ = _swap_cell(params, "nss_shortcut", "1x1", reqs,
+                            preempt="recompute")
+    got, eng = _swap_cell(params, "nss_shortcut", "1x2", reqs,
+                          preempt="swap")
+    assert got == one_dev
+    assert eng.swap_preemptions > 0 and eng.swap_resumes > 0
+    u = eng.utilization()
+    assert u["kv_swap_out_blocks"] > 0 and u["kv_swap_in_blocks"] > 0
+
+
+@pytest.mark.slow
+@needs_devices
+@pytest.mark.parametrize("preset_name", PRESETS)
+def test_mesh_swap_identity_matrix(params, preset_name):
+    """The full 1x2 column: swap == recompute == 1-device across the three
+    linkage presets."""
+    reqs = _swap_requests()
+    one_dev, _ = _swap_cell(params, preset_name, "1x1", reqs,
+                            preempt="recompute")
+    got, eng = _swap_cell(params, preset_name, "1x2", reqs, preempt="swap")
+    assert got == one_dev, f"swap/{preset_name}/1x2 != 1-device recompute"
+    assert eng.swap_preemptions > 0
+
+
+@pytest.mark.slow
+@needs_devices
+def test_mesh_warm_start_identity(params, tmp_path):
+    """Prefix-cache persistence composes with sharding: save on a 1x2 mesh,
+    restart on the same mesh, identical streams with shared tokens on the
+    first batch (host entries promote through per-shard imports)."""
+    reqs = synthetic_requests(4, prompt_len=12, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=7,
+                              shared_prefix_len=8)
+    kw = dict(block_size=8)
+    got1, eng1 = run_cell(params, "paged", "base", "1x2", reqs, **kw)
+    path = str(tmp_path / "prefix.npz")
+    assert eng1.save_prefix_cache(path) > 0
+    got2, eng2 = run_cell(params, "paged", "base", "1x2", reqs,
+                          warm_start=path, **kw)
+    assert got2 == got1
+    u = eng2.utilization()
+    # one full 8-token block of each 12-token prompt persists (the radix
+    # covers full blocks only): 8 shared tokens per request, first batch
+    assert u["kv_prefix_shared_tokens"] == 8 * 4
+    assert u["kv_prefix_promotions"] > 0

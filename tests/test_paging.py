@@ -31,14 +31,15 @@ def params():
     return init_params(jax.random.PRNGKey(0), CFG)
 
 
-def sequential_tokens(params, req, max_len=MAX_LEN):
-    """Reference: the request alone, prefill + one-token decode loop."""
+def sequential_tokens(params, req, max_len=MAX_LEN, opts=OPTS):
+    """Reference: the request alone, prefill + one-token decode loop (at the
+    cell's own ModelOptions so shortcut presets lower like the engine)."""
     logits, cache = jax.jit(
-        lambda p, t: prefill(p, t, CFG, OPTS, max_len=max_len))(
+        lambda p, t: prefill(p, t, CFG, opts, max_len=max_len))(
             params, jnp.asarray(req.prompt)[None])
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = [int(nxt[0])]
-    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, CFG, OPTS))
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, CFG, opts))
     for _ in range(req.max_new_tokens - 1):
         logits, cache = dec(params, cache, nxt)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -512,3 +513,324 @@ def test_chunked_paged_nss_shortcut_open_loop(params):
                        kv="paged", block_size=8)
     comps2, _ = eng2.run(reqs, load="closed")
     assert got == {c.rid: c.tokens.tolist() for c in comps2}
+
+
+# ---------------------------------------------------------------------------
+# Two-tier KV hierarchy: host tier units, swap-out preemption identity,
+# demote/promote, and restart-persistent prefix cache
+# ---------------------------------------------------------------------------
+
+def test_host_block_store_alloc_free_lru():
+    from repro.serve import HostBlockStore
+    host = HostBlockStore(3, block_size=4)          # allocator-only mode
+    a, b = host.alloc(), host.alloc()
+    assert (a, b) == (0, 1) and host.n_resident == 2 and host.hwm == 2
+    assert host.tick[b] > host.tick[a]              # allocation touches
+    host.touch(a)
+    assert host.tick[a] > host.tick[b]              # LRU order flips
+    assert host.free(a) is True
+    assert host.alloc() == 0                        # lowest-first replay
+    host.retain(b)
+    assert host.free(b) is False
+    assert host.free(b) is True
+    with pytest.raises(ValueError, match="double free"):
+        host.free(b)
+    with pytest.raises(ValueError, match="retain"):
+        host.retain(b)
+
+
+def test_host_block_store_write_read_roundtrip():
+    from repro.serve import HostBlockStore
+    shape = (2, 4, 2, 8)                            # (L, bs, HKV, dh)
+    host = HostBlockStore(2, block_size=4, group_shapes=[shape],
+                          dtype=np.float32)
+    n = int(np.prod(shape))
+    kv = ({"k": np.arange(n, dtype=np.float32).reshape(shape),
+           "v": -np.arange(n, dtype=np.float32).reshape(shape)},)
+    blk = host.alloc()
+    host.write(blk, kv)
+    out = host.read(blk)
+    np.testing.assert_array_equal(out[0]["k"], kv[0]["k"])
+    np.testing.assert_array_equal(out[0]["v"], kv[0]["v"])
+    out[0]["k"][:] = 0                              # read returns copies
+    np.testing.assert_array_equal(host.read(blk)[0]["k"], kv[0]["k"])
+
+
+def _swap_linkage(preset_name):
+    lk = preset(preset_name)
+    if lk.level == L3_NSS:
+        # short fused programs so three decoding slots overlap under the
+        # pressure geometry (K=32 would outlive the 12-token budgets)
+        lk = dataclasses.replace(lk, decode_steps=4)
+    opts = lk.model_options(OPTS, on_tpu=False) if lk.shortcut else OPTS
+    return lk, opts
+
+
+PRESSURE = dict(n_slots=3, block_size=4, num_blocks=9)
+
+
+@pytest.mark.parametrize("preset_name",
+                         ["base", "nss_shortcut", "ret_byp_shortcut"])
+def test_swap_vs_recompute_identity(params, preset_name):
+    """The acceptance matrix, 1x1 column: under a pool far smaller than
+    worst-case, swap-preempted token streams are bit-identical to
+    recompute-preempted and to sequential decode — and swaps actually
+    happened (blocks moved out AND back in)."""
+    lk, opts = _swap_linkage(preset_name)
+    reqs = synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                              vocab_size=CFG.vocab_size, seed=3)
+    eng_r = ServeEngine(CFG, params, opts, lk, max_len=MAX_LEN, kv="paged",
+                        preempt="recompute", **PRESSURE)
+    rec = {c.rid: c.tokens.tolist()
+           for c in eng_r.run(reqs, load="closed")[0]}
+    eng_s = ServeEngine(CFG, params, opts, lk, max_len=MAX_LEN, kv="paged",
+                        preempt="swap", **PRESSURE)
+    swp = {c.rid: c.tokens.tolist()
+           for c in eng_s.run(reqs, load="closed")[0]}
+    assert swp == rec, f"{preset_name}: swap diverged from recompute"
+    assert eng_r.preemptions > 0
+    assert eng_s.swap_preemptions > 0 and eng_s.swap_resumes > 0
+    u = eng_s.utilization()
+    assert u["kv_swap_out_blocks"] > 0 and u["kv_swap_in_blocks"] > 0
+    assert u["kv_host_bytes_moved"] > 0
+    for req in reqs:
+        assert swp[req.rid] == sequential_tokens(params, req, opts=opts), (
+            preset_name, req.rid)
+
+
+def test_chunked_swap_vs_recompute_identity(params):
+    """Chunked engine under pool pressure with swap preemption: victims can
+    be mid-prefill (partially landed chunks swap out with the chain and the
+    prompt source rides the handle). Streams match the chunked recompute
+    engine and sequential decode."""
+    reqs = synthetic_requests(4, prompt_len=12, max_new_tokens=10,
+                              vocab_size=CFG.vocab_size, seed=3)
+    kw = dict(n_slots=3, max_len=MAX_LEN, kv="paged", block_size=4,
+              num_blocks=11, chunked=True, chunk_budget=5)
+    eng_r = ServeEngine(CFG, params, OPTS, preset("byp"), **kw)
+    rec = {c.rid: c.tokens.tolist()
+           for c in eng_r.run(reqs, load="closed")[0]}
+    eng_s = ServeEngine(CFG, params, OPTS, preset("byp"), preempt="swap",
+                        **kw)
+    swp = {c.rid: c.tokens.tolist()
+           for c in eng_s.run(reqs, load="closed")[0]}
+    assert swp == rec
+    assert eng_s.swap_preemptions > 0 and eng_s.swap_resumes > 0
+    for req in reqs:
+        assert swp[req.rid] == sequential_tokens(params, req), req.rid
+
+
+def test_swap_lru_victim_identity(params):
+    """Victim selection is a scheduler policy, not a correctness knob: the
+    LRU policy preempts different slots but every stream still matches."""
+    lk, opts = _swap_linkage("base")
+    reqs = synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                              vocab_size=CFG.vocab_size, seed=3)
+    from repro.serve import PreemptionPolicy
+    eng = ServeEngine(CFG, params, opts, lk, max_len=MAX_LEN, kv="paged",
+                      preempt=PreemptionPolicy(mode="swap", victim="lru"),
+                      **PRESSURE)
+    got = {c.rid: c.tokens.tolist() for c in eng.run(reqs, load="closed")[0]}
+    assert eng.swap_preemptions + eng.preemptions > 0
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, req), req.rid
+
+
+def test_prefix_demote_promote_roundtrip(params):
+    """Index eviction under pool pressure demotes the block to the host
+    tier instead of dropping it; a later admission of the same prompt
+    promotes it back and shares — no re-prefill of the demoted prefix."""
+    vocab = CFG.vocab_size
+    pa = (np.arange(16, dtype=np.int32) * 7 + 1) % vocab
+    pb = (np.arange(16, dtype=np.int32) * 11 + 3) % vocab
+    reqs = [Request(rid=0, prompt=pa, max_new_tokens=4),
+            Request(rid=1, prompt=pb, max_new_tokens=4),
+            Request(rid=2, prompt=pa.copy(), max_new_tokens=4)]
+    eng = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=1,
+                      max_len=MAX_LEN, kv="paged", block_size=8,
+                      num_blocks=4, host_blocks=8)
+    comps, _ = eng.run(reqs, load="closed")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    assert got[2] == got[0]                     # same prompt, same stream
+    u = eng.utilization()
+    assert u["kv_prefix_demotions"] > 0         # rid 1 evicted rid 0's blocks
+    assert u["kv_prefix_promotions"] > 0        # rid 2 pulled them back
+    assert u["kv_prefix_shared_tokens"] == 15   # P-1 of rid 2's prompt
+
+
+def test_prefix_cache_warm_start_restart(params, tmp_path):
+    """The acceptance invariant: a restarted engine with ``warm_start``
+    produces identical tokens with nonzero shared_tokens on its first
+    batch — persisted prefixes are never re-prefilled."""
+    reqs = synthetic_requests(4, prompt_len=24, max_new_tokens=5,
+                              vocab_size=CFG.vocab_size, seed=7,
+                              shared_prefix_len=16)
+    kw = dict(n_slots=2, max_len=MAX_LEN, kv="paged", block_size=8)
+    eng1 = ServeEngine(CFG, params, OPTS, preset("byp"), **kw)
+    got1 = {c.rid: c.tokens.tolist()
+            for c in eng1.run(reqs, load="closed")[0]}
+    path = str(tmp_path / "prefix.npz")
+    assert eng1.save_prefix_cache(path) > 0
+    eng2 = ServeEngine(CFG, params, OPTS, preset("byp"), warm_start=path,
+                       **kw)
+    assert eng2.kv.restored_entries > 0
+    got2 = {c.rid: c.tokens.tolist()
+            for c in eng2.run(reqs, load="closed")[0]}
+    assert got2 == got1
+    u = eng2.utilization()
+    # every request shares P-1 of its persisted prompt chain (the cap that
+    # keeps the final prompt position computing its own logits)
+    assert u["kv_prefix_shared_tokens"] == 23 * 4
+    assert u["kv_prefix_promotions"] > 0
+
+
+def test_warm_start_fingerprint_mismatch(params, tmp_path):
+    reqs = synthetic_requests(2, prompt_len=16, max_new_tokens=3,
+                              vocab_size=CFG.vocab_size, seed=1)
+    eng1 = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                       max_len=MAX_LEN, kv="paged", block_size=8)
+    eng1.run(reqs, load="closed")
+    path = str(tmp_path / "prefix.npz")
+    assert eng1.save_prefix_cache(path) > 0
+    with pytest.raises(ValueError, match="different config"):
+        ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                    max_len=MAX_LEN, kv="paged", block_size=4,
+                    warm_start=path)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                    max_len=MAX_LEN, kv="slotted", warm_start=path)
+
+
+def test_pool_scheduler_swap_differential_deterministic():
+    """Deterministic twin of the PoolSchedulerMachine swap transitions
+    (tests/test_properties.py; hypothesis is optional): random admit /
+    reserve / CoW / finish / swap-out / swap-in sequences drive a real
+    BlockPool + HostBlockStore pair while a pure-Python model mirrors every
+    reference on both tiers."""
+    from repro.serve import BlockPool, HostBlockStore
+    rng = np.random.default_rng(7)
+    N, H = 10, 6
+    pool = BlockPool(N, block_size=4)
+    host = HostBlockStore(H, block_size=4)
+    refs, hrefs = {}, {}
+    chains = {}                     # slot -> [device blk]
+    swapped = {}                    # tag -> [host blk]
+    order = []
+    next_id = [0]
+
+    def alloc():
+        blk = pool.alloc()
+        if blk is None:
+            assert pool.n_free == 0
+            return None
+        assert refs.get(blk, 0) == 0
+        refs[blk] = 1
+        return blk
+
+    def drop(blk):
+        pool.free(blk)
+        refs[blk] -= 1
+        if refs[blk] == 0:
+            del refs[blk]
+
+    for op in rng.integers(0, 7, size=500):
+        if op == 0:                                    # admit
+            n = int(rng.integers(1, 4))
+            chain, ok = [], True
+            while len(chain) < n:
+                blk = alloc()
+                if blk is None:
+                    for b in chain:
+                        drop(b)
+                    ok = False
+                    break
+                chain.append(blk)
+            if ok:
+                chains[next_id[0]] = chain
+                order.append(next_id[0])
+                next_id[0] += 1
+        elif op == 1 and chains:                       # demand-reserve
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            blk = alloc()
+            if blk is not None:
+                chains[slot].append(blk)
+        elif op == 2:                                  # CoW-ish share+fork
+            if order and rng.random() < 0.5:
+                donor = chains[order[0]]
+                pool.retain(donor[0])
+                refs[donor[0]] += 1
+                new = alloc()
+                if new is None:
+                    drop(donor[0])
+                else:
+                    drop(donor[0])
+                    chains.setdefault(-next_id[0] - 1, []).append(new)
+                    # fold the fork target into a fresh one-block chain
+                    chains[next_id[0]] = chains.pop(-next_id[0] - 1)
+                    order.append(next_id[0])
+                    next_id[0] += 1
+        elif op == 3 and chains:                       # finish
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            for b in chains.pop(slot):
+                drop(b)
+            order.remove(slot)
+        elif op == 4 and order:                        # preempt (recompute)
+            for b in chains.pop(order[-1]):
+                drop(b)
+            order.pop()
+        elif op == 5 and chains:                       # swap-out
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            hblks, ok = [], True
+            for _ in chains[slot]:
+                h = host.alloc()
+                if h is None:
+                    assert host.n_free == 0
+                    for hb in hblks:
+                        host.free(hb)
+                        del hrefs[hb]
+                    ok = False
+                    break
+                assert hrefs.get(h, 0) == 0
+                hrefs[h] = 1
+                hblks.append(h)
+            if ok:
+                for b in chains.pop(slot):
+                    drop(b)
+                order.remove(slot)
+                swapped[next_id[0]] = hblks
+                next_id[0] += 1
+        elif op == 6 and swapped:                      # swap-in
+            tag = sorted(swapped)[int(rng.integers(len(swapped)))]
+            dblks, ok = [], True
+            for _ in swapped[tag]:
+                b = alloc()
+                if b is None:
+                    for db in dblks:
+                        drop(db)
+                    ok = False
+                    break
+                dblks.append(b)
+            if ok:
+                for h in swapped.pop(tag):
+                    host.free(h)
+                    del hrefs[h]
+                chains[next_id[0]] = dblks
+                order.append(next_id[0])
+                next_id[0] += 1
+        # differential invariants on BOTH tiers, every step
+        for blk in range(N):
+            assert pool.refs[blk] == refs.get(blk, 0), blk
+        assert pool.n_free == N - len(refs)
+        for blk in range(H):
+            assert host.refs[blk] == hrefs.get(blk, 0), blk
+        assert host.n_free == H - len(hrefs)
+        assert host.n_resident <= host.hwm <= H
+    for slot in list(sorted(chains)):                  # clean teardown
+        for b in chains.pop(slot):
+            drop(b)
+    for tag in list(sorted(swapped)):
+        for h in swapped.pop(tag):
+            host.free(h)
+            del hrefs[h]
+    assert pool.n_free == N and (pool.refs == 0).all()
+    assert host.n_free == H and (host.refs == 0).all()

@@ -210,20 +210,25 @@ def test_block_pool_refcount_invariants(ops, num_blocks):
 
 class PoolSchedulerMachine(RuleBasedStateMachine):
     """Differential fuzz of the serving allocator: drive random admit /
-    demand-reserve / CoW-fork / finish / preempt sequences (the engine's
-    block-level lifecycle) through a real ``BlockPool`` while mirroring
-    every reference in a pure-Python model of refcounts + free-list size.
+    demand-reserve / CoW-fork / finish / preempt / swap-out / swap-in
+    sequences (the engine's two-tier block-level lifecycle) through a real
+    ``BlockPool`` + ``HostBlockStore`` pair while mirroring every reference
+    on both tiers in a pure-Python model of refcounts + free-list sizes.
     Any divergence shrinks to a minimal op sequence (hypothesis stateful).
     """
 
     NUM_BLOCKS = 12
+    HOST_BLOCKS = 6
 
     def __init__(self):
         super().__init__()
-        from repro.serve import BlockPool
+        from repro.serve import BlockPool, HostBlockStore
         self.pool = BlockPool(self.NUM_BLOCKS, block_size=4)
+        self.host = HostBlockStore(self.HOST_BLOCKS, block_size=4)
         self.refs = {}                 # blk -> modeled refcount (absent = 0)
+        self.hrefs = {}                # host blk -> modeled refcount
         self.chains = {}               # slot -> [blk] (a live block table)
+        self.swapped = {}              # tag -> [host blk] (a parked chain)
         self.order = []                # admission order (youngest = last)
         self.next_slot = 0
 
@@ -308,6 +313,51 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
         """Recompute-preemption: the youngest admission releases its chain."""
         self._teardown(self.order[-1])
 
+    @precondition(lambda self: self.chains)
+    @rule(data=st.data())
+    def swap_out(self, data):
+        """Swap-out preemption: the chain's blocks move device→host (one
+        host alloc per device block, then the device refs release). A dry
+        host tier rolls the swap back — the engine's recompute fallback."""
+        slot = data.draw(st.sampled_from(sorted(self.chains)))
+        hblks = []
+        for _ in self.chains[slot]:
+            h = self.host.alloc()
+            if h is None:
+                assert self.host.n_free == 0, "host alloc failed with room"
+                for hb in hblks:
+                    self.host.free(hb)
+                    del self.hrefs[hb]
+                return
+            assert self.hrefs.get(h, 0) == 0, "host handed out a live block"
+            self.hrefs[h] = 1
+            hblks.append(h)
+        self._teardown(slot)
+        self.swapped[self.next_slot] = hblks
+        self.next_slot += 1
+
+    @precondition(lambda self: self.swapped)
+    @rule(data=st.data())
+    def swap_in(self, data):
+        """Resume a parked chain: one device alloc per host block, then the
+        host refs release. A dry device pool rolls the resume back (the
+        engine waits behind ``can_swap_in`` instead)."""
+        tag = data.draw(st.sampled_from(sorted(self.swapped)))
+        dblks = []
+        for _ in self.swapped[tag]:
+            b = self._alloc()
+            if b is None:
+                for db in dblks:
+                    self._drop(db)
+                return
+            dblks.append(b)
+        for h in self.swapped.pop(tag):
+            self.host.free(h)
+            del self.hrefs[h]
+        self.chains[self.next_slot] = dblks
+        self.order.append(self.next_slot)
+        self.next_slot += 1
+
     # -- differential invariants --------------------------------------------
     @invariant()
     def refcounts_match_model(self):
@@ -319,6 +369,14 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
         assert self.pool.n_free == self.NUM_BLOCKS - len(self.refs)
         assert self.pool.n_resident == len(self.refs)
         assert self.pool.n_resident <= self.pool.hwm <= self.NUM_BLOCKS
+
+    @invariant()
+    def host_tier_matches_model(self):
+        for blk in range(self.HOST_BLOCKS):
+            assert self.host.refs[blk] == self.hrefs.get(blk, 0), blk
+        assert self.host.n_free == self.HOST_BLOCKS - len(self.hrefs)
+        assert self.host.n_resident == len(self.hrefs)
+        assert self.host.n_resident <= self.host.hwm <= self.HOST_BLOCKS
 
 
 PoolSchedulerMachine.TestCase.settings = settings(

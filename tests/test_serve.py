@@ -601,3 +601,83 @@ def test_slot_decode_kernel_matches_masked_ref():
     ref = jnp.einsum("bhgt,bthd->bhgd", jax.nn.softmax(s, axis=-1),
                      v).reshape(B, HQ, dh)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Preemption victim selection (scheduler policy) and the TTFT-SLO budget
+# tuner (two-tier hierarchy satellites)
+# ---------------------------------------------------------------------------
+
+def test_choose_victim_policies():
+    sched = SlotScheduler(3)
+    for i in range(3):
+        sched.enqueue(Request(rid=i, prompt=np.ones(4, np.int32),
+                              max_new_tokens=2))
+    s0, _ = sched.admit_next(0.0)
+    s1, _ = sched.admit_next(1.0)
+    s2, _ = sched.admit_next(2.0)
+    assert sched.choose_victim("youngest") == s2
+    assert sched.youngest() == s2                   # the legacy alias
+    # lru: least recently emitted loses
+    sched.active[s0].note_emit(5.0)
+    sched.active[s1].note_emit(3.0)
+    sched.active[s2].note_emit(4.0)
+    assert sched.choose_victim("lru") == s1
+    # a slot that never emitted counts as its admission time
+    sched.active[s1].last_emit_s = None
+    assert sched.choose_victim("lru") == s1         # admit_s=1.0 is stalest
+    # ties break toward the youngest admission
+    for s in (s0, s1, s2):
+        sched.active[s].last_emit_s = 7.0
+    assert sched.choose_victim("lru") == s2
+    with pytest.raises(ValueError, match="unknown victim"):
+        sched.choose_victim("coinflip")
+
+
+def test_preemption_policy_parse_and_validate():
+    from repro.serve import PreemptionPolicy
+    assert PreemptionPolicy.parse("swap").mode == "swap"
+    assert PreemptionPolicy.parse(
+        PreemptionPolicy(mode="swap", victim="lru")).victim == "lru"
+    with pytest.raises(ValueError, match="unknown preemption mode"):
+        PreemptionPolicy.parse("retry")
+    with pytest.raises(ValueError, match="unknown victim"):
+        PreemptionPolicy(victim="coinflip").validate()
+
+
+def test_budget_tuner_aimd_directions():
+    from repro.serve import BudgetTuner
+    t = BudgetTuner(slo_s=0.1, budget=32, floor=4, cap=64, add=16,
+                    mult=0.5, margin=0.5)
+    assert t.observe(0.2) == 48          # over SLO: additive increase
+    assert t.observe(0.2) == 64
+    assert t.observe(0.2) == 64          # capped
+    assert t.observe(0.01) == 32         # comfortably under: multiplicative
+    assert t.observe(0.01) == 16
+    assert t.observe(0.07) == 16         # inside the deadband: hold
+    for _ in range(5):
+        t.observe(0.0)
+    assert t.budget == 4                 # floored
+    assert t.adjustments == 6            # holds and saturations don't count
+
+
+def test_engine_ttft_slo_autotunes_budget(params):
+    """An unmeetable SLO drives the budget up through the AIMD loop; the
+    knob is scheduling-only, so streams still match the untuned engine."""
+    reqs = synthetic_requests(4, prompt_len=12, max_new_tokens=6,
+                              vocab_size=CFG.vocab_size, seed=7)
+    base = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                       max_len=MAX_LEN, chunked=True, chunk_budget=4)
+    want = {c.rid: c.tokens.tolist()
+            for c in base.run(reqs, load="closed")[0]}
+    eng = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                      max_len=MAX_LEN, chunked=True, chunk_budget=4,
+                      ttft_slo_s=1e-9)
+    got = {c.rid: c.tokens.tolist() for c in eng.run(reqs, load="closed")[0]}
+    assert got == want
+    assert eng.chunk_budget > 4                    # AIMD raised it
+    assert eng.tuner.adjustments > 0
+    assert eng.utilization()["budget_adjustments"] == eng.tuner.adjustments
+    with pytest.raises(ValueError, match="chunked"):
+        ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                    max_len=MAX_LEN, ttft_slo_s=0.1)

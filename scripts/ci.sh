@@ -18,13 +18,14 @@ python -m repro.launch.serve --preset nss_shortcut --load open \
     --requests 4 --slots 2 --prompt-len 16 --gen-len 16 \
     --kv paged --block-size 8 --shared-prefix-len 8
 
-echo "== smoke: slotted-vs-paged token identity (incl. chunked prefill and"
-echo "          the two-tier swap/warm-start engines under pool pressure) =="
-python scripts/paged_smoke.py --chunked --swap
+echo "== smoke: slotted-vs-paged token identity (incl. chunked prefill,"
+echo "          the two-tier swap/warm-start engines under pool pressure,"
+echo "          and speculative decode vs its plain-decode twins) =="
+python scripts/paged_smoke.py --chunked --swap --spec-decode
 
 echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh, "
-echo "          two-phase + chunked + swap/warm-start engines) =="
-python scripts/paged_smoke.py --chunked --swap --mesh 1,2
+echo "          two-phase + chunked + swap/warm-start + spec engines) =="
+python scripts/paged_smoke.py --chunked --swap --spec-decode --mesh 1,2
 
 echo "== smoke: chunked-prefill serve launcher (open-loop) =="
 python -m repro.launch.serve --preset nss_shortcut --load open \
@@ -35,5 +36,10 @@ echo "== smoke: swap-preemption serve launcher (pool pressure, host tier) =="
 python -m repro.launch.serve --preset nss_shortcut --load closed \
     --requests 4 --slots 2 --prompt-len 8 --gen-len 12 --decode-steps 4 \
     --kv paged --block-size 8 --num-blocks 5 --preempt swap
+
+echo "== smoke: speculative-decode serve launcher (n-gram drafts) =="
+python -m repro.launch.serve --preset nss_shortcut --load closed \
+    --requests 4 --slots 2 --prompt-len 18 --gen-len 14 --decode-steps 3 \
+    --kv paged --block-size 8 --spec-decode ngram --spec-width 6
 
 echo "CI OK"

@@ -18,6 +18,13 @@ prefix cache is saved to disk, a fresh engine restores it, and its streams
 must match with nonzero shared tokens on its first batch (no re-prefill of
 persisted prefixes).
 
+With ``--spec-decode`` the speculative engines join the matrix: plain
+slotted/paged engines decode a repetitive-suffix workload, then the same
+engines re-run with n-gram self-speculation (draft-and-verify programs,
+cache rollback of rejected positions) and must reproduce the plain streams
+bit for bit — with speculation demonstrably engaged (verify steps ran,
+drafts were accepted).
+
 With ``--mesh data,model`` (e.g. ``--mesh 1,2``) every engine runs sharded
 over a host device mesh (weights tensor-parallel over "model", per-shard KV
 residency) and the same identity must hold — the multi-device smoke of
@@ -25,7 +32,7 @@ tests/test_mesh_serve.py. Virtual CPU devices are forced automatically when
 the mesh needs more than the host has.
 
 Usage: PYTHONPATH=src python scripts/paged_smoke.py [--chunked] [--swap]
-           [--mesh 1,2]
+           [--spec-decode] [--mesh 1,2]
 """
 from __future__ import annotations
 
@@ -46,6 +53,10 @@ def _parse_args(argv=None):
                    help="also run the two-tier engines under pool pressure "
                         "(recompute vs swap preemption, chunked swap, and a "
                         "warm-start restart from a saved prefix cache)")
+    p.add_argument("--spec-decode", action="store_true",
+                   help="also run the speculative engines (n-gram drafts + "
+                        "verify programs) on a repetitive workload and "
+                        "assert identity against their plain-decode twins")
     p.add_argument("--budget", type=int, default=6,
                    help="chunked: tokens per serve step (small by default "
                         "so the smoke prompts split into several chunks)")
@@ -69,12 +80,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import preset
 from repro.launch.mesh import make_serve_mesh
 from repro.models import ModelOptions, init_params
-from repro.serve import ServeEngine, synthetic_requests
+from repro.serve import Request, ServeEngine, synthetic_requests
 
 
 def main() -> int:
@@ -100,6 +112,47 @@ def main() -> int:
         name = f"{kv}{'+chunked' if chunked else ''}"
         streams[name] = {c.rid: c.tokens.tolist() for c in comps}
         print(f"{name}: {eng.utilization()}")
+
+    if _ARGS.spec_decode:
+        # self-speculation needs draft history and short fused programs to
+        # engage on smoke budgets (the base cells' K=32 finishes a request
+        # in one program): K=3 + repetitive prompts (a tiled core n-gram)
+        # so the prompt-lookup proposer hits and windows actually accept
+        lk_spec = dataclasses.replace(lk, decode_steps=3)
+        rng = np.random.default_rng(5)
+        spec_reqs = []
+        for i in range(4):
+            core = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+            spec_reqs.append(Request(rid=i, prompt=np.tile(core, 3),
+                                     max_new_tokens=14))
+        for kv in ("slotted", "paged"):
+            plain = ServeEngine(cfg, params, opts, lk_spec, n_slots=2,
+                                max_len=48, kv=kv, block_size=8, mesh=mesh)
+            comps, _ = plain.run(spec_reqs, load="closed")
+            want = {c.rid: c.tokens.tolist() for c in comps}
+            eng = ServeEngine(cfg, params, opts, lk_spec, n_slots=2,
+                              max_len=48, kv=kv, block_size=8, mesh=mesh,
+                              spec_decode="ngram", spec_width=6)
+            comps, _ = eng.run(spec_reqs, load="closed")
+            got = {c.rid: c.tokens.tolist() for c in comps}
+            u = eng.utilization()
+            print(f"{kv}+spec: {u}")
+            if got != want:
+                print(f"FAIL: {kv}+spec diverges from plain decode",
+                      file=sys.stderr)
+                for rid in sorted(want):
+                    if got[rid] != want[rid]:
+                        print(f"  rid {rid}: {got[rid]} != {want[rid]}",
+                              file=sys.stderr)
+                return 1
+            if not (u["spec_steps"] and u["spec_accepted_tokens"]):
+                print(f"FAIL: {kv}+spec never engaged (steps="
+                      f"{u['spec_steps']}, accepted="
+                      f"{u['spec_accepted_tokens']})", file=sys.stderr)
+                return 1
+        print("spec smoke OK: speculative streams bit-identical to plain "
+              "decode (slotted + paged), acceptance "
+              f"{u['spec_acceptance_rate']:.2f} on the repetitive workload")
 
     if _ARGS.swap:
         # pool pressure geometry: one-block prompts admit two slots at

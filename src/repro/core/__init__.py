@@ -6,7 +6,7 @@ from repro.core.linkage import (L0_EAGER, L1_BASE, L2_BYP, L3_NSS, LEVELS,
 from repro.core.step import (LinkedStep, SamplingConfig, TrainState,
                              build_decode_step, build_paged_decode_step,
                              build_prefill_fn, build_serve_step,
-                             build_sharded_train_step,
+                             build_sharded_train_step, build_verify_step,
                              build_slot_decode_step,
                              build_train_step, init_train_state,
                              make_decode_fn, make_paged_decode_fn,
@@ -20,7 +20,8 @@ __all__ = [
     "LinkedStep", "SamplingConfig", "TrainState", "build_decode_step",
     "build_paged_decode_step", "build_prefill_fn", "build_serve_step",
     "build_sharded_train_step",
-    "build_slot_decode_step", "build_train_step", "init_train_state",
+    "build_slot_decode_step", "build_train_step", "build_verify_step",
+    "init_train_state",
     "make_decode_fn", "make_paged_decode_fn", "make_sampler",
     "make_slot_decode_fn", "make_train_step",
 ]

@@ -22,7 +22,9 @@ from repro.models import (init_params, loss_fn, prefill,
                           decode_step_paged as model_decode_paged,
                           decode_step_slots as model_decode_slots,
                           serve_chunk_step as model_serve_chunk,
-                          serve_chunk_step_paged as model_serve_chunk_paged)
+                          serve_chunk_step_paged as model_serve_chunk_paged,
+                          serve_verify_step as model_serve_verify,
+                          serve_verify_step_paged as model_serve_verify_paged)
 from repro.models.layers import ModelOptions
 from repro.optim import adamw
 from repro.sharding.rules import ArchSharding, named
@@ -555,6 +557,116 @@ def build_serve_step(cfg: ArchConfig, opts: ModelOptions,
         kwargs["donate_argnums"] = (1,)
     if mesh is not None:
         operand_specs = ArchSharding(cfg, mesh).serve_chunk_operand_specs(
+            paged)
+        kwargs["in_shardings"] = (param_sharding, cache_sharding) + tuple(
+            NamedSharding(mesh, s) for s in operand_specs)
+        repl = NamedSharding(mesh, P())
+        kwargs["out_shardings"] = (cache_sharding, repl, repl, repl)
+    return jax.jit(fn, **kwargs)
+
+
+def build_verify_step(cfg: ArchConfig, opts: ModelOptions,
+                      linkage: LinkageConfig, max_len: int,
+                      sampling: Optional[SamplingConfig] = None, *,
+                      kv_kind: str = "slotted", mesh: Optional[Mesh] = None,
+                      param_sharding=None, cache_sharding=None) -> Callable:
+    """The speculative *verify* program: one draft-widened decode step.
+
+    Each decode row feeds ``toks[s] = [next_token, d_1 .. d_m]`` (clen =
+    m + 1 — its committed next token plus m proposed drafts) through the
+    serve-chunk machinery at its own position, getting logits at every fed
+    position. An in-graph accept scan then resolves the longest accepted
+    prefix per row:
+
+      position j's logits condition on the fed prefix toks[:, :j+1] — all
+      committed-or-still-accepted tokens — so the sampled token ``t_j`` is
+      exactly what plain decode would have produced there. Row s emits t_j
+      while it is still accepting; it keeps accepting past j iff t_j equals
+      the token it fed at j + 1 (the draft the cache write already assumed).
+      n_emit = 1 + accepted drafts, and out[s, n_emit-1] is the row's new
+      committed next token. Greedy verify is therefore bit-identical to
+      plain decode by construction, and sampled verify is distribution-
+      and key-chain-exact (keys advance once per *emitted* token only).
+
+    The cache is repaired in-graph so rejected draft writes are
+    indistinguishable from never-written state: per-row ``pos`` returns to
+    ``start + n_emit`` (both backends), and slotted ``slot_pos`` marks at
+    or beyond it are invalidated (every pre-existing live entry sits below
+    ``start``, so only this program's rejected writes match). Paged block
+    residency is host-side state; its tail truncation is the backend's
+    ``rollback`` (freed-by-truncation blocks can never be CoW-shared or
+    radix-registered — they lie beyond the prompt blocks the index covers).
+
+    Signature (slotted):
+      (params, cache, toks (B,W) i32, clen (B,) i32, start (B,) i32,
+       vmask (B,) bool, keys (B,2) u32) -> (cache, out (B,W) i32,
+       n_emit (B,) i32, keys)
+    paged adds trailing ``tables (B,nb)``. Rows with vmask False (free /
+    swapped slots) carry clen 0, write nothing, and emit nothing.
+    """
+    linkage.validate()
+    sampler = make_sampler(sampling)
+    paged = kv_kind == "paged"
+    if kv_kind not in ("slotted", "paged"):
+        raise ValueError(f"unknown kv_kind {kv_kind!r}")
+
+    def fn(params, cache, toks, clen, start, vmask, keys, *tabs):
+        if paged:
+            (tables,) = tabs
+            logits, cache = model_serve_verify_paged(
+                params, cache, toks, tables, start, clen, cfg, opts, max_len)
+        else:
+            logits, cache = model_serve_verify(
+                params, cache, toks, start, clen, cfg, opts)
+        B, W = toks.shape
+        fed_next = jnp.concatenate(
+            [toks[:, 1:], jnp.zeros((B, 1), toks.dtype)], axis=1)
+
+        def body(carry, j):
+            ks, accepting, n_emit = carry
+            t, ks2 = sampler(logits[:, j], ks)
+            emit = vmask & accepting & (j < clen)
+            ks = jnp.where(emit[:, None], ks2, ks)
+            n_emit = n_emit + emit.astype(jnp.int32)
+            accepting = emit & (j + 1 < clen) & (t == fed_next[:, j])
+            return (ks, accepting, n_emit), t
+
+        (keys, _, n_emit), out = lax.scan(
+            body, (keys, jnp.ones((B,), bool), jnp.zeros((B,), jnp.int32)),
+            jnp.arange(W))
+        out = out.swapaxes(0, 1)                               # (B, W)
+        new_pos = start + n_emit
+        if paged:
+            cache = tuple(
+                dict(g, pos=jnp.where(vmask[None, :], new_pos[None, :],
+                                      g["pos"]))
+                for g in cache)
+        else:
+            cache = tuple(
+                dict(g,
+                     slot_pos=jnp.where(
+                         vmask[None, :, None]
+                         & (g["slot_pos"] >= new_pos[None, :, None]),
+                         -1, g["slot_pos"]),
+                     pos=jnp.where(vmask[None, :], new_pos[None, :],
+                                   g["pos"]))
+                for g in cache)
+        return cache, out, n_emit, keys
+
+    if linkage.level == L0_EAGER:
+        if mesh is not None:
+            raise ValueError("mesh serving needs a jitted linkage level")
+
+        def eager(*args):
+            with jax.disable_jit():
+                return fn(*args)
+        return eager
+
+    kwargs: Dict[str, Any] = {}
+    if linkage.donate:
+        kwargs["donate_argnums"] = (1,)
+    if mesh is not None:
+        operand_specs = ArchSharding(cfg, mesh).serve_verify_operand_specs(
             paged)
         kwargs["in_shardings"] = (param_sharding, cache_sharding) + tuple(
             NamedSharding(mesh, s) for s in operand_specs)

@@ -21,6 +21,9 @@ Two paths share one model/linkage setup:
       XLA_FLAGS=--xla_force_host_platform_device_count=2 \
           python -m repro.launch.serve --preset nss_shortcut --kv paged \
           --mesh 1,2      # sharded: TP weights + per-shard KV residency
+      python -m repro.launch.serve --preset nss_shortcut --kv paged \
+          --spec-decode ngram --spec-width 6   # self-speculation: n-gram
+          # drafts verified in one chunk-shaped program per step
 
   sequential        the original one-request-at-a-time loop (``--load seq``,
                     also ``run_server`` for benchmarks): the baseline the
@@ -80,7 +83,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                mesh: str = "", chunked: bool = False, budget: int = 256,
                chunk_width: int = 0, preempt: str = "recompute",
                victim: str = "youngest", host_blocks: int = 0,
-               prefix_cache: str = "", ttft_slo: float = 0.0):
+               prefix_cache: str = "", ttft_slo: float = 0.0,
+               spec_decode: str = "none", spec_width: int = 0):
     """Continuous-batching serving run; returns the engine report dict."""
     import os
 
@@ -113,7 +117,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                       chunk_budget=budget, chunk_width=chunk_width,
                       preempt=PreemptionPolicy(mode=preempt, victim=victim),
                       host_blocks=host_blocks, warm_start=warm_start,
-                      ttft_slo_s=ttft_slo / 1e3 if ttft_slo > 0 else None)
+                      ttft_slo_s=ttft_slo / 1e3 if ttft_slo > 0 else None,
+                      spec_decode=spec_decode, spec_width=spec_width)
 
     # warmup: compile prefill + decode + admission writers outside the timed
     # region (one decode program suffices — same compiled shapes as the run).
@@ -247,6 +252,15 @@ def main(argv=None) -> int:
                    help="paged: persist the prefix cache at this path — "
                         "warm-start from it when it exists, save back after "
                         "the run (prompt-token-keyed, config-fingerprinted)")
+    p.add_argument("--spec-decode", default="none",
+                   choices=["none", "ngram"],
+                   help="speculative decoding: ngram drafts W-1 tokens per "
+                        "decode row by prompt-lookup over the slot's own "
+                        "history, verified in one chunk-shaped program "
+                        "(greedy streams stay bit-identical)")
+    p.add_argument("--spec-width", type=int, default=0,
+                   help="verify window W per row: 1 next token + up to W-1 "
+                        "draft tokens (0 = default 4)")
     p.add_argument("--ttft-slo", type=float, default=0.0,
                    help="chunked: target p50 TTFT in ms — AIMD-adjusts the "
                         "token budget per completion (0 = off)")
@@ -318,7 +332,9 @@ def main(argv=None) -> int:
                          preempt=args.preempt, victim=args.victim,
                          host_blocks=args.host_blocks,
                          prefix_cache=args.prefix_cache,
-                         ttft_slo=args.ttft_slo)
+                         ttft_slo=args.ttft_slo,
+                         spec_decode=args.spec_decode,
+                         spec_width=args.spec_width)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

@@ -4,11 +4,13 @@ from repro.models.transformer import (backbone, cache_spec, decode_step,
                                       embed, init_cache, init_params, loss_fn,
                                       prefill, prefill_suffix,
                                       serve_chunk_step, serve_chunk_step_paged,
-                                      unembed_logits)
+                                      serve_verify_step,
+                                      serve_verify_step_paged, unembed_logits)
 
 __all__ = [
     "ModelOptions", "backbone", "cache_spec", "decode_step",
     "decode_step_paged", "decode_step_slots", "embed", "init_cache",
     "init_params", "loss_fn", "prefill", "prefill_suffix", "serve_chunk_step",
-    "serve_chunk_step_paged", "unembed_logits",
+    "serve_chunk_step_paged", "serve_verify_step", "serve_verify_step_paged",
+    "unembed_logits",
 ]

@@ -493,6 +493,64 @@ def serve_chunk_step_paged(params: Params, cache, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Serve verify step: the chunk pass shape, logits at EVERY fed position
+# ---------------------------------------------------------------------------
+
+def _verify_logits(params: Params, h, cfg: ArchConfig, opts: ModelOptions):
+    """Logits at all W fed positions: (B, W, V). The verify pass needs the
+    model's next-token distribution after each drafted prefix, not just the
+    chunk's last position."""
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, opts)
+    return unembed_logits(params, h, cfg)
+
+
+def serve_verify_step(params: Params, cache, tokens: jax.Array,
+                      start: jax.Array, clen: jax.Array, cfg: ArchConfig,
+                      opts: ModelOptions) -> Tuple[jax.Array, Any]:
+    """Speculative verify over the slot cache: the ``serve_chunk_step``
+    write-then-attend pass, but returning logits at every fed position
+    (B, W, V) so the caller can resolve the longest accepted draft prefix.
+
+    No reset mask: verify rows are mid-generation (their cache rows are
+    live), and padding rows keep clen 0, writing nothing.
+    """
+    _check_pageable(cfg, "serve_verify_step")
+    h = jnp.take(params["embed"], tokens, axis=0).astype(opts.dtype)
+
+    def layer_fn(spec, bp, x, cl):
+        hh = L.rmsnorm(bp["norm1"], x, cfg.norm_eps, opts)
+        mix, cl = L.attention_serve_chunk(bp["mixer"], hh, cl, cfg, opts,
+                                          start, clen)
+        x = _chunk_mlp(bp, x + mix, cfg, spec, opts)
+        return x, cl
+
+    h, new_cache = _serve_chunk_block(params, cache, h, cfg, opts, layer_fn)
+    return _verify_logits(params, h, cfg, opts), new_cache
+
+
+def serve_verify_step_paged(params: Params, cache, tokens: jax.Array,
+                            tables: jax.Array, start: jax.Array,
+                            clen: jax.Array, cfg: ArchConfig,
+                            opts: ModelOptions, max_len: int
+                            ) -> Tuple[jax.Array, Any]:
+    """``serve_verify_step`` against the paged block pools (tables: (B, nb)):
+    the ``serve_chunk_step_paged`` pass with all-position logits (B, W, V)."""
+    _check_pageable(cfg, "serve_verify_step_paged")
+    h = jnp.take(params["embed"], tokens, axis=0).astype(opts.dtype)
+
+    def layer_fn(spec, bp, x, cl):
+        hh = L.rmsnorm(bp["norm1"], x, cfg.norm_eps, opts)
+        mix, cl = L.attention_serve_chunk_paged(bp["mixer"], hh, cl, tables,
+                                                cfg, opts, start, clen,
+                                                max_len)
+        x = _chunk_mlp(bp, x + mix, cfg, spec, opts)
+        return x, cl
+
+    h, new_cache = _serve_chunk_block(params, cache, h, cfg, opts, layer_fn)
+    return _verify_logits(params, h, cfg, opts), new_cache
+
+
+# ---------------------------------------------------------------------------
 # Prefill: full forward that also fills the cache
 # ---------------------------------------------------------------------------
 

@@ -12,12 +12,14 @@ from repro.serve.engine import KV_BACKENDS, ServeEngine, serve_report
 from repro.serve.paging import (BlockPool, BlockTable, HostBlockStore,
                                 PagedKV, PrefixIndex, SwapHandle)
 from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
+                                   DraftProposer,
                                    PreemptionPolicy, Request, SlotScheduler,
                                    SlotState, bucket_len, pack_chunks,
                                    synthetic_requests)
 
 __all__ = [
-    "BlockPool", "BlockTable", "BudgetTuner", "Completion", "HostBlockStore",
+    "BlockPool", "BlockTable", "BudgetTuner", "Completion", "DraftProposer",
+    "HostBlockStore",
     "KVBackend", "KV_BACKENDS", "MIN_BUCKET", "PagedKV", "PreemptionPolicy",
     "PrefixIndex", "Request", "ServeEngine", "SlotScheduler", "SlotState",
     "SlottedKV", "SwapHandle", "bucket_len", "init_slot_cache",

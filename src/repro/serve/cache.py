@@ -207,6 +207,23 @@ class KVBackend(Protocol):
         first tokens of prompt-completing rows and the decode tokens."""
         ...
 
+    # -- speculative decode (draft-and-verify) ------------------------------
+
+    def verify_step(self, tokens, clen, start, vmask) -> tuple:
+        """Run the verify program (``build_verify_step``) over the slots:
+        each vmask row feeds its committed next token plus drafts at its own
+        position. Returns (out (B,W), n_emit (B,)): the emitted tokens and
+        how many of each row's W are real (1 + accepted drafts)."""
+        ...
+
+    def rollback(self, slot: int, new_len: int) -> None:
+        """Commit the verify outcome for ``slot``: the sequence is exactly
+        ``new_len`` tokens long again. Device-side state was already
+        repaired in-graph; this truncates host bookkeeping (paged: frees
+        draft-tail blocks past the accepted length and rewinds pos_host;
+        slotted: nothing survives the in-graph repair)."""
+        ...
+
 
 class SlottedKV:
     """Dense slot-row backend (the PR-1 layout) behind the KVBackend API.
@@ -220,9 +237,9 @@ class SlottedKV:
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
                  max_len: int, sampling=None, bucket_fn=None, mesh=None,
-                 chunked: bool = False):
+                 chunked: bool = False, spec: bool = False):
         from repro.core.step import (build_serve_step, build_slot_decode_step,
-                                     make_sampler)
+                                     build_verify_step, make_sampler)
         self.cfg, self.params, self.opts = cfg, params, opts
         self.n_slots, self.max_len = n_slots, max_len
         self.bucket_fn = bucket_fn
@@ -251,11 +268,17 @@ class SlottedKV:
                                            sampling, kv_kind="slotted",
                                            mesh=mesh, param_sharding=param_sh,
                                            cache_sharding=cache_sh)
-        else:
+        if not chunked:
             self._write = make_slot_writer(mesh, cache_sh)
             self._prefill = make_prefill_fn(cfg, opts, max_len, bucket_fn,
                                             mesh, param_sh)
             self._sample = jax.jit(make_sampler(sampling))
+        if spec:
+            self._verify = build_verify_step(cfg, opts, linkage, max_len,
+                                             sampling, kv_kind="slotted",
+                                             mesh=mesh,
+                                             param_sharding=param_sh,
+                                             cache_sharding=cache_sh)
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
 
     def admit(self, slot: int, prompt: np.ndarray, key: jax.Array):
@@ -334,3 +357,15 @@ class SlottedKV:
             jnp.asarray(clen), jnp.asarray(start), jnp.asarray(reset),
             jnp.asarray(emit0), dec_tok, jnp.asarray(dec_mask), self.keys)
         return t0, seq
+
+    # -- speculative decode -------------------------------------------------
+
+    def verify_step(self, tokens, clen, start, vmask):
+        self.cache, out, n_emit, self.keys = self._verify(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(clen),
+            jnp.asarray(start), jnp.asarray(vmask), self.keys)
+        return out, n_emit
+
+    def rollback(self, slot: int, new_len: int) -> None:
+        pass    # the verify program repaired slot_pos/pos in-graph; a dense
+                # row has no host-side residency to truncate

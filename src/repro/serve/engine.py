@@ -53,10 +53,11 @@ from repro.core.linkage import L3_NSS, LinkageConfig
 from repro.core.step import SamplingConfig
 from repro.serve.cache import KVBackend, SlottedKV
 from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
-                                   PreemptionPolicy, Request, SlotScheduler,
-                                   bucket_len, pack_chunks)
+                                   DraftProposer, PreemptionPolicy, Request,
+                                   SlotScheduler, bucket_len, pack_chunks)
 
 KV_BACKENDS = ("slotted", "paged")
+SPEC_MODES = ("none", "ngram")
 
 
 class ServeEngine:
@@ -96,7 +97,8 @@ class ServeEngine:
                  chunk_width: int = 0, preempt="recompute",
                  host_blocks: Optional[int] = 0,
                  warm_start: Optional[str] = None,
-                 ttft_slo_s: Optional[float] = None):
+                 ttft_slo_s: Optional[float] = None,
+                 spec_decode: str = "none", spec_width: int = 0):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -127,6 +129,19 @@ class ServeEngine:
         if ttft_slo_s is not None and not chunked:
             raise ValueError("ttft_slo_s tunes the chunked token budget — "
                              "it needs chunked=True")
+        # speculative decode: a scheduler-side DraftProposer feeds W-wide
+        # draft-and-verify programs; "none" never builds the verify program
+        if spec_decode not in SPEC_MODES:
+            raise ValueError(f"unknown spec_decode {spec_decode!r}; known: "
+                             f"{SPEC_MODES}")
+        self.proposer: Optional[DraftProposer] = None
+        self.spec_width = 0
+        if spec_decode != "none":
+            self.spec_width = spec_width or 4
+            if not 1 <= self.spec_width <= max_len:
+                raise ValueError(f"spec_width must be in [1, max_len] "
+                                 f"(got {self.spec_width})")
+            self.proposer = DraftProposer(self.spec_width)
         bucket_fn = self._bucket if bucket_prompts else None
         if kv == "slotted":
             # host_blocks=None means "auto-size the host tier" on paged —
@@ -138,7 +153,8 @@ class ServeEngine:
             self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
                                            n_slots, max_len, self.sampling,
                                            bucket_fn, mesh=mesh,
-                                           chunked=chunked)
+                                           chunked=chunked,
+                                           spec=self.proposer is not None)
         elif kv == "paged":
             from repro.serve.paging import PagedKV
             hb = host_blocks
@@ -150,7 +166,8 @@ class ServeEngine:
                               self.sampling, bucket_fn,
                               block_size=block_size, num_blocks=num_blocks,
                               mesh=mesh, chunked=chunked, host_blocks=hb,
-                              warm_start=warm_start)
+                              warm_start=warm_start,
+                              spec=self.proposer is not None)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
@@ -169,6 +186,12 @@ class ServeEngine:
         self.swap_resumes = 0        # swapped slots resumed via swap-in
         self.prefill_tokens = 0      # prompt tokens admitted (incl. shared)
         self.decode_tokens = 0       # decode tokens produced
+        self.spec_steps = 0          # verify programs run
+        self.spec_draft_tokens = 0   # drafts fed into verify programs
+        self.spec_accepted_tokens = 0   # ...that the model confirmed
+        self.spec_wasted_tokens = 0  # ...that it rejected (verify compute
+                                     # spent on positions never emitted)
+        self.spec_emitted_tokens = 0    # tokens emitted by verify programs
 
     def _bucket(self, n: int) -> int:
         """Power-of-two admission bucket (owned by the scheduler module —
@@ -238,6 +261,8 @@ class ServeEngine:
             handle = self.kv.swap_out(slot)
             if handle is not None:
                 st = self.sched.release(slot)
+                st.pending_drafts = None     # drafts die with the victim's
+                                             # step; resume re-proposes
                 self.sched.suspend_front(st, (handle, self._next[slot]))
                 self.swap_preemptions += 1
                 return
@@ -269,7 +294,16 @@ class ServeEngine:
             self.swap_resumes += 1
 
     def step(self, now_fn: Callable[[], float]) -> List[Completion]:
-        """Run one decode program; harvest tokens; evict finished slots."""
+        """Run one decode program; harvest tokens; evict finished slots.
+
+        With speculative decoding enabled, a draft-and-verify program runs
+        instead whenever the proposer has drafts for any slot; steps where
+        every slot draws a blank fall through to the plain decode program
+        (zero overhead relative to the spec-off engine)."""
+        if self.proposer is not None:
+            spec = self._step_spec(now_fn)
+            if spec is not None:
+                return spec
         self._reserve_all()
         toks = self.kv.decode(self._next)
         self._next = toks[:, -1]
@@ -279,6 +313,105 @@ class ServeEngine:
             toks_host = np.asarray(toks)            # "iret": sync every program
         return self._harvest_decode(sorted(self.sched.active), toks,
                                     toks_host, now_fn)
+
+    # -- speculative decode: draft-and-verify -------------------------------
+
+    def _reserve_spec(self) -> None:
+        """Per-row verify reservations: row s writes 1 + |drafts| positions
+        this program (its committed next token plus the draft window).
+        Same preemption discipline as ``_reserve_all``."""
+        while True:
+            order = sorted(self.sched.active,
+                           key=lambda s: self.sched.active[s].admit_seq)
+            if all(self.kv.reserve(
+                    s, 1 + int(self.sched.active[s].pending_drafts.size))
+                    for s in order):
+                return
+            if len(self.sched.active) == 1:
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single active request; "
+                    "fits() should have rejected it")
+            self._preempt(self.sched.choose_victim(self.preempt.victim))
+
+    def _step_spec(self, now_fn: Callable[[], float]
+                   ) -> Optional[List[Completion]]:
+        """One draft-and-verify program, or None to fall back to plain
+        decode (no slot drew a draft this step).
+
+        Every active slot rides the verify program: drafted rows at width
+        1 + |drafts|, draft-less rows at width 1 — a width-1 verify row IS
+        a decode step (same write, same attend, same sample), so no row
+        falls behind. Note the RET caveat: resolving accept lengths needs
+        the accept counts AND token values on the host, so a verify program
+        synchronizes even under ``ret_async`` (drafting from the produced
+        history already synced the slot's futures); plain-decode fallback
+        steps keep RET's once-per-request sync."""
+        # propose before reserving: reservations depend on draft lengths
+        order = sorted(self.sched.active)
+        if not all(self.sched.active[s].produced > 0 for s in order):
+            return None                   # a slot with no committed token
+                                          # yet cannot feed a verify row
+        any_draft = False
+        for s in order:
+            st = self.sched.active[s]
+            st.pending_drafts = self.proposer.propose(st)
+            any_draft = any_draft or st.pending_drafts.size > 0
+        if not any_draft:
+            for s in order:
+                self.sched.active[s].pending_drafts = None
+            return None
+        self._reserve_spec()
+        order = sorted(self.sched.active)   # preemption may have evicted
+        B, W = self.n_slots, self.spec_width
+        toks = np.zeros((B, W), np.int32)
+        clen = np.zeros(B, np.int32)
+        start = np.zeros(B, np.int32)
+        vmask = np.zeros(B, bool)
+        nxt_host = np.asarray(self._next)
+        for s in order:
+            st = self.sched.active[s]
+            m = int(st.pending_drafts.size)
+            toks[s, 0] = nxt_host[s]
+            toks[s, 1:1 + m] = st.pending_drafts
+            clen[s] = 1 + m
+            start[s] = st.prompt_len + st.produced - 1   # next write position
+            vmask[s] = True
+
+        out, n_emit = self.kv.verify_step(toks, clen, start, vmask)
+        self.programs_run += 1
+        self.spec_steps += 1
+        out_host, n_host = np.asarray(out), np.asarray(n_emit)
+        nxt = nxt_host.copy()
+        for s in order:
+            nxt[s] = out_host[s, int(n_host[s]) - 1]
+        self._next = jnp.asarray(nxt)
+
+        now = now_fn()
+        finished = []
+        for s in order:
+            st = self.sched.active[s]
+            m = int(st.pending_drafts.size)
+            st.pending_drafts = None
+            a = int(n_host[s])              # emitted = 1 + accepted drafts
+            self.spec_draft_tokens += m
+            self.spec_accepted_tokens += a - 1
+            self.spec_wasted_tokens += m - (a - 1)
+            self.spec_emitted_tokens += a
+            chunk = out_host[s, :a]
+            st.chunks.append(chunk)
+            st.produced += a                # clamped drafting: never > budget
+            self.decode_tokens += a
+            st.note_emit(now)
+            if st.first_decode_s is None:
+                st.first_decode_s = now
+            if st.req.eos_id is not None and st.req.eos_id in chunk:
+                st.eos_seen = True          # EOS inside the accepted window
+            # commit = rollback to the accepted length: frees draft-tail
+            # blocks (paged) and rewinds the host position
+            self.kv.rollback(s, int(start[s]) + a)
+            if st.produced >= st.req.max_new_tokens or st.eos_seen:
+                finished.append(self._finalize(s, now_fn))
+        return finished
 
     def _harvest_decode(self, slots, toks, toks_host,
                         now_fn: Callable[[], float]) -> List[Completion]:
@@ -554,6 +687,19 @@ class ServeEngine:
         if self.chunked:
             u["chunk_budget"] = self.chunk_budget
             u["chunk_width"] = self.chunk_width
+        if self.proposer is not None:
+            u["spec_decode"] = "ngram"
+            u["spec_width"] = self.spec_width
+            u["spec_steps"] = self.spec_steps
+            u["spec_draft_tokens"] = self.spec_draft_tokens
+            u["spec_accepted_tokens"] = self.spec_accepted_tokens
+            u["spec_wasted_tokens"] = self.spec_wasted_tokens
+            if self.spec_draft_tokens:
+                u["spec_acceptance_rate"] = round(
+                    self.spec_accepted_tokens / self.spec_draft_tokens, 4)
+            if self.spec_steps:
+                u["spec_tokens_per_step"] = round(
+                    self.spec_emitted_tokens / self.spec_steps, 2)
         if self.tuner is not None:
             u["ttft_slo_s"] = self.tuner.slo_s
             u["budget_adjustments"] = self.tuner.adjustments
@@ -578,6 +724,15 @@ class ServeEngine:
         self.swap_resumes = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.spec_steps = 0
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_wasted_tokens = 0
+        self.spec_emitted_tokens = 0
+        if self.proposer is not None:
+            self.proposer.proposed_tokens = 0
+            self.proposer.lookups = 0
+            self.proposer.hits = 0
         if self.tuner is not None:
             self.tuner.adjustments = 0
         self.kv.reset_counters()

@@ -460,12 +460,13 @@ class PagedKV:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  mesh=None, chunked: bool = False,
                  host_blocks: Optional[int] = 0,
-                 warm_start: Optional[str] = None):
+                 warm_start: Optional[str] = None, spec: bool = False):
         from repro.core.linkage import L3_NSS
         from repro.core.step import (build_block_export_fn,
                                      build_block_import_fn,
                                      build_paged_decode_step,
-                                     build_serve_step, make_sampler)
+                                     build_serve_step, build_verify_step,
+                                     make_sampler)
         _check_pageable(cfg, "PagedKV")
         self.cfg, self.params, self.opts = cfg, params, opts
         self.n_slots, self.max_len = n_slots, max_len
@@ -571,6 +572,11 @@ class PagedKV:
                                                           cfg, opts,
                                                           true_len=n),
                 **suffix_kwargs)
+        if spec:
+            self._verify = build_verify_step(cfg, opts, linkage, max_len,
+                                             sampling, kv_kind="paged",
+                                             mesh=mesh, param_sharding=param_sh,
+                                             cache_sharding=cache_sh)
 
         if warm_start:
             self.restored_entries = self.restore(warm_start)
@@ -1016,6 +1022,40 @@ class PagedKV:
                             + np.asarray(clen, np.int64)
                             + self.K * np.asarray(dec_mask, np.int64))
         return t0, seq
+
+    # -- speculative decode -------------------------------------------------
+
+    def verify_step(self, tokens, clen, start, vmask):
+        """One draft-widened verify program over the block pools. Host
+        positions are NOT advanced here: the engine commits each row via
+        ``rollback(slot, start + n_emit)`` once it has the accept counts —
+        commit and rejection-truncation are the same host transition."""
+        tables = jnp.asarray(self.tables_host)
+        self.cache, out, n_emit, self.keys = self._verify(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(clen),
+            jnp.asarray(start), jnp.asarray(vmask), self.keys, tables)
+        return out, n_emit
+
+    def rollback(self, slot: int, new_len: int) -> None:
+        """Truncate ``slot``'s residency to exactly ``new_len`` tokens: free
+        whole blocks past the accepted length and rewind the position.
+
+        Every freed block lies wholly beyond ``new_len`` > prompt_len, so it
+        can be neither a radix-registered prompt block (the index covers
+        full *prompt* blocks only) nor CoW-shared (``reserve`` forked the
+        whole draft write span to refcount 1) — ``pool.free`` physically
+        returns it. The device side needs no fixup: the verify program
+        rewound per-row ``pos`` in-graph, and stale K/V beyond it is
+        overwritten before it can ever be attended (position ``new_len``
+        is rewritten by the next program; beyond is causally masked)."""
+        chain = self.chains[slot]
+        keep = -(-new_len // self.bs)
+        for b in chain.blocks[keep:]:
+            self.pool.free(b)
+        if len(chain) > keep:
+            self.tables_host[slot, keep:len(chain)] = self.trash
+            del chain.blocks[keep:]
+        self.pos_host[slot] = new_len
 
     def release(self, slot: int) -> None:
         for b in self.chains.pop(slot, BlockTable()).blocks:

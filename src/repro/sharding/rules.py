@@ -306,6 +306,15 @@ class ArchSharding:
         n = 10 if paged else 8
         return tuple(P() for _ in range(n))
 
+    def serve_verify_operand_specs(self, paged: bool) -> Tuple[P, ...]:
+        """Non-cache operands of the speculative verify step
+        (``repro.core.step.build_verify_step``): draft-widened tokens,
+        lengths, start positions, verify mask, sampling keys, and (paged)
+        the block table. Replicated for the same reason as the chunk
+        operands — schedule metadata rides beside the sharded weights/KV."""
+        n = 6 if paged else 5
+        return tuple(P() for _ in range(n))
+
     def serve_swap_block_specs(self, cache_tree) -> Any:
         """One exported physical block — (L, bs, HKV, dh) per layer group,
         the in/out type of ``repro.core.step.build_block_export_fn`` /

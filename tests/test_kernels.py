@@ -249,3 +249,111 @@ def test_paged_prefill_width_one_matches_decode_kernel():
                                      interpret=True)
     np.testing.assert_allclose(np.asarray(out_pf[:, 0]), np.asarray(out_dec),
                                atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify pass (draft-and-verify serve step): the verify program
+# attends with W query positions per row at mid-generation starts over the
+# same pool/table state as chunked prefill — kernel parity at verify-shaped
+# geometries, then accept-boundary semantics vs the sequential decode oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P1,bs,nb,B,W,HQ,HKV,dh,starts,dt", [
+    (7, 8, 3, 2, 1, 6, 3, 64, (11, 20), jnp.float32),   # W=1: a decode row
+    (9, 8, 4, 2, 3, 6, 3, 64, (17, 9), jnp.float32),    # W=3, non-pow2 HKV
+    (7, 16, 2, 2, 8, 6, 3, 64, (15, 21), jnp.float32),  # W=8, bs=16, HKV=3
+    (6, 16, 3, 3, 8, 6, 3, 64, (16, 31, 0), jnp.bfloat16),  # block-boundary
+])
+def test_verify_window_kernel_parity(P1, bs, nb, B, W, HQ, HKV, dh, starts,
+                                     dt):
+    """The verify window's attention is exactly a W-wide paged chunk at the
+    row's committed position: kernel vs ref oracle at draft widths 1/3/8,
+    block sizes 8/16, and starts on/off block boundaries."""
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    ks = jax.random.split(KEY, 3)
+    kp = jax.random.normal(ks[0], (P1, bs, HKV, dh), dt)
+    vp = jax.random.normal(ks[1], (P1, bs, HKV, dh), dt)
+    q = jax.random.normal(ks[2], (B, W, HQ, dh), dt)
+    rng = np.random.default_rng(P1 * bs + B + W + 1)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(P1)[:nb] for _ in range(B)]).astype(np.int32))
+    start = jnp.asarray(np.array(starts, np.int32))
+    out = paged_prefill_attention(q, kp, vp, tables, start, interpret=True)
+    ref = kref.paged_prefill_attention_ref(q, kp, vp, tables, start)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+class _ScriptedProposer:
+    """Drop-in DraftProposer whose drafts are scripted by the slot's
+    ``produced`` count — lets a test place accept boundaries exactly."""
+
+    def __init__(self, script):
+        self.script = script
+        self.proposed_tokens = 0
+        self.lookups = 0
+        self.hits = 0
+
+    def propose(self, st):
+        d = np.asarray(self.script.get(st.produced, []), np.int32)
+        self.lookups += 1
+        if d.size:
+            self.hits += 1
+            self.proposed_tokens += int(d.size)
+        return d
+
+
+@pytest.mark.parametrize("width", [3, 8])
+def test_verify_accept_boundaries_match_decode_oracle(width):
+    """Crafted drafts pin the accept boundary at full / zero / mid draft:
+    the verify program must emit exactly the sequential decode oracle's
+    tokens in every case (rejected tails rolled back, bonus token kept),
+    with acceptance counters matching the crafted boundaries."""
+    from repro.configs import get_config
+    from repro.core import preset
+    from repro.models import ModelOptions, decode_step, init_params, prefill
+    from repro.serve import Request, ServeEngine
+    cfg = get_config("tinyllama-1.1b").smoke()
+    opts = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_len, max_new = 48, 16
+    prompt = np.random.default_rng(11).integers(0, cfg.vocab_size, 8,
+                                                dtype=np.int32)
+
+    # the oracle: prefill + one-token decode loop
+    logits, cache = jax.jit(
+        lambda p, t: prefill(p, t, cfg, opts, max_len=max_len))(
+            params, jnp.asarray(prompt)[None])
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    want = [int(nxt[0])]
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg, opts))
+    for _ in range(max_new - 1):
+        logits, cache = dec(params, cache, nxt)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        want.append(int(nxt[0]))
+
+    t = want
+    bad = lambda i: (t[i] + 1) % cfg.vocab_size     # ≠ the correct token
+    if width == 3:
+        script = {1: t[1:3],                        # full accept (+ bonus)
+                  4: [bad(4)],                      # zero accept
+                  5: [t[5], bad(6)]}                # mid: 1 of 2 accepted
+        drafts, accepted = 5, 3
+    else:
+        script = {1: t[1:8],                        # full 7-draft window
+                  9: [bad(9)],
+                  10: [t[10], t[11], bad(12)]}
+        drafts, accepted = 11, 9
+
+    eng = ServeEngine(cfg, params, opts, preset("byp"), n_slots=1,
+                      max_len=max_len, kv="paged", block_size=8,
+                      spec_decode="ngram", spec_width=width)
+    eng.proposer = _ScriptedProposer(script)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=max_new)
+    comps, _ = eng.run([req], load="closed")
+    assert comps[0].tokens.tolist() == want
+    u = eng.utilization()
+    assert u["spec_steps"] == 3
+    assert u["spec_draft_tokens"] == drafts
+    assert u["spec_accepted_tokens"] == accepted
+    assert u["spec_wasted_tokens"] == drafts - accepted

@@ -385,3 +385,65 @@ def test_mesh_warm_start_identity(params, tmp_path):
     # covers full blocks only): 8 shared tokens per request, first batch
     assert u["kv_prefix_shared_tokens"] == 8 * 4
     assert u["kv_prefix_promotions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding on the mesh: the verify pass is one more (B, W)
+# chunk-shaped program under the same shardings — placement only, so greedy
+# spec streams on any mesh match the plain mesh engine bit for bit.
+# ---------------------------------------------------------------------------
+
+def _spec_requests():
+    """Repetitive prompts (a tiled core) so the n-gram proposer hits and
+    verify windows actually accept drafts on every mesh cell."""
+    from repro.serve import Request
+    rng = np.random.default_rng(5)
+    out = []
+    for i in range(4):
+        core = rng.integers(0, CFG.vocab_size, 6, dtype=np.int32)
+        out.append(Request(rid=i, prompt=np.tile(core, 3),
+                           max_new_tokens=14))
+    return out
+
+
+def _spec_cell(params, kv, preset_name, mesh_name, reqs, **kw):
+    lk, opts = _linkage_opts(preset_name)
+    if lk.decode_steps > 4:
+        # preset K=32 would finish these budgets in one plain program
+        # before any draft history exists
+        lk = dataclasses.replace(lk, decode_steps=3)
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                      kv=kv, block_size=8, mesh=_mesh(mesh_name), **kw)
+    comps, _ = eng.run(reqs, load="closed")
+    return {c.rid: c.tokens.tolist() for c in comps}, eng
+
+
+@needs_devices
+def test_mesh_spec_identity_representative(params):
+    """1x2 paged nss_shortcut: speculative streams == the plain mesh engine
+    == the 1-device spec engine, with drafts accepted on the mesh."""
+    reqs = _spec_requests()
+    plain, _ = _spec_cell(params, "paged", "nss_shortcut", "1x2", reqs)
+    spec_kw = dict(spec_decode="ngram", spec_width=6)
+    one_dev, _ = _spec_cell(params, "paged", "nss_shortcut", "1x1", reqs,
+                            **spec_kw)
+    got, eng = _spec_cell(params, "paged", "nss_shortcut", "1x2", reqs,
+                          **spec_kw)
+    assert got == plain, "mesh spec diverged from mesh plain decode"
+    assert got == one_dev, "mesh spec diverged from 1-device spec"
+    u = eng.utilization()
+    assert u["spec_steps"] > 0 and u["spec_accepted_tokens"] > 0
+
+
+@pytest.mark.slow
+@needs_devices
+@pytest.mark.parametrize("mesh_name", [m for m in MESHES if m != "1x1"])
+@pytest.mark.parametrize("preset_name", PRESETS)
+@pytest.mark.parametrize("kv", BACKENDS)
+def test_mesh_spec_identity_matrix(params, kv, preset_name, mesh_name):
+    reqs = _spec_requests()
+    plain, _ = _spec_cell(params, kv, preset_name, mesh_name, reqs)
+    got, eng = _spec_cell(params, kv, preset_name, mesh_name, reqs,
+                          spec_decode="ngram", spec_width=6)
+    assert got == plain, f"spec {kv}/{preset_name}/{mesh_name} != plain"
+    assert eng.utilization()["spec_steps"] > 0

@@ -733,7 +733,7 @@ def test_pool_scheduler_swap_differential_deterministic():
         if refs[blk] == 0:
             del refs[blk]
 
-    for op in rng.integers(0, 7, size=500):
+    for op in rng.integers(0, 8, size=500):
         if op == 0:                                    # admit
             n = int(rng.integers(1, 4))
             chain, ok = [], True
@@ -817,6 +817,36 @@ def test_pool_scheduler_swap_differential_deterministic():
                 chains[next_id[0]] = dblks
                 order.append(next_id[0])
                 next_id[0] += 1
+        elif op == 7 and chains:                       # spec verify roundtrip
+            # draft-and-verify (PR 6): CoW-fork a shared tail, reserve the
+            # draft span, then roll back to the accepted length — rejected
+            # tail blocks free physically, sharers stay untouched
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            chain = chains[slot]
+            if pool.refs[chain[-1]] > 1:
+                new = alloc()
+                if new is None:
+                    continue
+                drop(chain[-1])
+                chain[-1] = new
+            width = int(rng.integers(1, 4))
+            span, ok = [], True
+            for _ in range(width):
+                blk = alloc()
+                if blk is None:                        # dry: roll span back
+                    for b in span:
+                        drop(b)
+                    ok = False
+                    break
+                span.append(blk)
+            if ok:
+                chain.extend(span)
+                keep = int(rng.integers(0, width + 1))
+                for b in span[keep:]:
+                    assert pool.refs[b] == 1   # never truncate into a share
+                    drop(b)
+                if width > keep:
+                    del chain[-(width - keep):]
         # differential invariants on BOTH tiers, every step
         for blk in range(N):
             assert pool.refs[blk] == refs.get(blk, 0), blk
@@ -834,3 +864,33 @@ def test_pool_scheduler_swap_differential_deterministic():
             del hrefs[h]
     assert pool.n_free == N and (pool.refs == 0).all()
     assert host.n_free == H and (host.refs == 0).all()
+
+
+def test_spec_rollback_pool_integrity_end_to_end(params):
+    """The real PagedKV.rollback under a speculative workload with shared
+    prefixes and pool pressure: every verify step truncates its rejected
+    tail via pool.free, so after the run (and shedding the radix-held
+    prefix entries) the pool must drain to empty — no leaked blocks, no
+    double frees, no refcount drift — with streams identical to the plain
+    paged engine."""
+    rng = np.random.default_rng(9)
+    core = rng.integers(0, CFG.vocab_size, 4, dtype=np.int32)
+    shared = np.tile(core, 4)                       # 16 tokens, CoW-shared
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [shared,
+                         rng.integers(0, CFG.vocab_size, 2, np.int32)]),
+                    max_new_tokens=12) for i in range(4)]
+    kw = dict(kv="paged", block_size=8, num_blocks=14)
+    plain, _ = run_engine(params, preset("byp"), reqs, **kw)
+    got, eng = run_engine(params, preset("byp"), reqs,
+                          spec_decode="ngram", spec_width=6, **kw)
+    assert got == plain
+    u = eng.utilization()
+    assert u["spec_steps"] > 0 and u["spec_accepted_tokens"] > 0
+    assert u["spec_wasted_tokens"] > 0              # rollback actually ran
+    assert u["kv_prefix_shared_tokens"] > 0         # under CoW sharing
+    eng.kv.drop_prefix_cache()
+    pool = eng.kv.pool
+    assert pool.n_resident == 0 and (pool.refs == 0).all()
+    assert pool.n_free == 14

@@ -314,6 +314,40 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
         self._teardown(self.order[-1])
 
     @precondition(lambda self: self.chains)
+    @rule(data=st.data(), width=st.integers(1, 3), accept=st.integers(0, 3))
+    def speculative_verify_roundtrip(self, data, width, accept):
+        """Draft-and-verify (PR 6): reserve blocks covering the draft span —
+        CoW-forking a shared tail first, verify writes need exclusive
+        blocks — then roll back to the accepted length. The span's rejected
+        tail blocks free physically, accepted ones stay on the chain, and
+        sharers of the pre-span prefix are untouched (truncation only ever
+        reaches ref-1 blocks)."""
+        slot = data.draw(st.sampled_from(sorted(self.chains)))
+        chain = self.chains[slot]
+        if self.pool.refs[chain[-1]] > 1:       # engine's reserve-time fork
+            new = self._alloc()
+            if new is None:
+                return
+            self._drop(chain[-1])
+            chain[-1] = new
+        span = []
+        for _ in range(width):
+            blk = self._alloc()
+            if blk is None:             # pool dry mid-reserve: roll back the
+                for b in span:          # span (the engine preempts instead)
+                    self._drop(b)
+                return
+            span.append(blk)
+        chain.extend(span)
+        # verify accepted a prefix of the span: truncate the rejected tail
+        keep = min(accept, width)
+        for b in span[keep:]:
+            assert self.pool.refs[b] == 1       # never truncate into a share
+            self._drop(b)
+        if width > keep:
+            del chain[-(width - keep):]
+
+    @precondition(lambda self: self.chains)
     @rule(data=st.data())
     def swap_out(self, data):
         """Swap-out preemption: the chain's blocks move device→host (one

@@ -681,3 +681,294 @@ def test_engine_ttft_slo_autotunes_budget(params):
     with pytest.raises(ValueError, match="chunked"):
         ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
                     max_len=MAX_LEN, ttft_slo_s=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: self-speculation drafts + verify-pass identity
+# ---------------------------------------------------------------------------
+
+def _spec_reqs(n=4, core_len=6, reps=3, max_new=14, seed=5, eos_id=None):
+    """Repetitive-suffix prompts (a tiled core n-gram) so the prompt-lookup
+    proposer actually hits; greedy continuations then repeat the period,
+    giving high acceptance while staying a plain greedy decode."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        core = rng.integers(0, CFG.vocab_size, core_len, dtype=np.int32)
+        out.append(Request(rid=i, prompt=np.tile(core, reps),
+                           max_new_tokens=max_new, eos_id=eos_id))
+    return out
+
+
+def _spec_linkage(preset_name):
+    lk = preset(preset_name)
+    if lk.level == L3_NSS:
+        # preset K=32 finishes these budgets in one plain program before any
+        # draft history exists; short programs let speculation engage
+        lk = dataclasses.replace(lk, decode_steps=3)
+    opts = lk.model_options(OPTS, on_tpu=False) if lk.shortcut else OPTS
+    return lk, opts
+
+
+def _spec_vs_plain(params, reqs, preset_name, kv, *, spec_width=6, **kw):
+    lk, opts = _spec_linkage(preset_name)
+    pkw = dict(kw)
+    if kv == "paged":
+        pkw.setdefault("block_size", 8)
+    plain = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                        kv=kv, **pkw)
+    want = {c.rid: c.tokens.tolist()
+            for c in plain.run(reqs, load="closed")[0]}
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                      kv=kv, spec_decode="ngram", spec_width=spec_width,
+                      **pkw)
+    got = {c.rid: c.tokens.tolist() for c in eng.run(reqs, load="closed")[0]}
+    return got, want, eng
+
+
+def test_spec_identity_representative(params):
+    """Tier-1 representative of the identity matrix: greedy speculative
+    streams are bit-identical to plain decode (slotted and paged), with
+    speculation demonstrably engaged and drafts demonstrably accepted."""
+    reqs = _spec_reqs()
+    for kv in ("slotted", "paged"):
+        got, want, eng = _spec_vs_plain(params, reqs, "base", kv)
+        assert got == want, f"{kv}: spec diverged from plain decode"
+        u = eng.utilization()
+        assert u["spec_steps"] > 0 and u["spec_accepted_tokens"] > 0, kv
+        assert u["spec_acceptance_rate"] > 0.3, kv
+    # streams also match the sequential oracle (drafts never add tokens)
+    for req in reqs:
+        assert got[req.rid] == sequential_tokens(params, req), req.rid
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("preset_name",
+                         ["base", "nss_shortcut", "ret_byp_shortcut"])
+@pytest.mark.parametrize("kv", ["slotted", "paged"])
+def test_spec_identity_matrix(params, preset_name, kv):
+    """Full matrix: {slotted, paged} x {base, nss_shortcut (verify replaces
+    the fused K-microstep program), ret_byp_shortcut (verify forces a host
+    sync; plain fallback steps stay async)}."""
+    got, want, eng = _spec_vs_plain(params, _spec_reqs(), preset_name, kv)
+    assert got == want, f"{preset_name}/{kv}"
+    assert eng.utilization()["spec_steps"] > 0
+
+
+def test_spec_chunked_inherits_verify(params):
+    """The chunked engine's pure-decode branch defers to the speculative
+    step, so one engine serves chunked prefill AND draft verification."""
+    reqs = _spec_reqs()
+    lk, opts = _spec_linkage("byp")
+    base = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                       kv="paged", block_size=8, chunked=True, chunk_budget=8)
+    want = {c.rid: c.tokens.tolist()
+            for c in base.run(reqs, load="closed")[0]}
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                      kv="paged", block_size=8, chunked=True, chunk_budget=8,
+                      spec_decode="ngram", spec_width=6)
+    got = {c.rid: c.tokens.tolist() for c in eng.run(reqs, load="closed")[0]}
+    assert got == want
+    assert eng.utilization()["spec_steps"] > 0
+
+
+def test_spec_eos_inside_accepted_window(params):
+    """EOS appearing inside an accepted draft window finalizes the request
+    at EOS exactly like mid-chunk EOS in plain decode: the stream is the
+    plain stream trimmed at EOS inclusive."""
+    reqs = _spec_reqs(n=3, seed=9)       # rid 0 decodes a run of one token,
+    _, want, _ = _spec_vs_plain(params, reqs, "base", "paged")
+    # ...then breaks the period mid-stream: pick the latest-first-occurring
+    # token as EOS so it lands after several fully-accepted windows
+    stop_at = max(want[0].index(t) for t in set(want[0]))
+    assert stop_at >= 4                  # deep enough that spec is running
+    eos = want[0][stop_at]
+    reqs_eos = [dataclasses.replace(r, eos_id=int(eos)) for r in reqs]
+    got, want_eos, eng = _spec_vs_plain(params, reqs_eos, "base", "paged")
+    assert got == want_eos
+    assert len(got[0]) == stop_at + 1 < len(want[0])
+    u = eng.utilization()
+    assert u["spec_steps"] > 0 and u["spec_accepted_tokens"] > 0
+
+
+def test_spec_cow_shared_prefix_identity(params):
+    """Paged CoW: requests sharing a radix-indexed prefix still verify and
+    roll back correctly — tail truncation must never free a shared block
+    out from under the other sharers."""
+    rng = np.random.default_rng(9)
+    core = rng.integers(0, CFG.vocab_size, 4, dtype=np.int32)
+    shared = np.tile(core, 4)                    # 16 tokens, 2 full blocks
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [shared,
+                         rng.integers(0, CFG.vocab_size, 2, np.int32)]),
+                    max_new_tokens=12) for i in range(4)]
+    got, want, eng = _spec_vs_plain(params, reqs, "base", "paged")
+    assert got == want
+    u = eng.utilization()
+    assert u["spec_steps"] > 0
+    assert u["kv_prefix_shared_tokens"] > 0      # sharing actually happened
+
+
+def test_spec_swap_preemption_mid_generation(params):
+    """Swap preemption under pool pressure with speculation on: a victim's
+    pending drafts are dropped before its blocks move to the host tier, and
+    the resumed slot re-drafts from its (restored) history. Streams match
+    the plain swap engine."""
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=np.tile(
+                rng.integers(0, CFG.vocab_size, 4, dtype=np.int32), 2),
+                    max_new_tokens=12) for i in range(4)]
+    lk, opts = _spec_linkage("nss_shortcut")
+    lk = dataclasses.replace(lk, decode_steps=4)
+    press = dict(n_slots=3, max_len=MAX_LEN, kv="paged", block_size=4,
+                 num_blocks=9, preempt="swap")
+    plain = ServeEngine(CFG, params, opts, lk, **press)
+    want = {c.rid: c.tokens.tolist()
+            for c in plain.run(reqs, load="closed")[0]}
+    eng = ServeEngine(CFG, params, opts, lk, spec_decode="ngram",
+                      spec_width=4, **press)
+    got = {c.rid: c.tokens.tolist() for c in eng.run(reqs, load="closed")[0]}
+    assert got == want
+    assert eng.swap_preemptions > 0 and eng.swap_resumes > 0
+    assert eng.utilization()["spec_steps"] > 0
+
+
+def test_spec_width_one_is_plain_decode(params):
+    """width == 1 leaves no room to draft: the proposer never proposes, the
+    engine always falls back, and the run is plain decode (spec_steps == 0)
+    with identical streams."""
+    reqs = _spec_reqs(n=2)
+    got, want, eng = _spec_vs_plain(params, reqs, "base", "slotted",
+                                    spec_width=1)
+    assert got == want
+    u = eng.utilization()
+    assert u["spec_steps"] == 0 and u["spec_draft_tokens"] == 0
+
+
+def test_spec_sampling_key_chains_schedule_independent(params):
+    """Sampled verify advances a slot's key chain once per *emitted* token,
+    so streams are a function of (request, seed) only — identical whether
+    tokens were drafted-and-accepted or decoded plainly, and across
+    backends."""
+    from repro.core import SamplingConfig
+    sc = SamplingConfig(temperature=0.7, top_k=16, seed=42)
+    reqs = _spec_reqs(n=3, max_new=8)
+    lk, opts = _spec_linkage("byp")
+    plain = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                        sampling=sc)
+    want = {c.rid: c.tokens.tolist()
+            for c in plain.run(reqs, load="closed")[0]}
+    for kv in ("slotted", "paged"):
+        kw = {"block_size": 8} if kv == "paged" else {}
+        eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN,
+                          kv=kv, sampling=sc, spec_decode="ngram",
+                          spec_width=6, **kw)
+        got = {c.rid: c.tokens.tolist()
+               for c in eng.run(reqs, load="closed")[0]}
+        assert got == want, kv
+        assert eng.utilization()["spec_steps"] > 0, kv
+    greedy = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=MAX_LEN)
+    g = {c.rid: c.tokens.tolist() for c in greedy.run(reqs, load="closed")[0]}
+    assert got != g                              # it actually sampled
+
+
+# ---------------------------------------------------------------------------
+# DraftProposer units (pure host-side policy — no model, no device)
+# ---------------------------------------------------------------------------
+
+def _slot(prompt, chunks=(), max_new=16, produced=None, eos_id=None,
+          eos_seen=False):
+    from repro.serve import SlotState
+    st = SlotState(req=Request(rid=0, prompt=np.asarray(prompt, np.int32),
+                               max_new_tokens=max_new, eos_id=eos_id),
+                   admit_s=0.0)
+    st.chunks = [np.asarray(c, np.int32) for c in chunks]
+    st.produced = (sum(len(c) for c in st.chunks)
+                   if produced is None else produced)
+    st.eos_seen = eos_seen
+    return st
+
+
+def test_draft_proposer_ngram_hit():
+    from repro.serve import DraftProposer
+    p = DraftProposer(width=5, ngram=3)
+    # history ...[7 8 9] 1 2 3 4 ... [7 8 9] -> drafts the continuation
+    st = _slot([7, 8, 9, 1, 2, 3, 4], chunks=[[7, 8, 9]])
+    d = p.propose(st)
+    assert d.tolist() == [1, 2, 3, 4]
+    assert p.lookups == p.hits == 1 and p.proposed_tokens == 4
+
+
+def test_draft_proposer_backs_off_to_shorter_ngram():
+    from repro.serve import DraftProposer
+    p = DraftProposer(width=4, ngram=3)
+    # trailing trigram [5 6 2] never recurs, but the trailing unigram [2]
+    # does — the proposer backs off n=3 -> 2 -> 1 and drafts what followed
+    st = _slot([1, 2, 3, 4, 5, 6], chunks=[[2]])
+    assert p.propose(st).tolist() == [3, 4, 5]
+
+
+def test_draft_proposer_miss_returns_empty():
+    from repro.serve import DraftProposer
+    p = DraftProposer(width=4, ngram=2)
+    st = _slot([1, 2, 3, 4, 5, 6], chunks=[[7]])   # 7 never seen before
+    d = p.propose(st)
+    assert d.size == 0
+    assert p.lookups == 1 and p.hits == 0 and p.proposed_tokens == 0
+
+
+def test_draft_proposer_clamps_to_width_and_budget():
+    from repro.serve import DraftProposer
+    st = _slot([3, 1, 2, 3, 1, 2], chunks=[[3]], max_new=16, produced=1)
+    # width clamp: at most width-1 drafts no matter how long the match
+    assert DraftProposer(width=3).propose(st).tolist() == [1, 2]
+    # budget clamp: remaining-1 wins when tighter (emitting 1+m <= remaining)
+    st2 = _slot([3, 1, 2, 3, 1, 2], chunks=[[3]], max_new=3, produced=1)
+    assert DraftProposer(width=8).propose(st2).tolist() == [1]
+    st2b = _slot([3, 1, 2, 3, 1, 2], chunks=[[3]], max_new=4, produced=1)
+    assert DraftProposer(width=8).propose(st2b).tolist() == [1, 2]
+    # no room at all: remaining == 1 -> the single next token needs no draft
+    st3 = _slot([3, 1, 2, 3, 1, 2], chunks=[[3]], max_new=2, produced=1)
+    p = DraftProposer(width=8)
+    assert p.propose(st3).size == 0 and p.lookups == 0
+
+
+def test_draft_proposer_truncates_after_eos():
+    from repro.serve import DraftProposer
+    # continuation after the match is [1, 99, 2, ...]; eos 99 keeps its spot
+    st = _slot([5, 1, 99, 2, 6, 5], chunks=[], produced=1, eos_id=99)
+    d = DraftProposer(width=8).propose(st)
+    assert d.tolist() == [1, 99]
+    # engine-level eos_id overrides when the request has none
+    st2 = _slot([5, 1, 99, 2, 6, 5], chunks=[], produced=1)
+    assert DraftProposer(width=8, eos_id=99).propose(st2).tolist() == [1, 99]
+    # a slot that already saw EOS never drafts
+    st3 = _slot([5, 1, 2, 5], chunks=[], produced=1, eos_seen=True)
+    assert DraftProposer(width=8).propose(st3).size == 0
+
+
+def test_draft_proposer_minimal_history_and_width_one():
+    from repro.serve import DraftProposer
+    # single-token history: no earlier occurrence can exist
+    assert DraftProposer(width=4).propose(
+        _slot([42], chunks=[], produced=1)).size == 0
+    # width 1 never drafts (the plain-decode identity edge), even on a hit
+    p1 = DraftProposer(width=1)
+    assert p1.propose(_slot([7, 8, 7], chunks=[[8]])).size == 0
+    assert p1.lookups == 0
+
+
+def test_draft_proposer_rejects_bad_args(params):
+    from repro.serve import DraftProposer
+    with pytest.raises(ValueError, match="width"):
+        DraftProposer(width=0)
+    with pytest.raises(ValueError, match="ngram"):
+        DraftProposer(width=4, ngram=0)
+    with pytest.raises(ValueError, match="spec_decode"):
+        ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                    max_len=MAX_LEN, spec_decode="medusa")
+    with pytest.raises(ValueError, match="spec_width"):
+        ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                    max_len=MAX_LEN, spec_decode="ngram",
+                    spec_width=MAX_LEN + 1)

@@ -20,12 +20,13 @@ python -m repro.launch.serve --preset nss_shortcut --load open \
 
 echo "== smoke: slotted-vs-paged token identity (incl. chunked prefill,"
 echo "          the two-tier swap/warm-start engines under pool pressure,"
-echo "          and speculative decode vs its plain-decode twins) =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode
+echo "          and speculative decode vs its plain-decode twins),"
+echo "          every engine traced + schema-validated =="
+python scripts/paged_smoke.py --chunked --swap --spec-decode --trace
 
 echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh, "
 echo "          two-phase + chunked + swap/warm-start + spec engines) =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --mesh 1,2
+python scripts/paged_smoke.py --chunked --swap --spec-decode --mesh 1,2 --trace
 
 echo "== smoke: chunked-prefill serve launcher (open-loop) =="
 python -m repro.launch.serve --preset nss_shortcut --load open \
@@ -41,5 +42,16 @@ echo "== smoke: speculative-decode serve launcher (n-gram drafts) =="
 python -m repro.launch.serve --preset nss_shortcut --load closed \
     --requests 4 --slots 2 --prompt-len 18 --gen-len 14 --decode-steps 3 \
     --kv paged --block-size 8 --spec-decode ngram --spec-width 6
+
+echo "== smoke: telemetry — traced chunked launcher + trace_summary =="
+CI_TRACE_DIR="$(mktemp -d)"
+trap 'rm -rf "$CI_TRACE_DIR"' EXIT
+python -m repro.launch.serve --preset nss_shortcut --load open \
+    --requests 4 --slots 2 --prompt-len 16 --gen-len 16 \
+    --kv paged --block-size 8 --chunked --budget 16 \
+    --trace "$CI_TRACE_DIR/trace.json" \
+    --metrics "$CI_TRACE_DIR/metrics.prom" --log-interval 0.5
+python scripts/trace_summary.py "$CI_TRACE_DIR/trace.json"
+grep -q '^engine_steps_total' "$CI_TRACE_DIR/metrics.prom"
 
 echo "CI OK"

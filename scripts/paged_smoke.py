@@ -60,6 +60,12 @@ def _parse_args(argv=None):
     p.add_argument("--budget", type=int, default=6,
                    help="chunked: tokens per serve step (small by default "
                         "so the smoke prompts split into several chunks)")
+    p.add_argument("--trace", action="store_true",
+                   help="run every engine with telemetry attached and "
+                        "schema-validate its trace: every event against "
+                        "EVENT_SCHEMA, every request's span path against "
+                        "the scheduler's legal state machine, and the "
+                        "Chrome-trace export must round-trip")
     return p.parse_args(argv)
 
 
@@ -86,7 +92,30 @@ from repro.configs import get_config
 from repro.core import preset
 from repro.launch.mesh import make_serve_mesh
 from repro.models import ModelOptions, init_params
-from repro.serve import Request, ServeEngine, synthetic_requests
+from repro.serve import (Request, ServeEngine, Telemetry, load_trace,
+                         synthetic_requests, validate_events, validate_spans)
+
+
+def _make_tel():
+    return Telemetry() if _ARGS.trace else None
+
+
+_TRACES = {}          # cell name -> validated Telemetry
+
+
+def _check_trace(name, tel, comps):
+    """Schema-validate a cell's trace: every event, every span path, and
+    completion coverage (each request's span must end at done)."""
+    if tel is None:
+        return
+    validate_events(tel.trace.events)
+    paths = validate_spans(tel.trace.events)
+    rids = {c.rid for c in comps}
+    assert set(paths) >= rids, f"{name}: spans missing requests"
+    for rid in rids:
+        assert paths[rid][-1] == "done", \
+            f"{name}: rid {rid} span path {paths[rid]} never reached done"
+    _TRACES[name] = tel
 
 
 def main() -> int:
@@ -106,12 +135,15 @@ def main() -> int:
     streams = {}
     for kv, chunked in cells:
         kw = dict(chunked=True, chunk_budget=_ARGS.budget) if chunked else {}
+        tel = _make_tel()
         eng = ServeEngine(cfg, params, opts, lk, n_slots=2, max_len=32,
-                          kv=kv, block_size=8, mesh=mesh, **kw)
+                          kv=kv, block_size=8, mesh=mesh, telemetry=tel,
+                          **kw)
         comps, _ = eng.run(reqs, load="closed")
         name = f"{kv}{'+chunked' if chunked else ''}"
         streams[name] = {c.rid: c.tokens.tolist() for c in comps}
         print(f"{name}: {eng.utilization()}")
+        _check_trace(name, tel, comps)
 
     if _ARGS.spec_decode:
         # self-speculation needs draft history and short fused programs to
@@ -178,11 +210,13 @@ def main() -> int:
         tmpdir = tempfile.TemporaryDirectory()   # cleaned up at exit
         cache_path = os.path.join(tmpdir.name, "prefix.npz")
         for name, kw in swap_cells:
-            eng = ServeEngine(cfg, params, opts, lk_swap,
+            tel = _make_tel()
+            eng = ServeEngine(cfg, params, opts, lk_swap, telemetry=tel,
                               **dict(press, **kw))
             comps, _ = eng.run(swap_reqs, load="closed")
             streams[name] = {c.rid: c.tokens.tolist() for c in comps}
             print(f"{name}: {eng.utilization()}")
+            _check_trace(name, tel, comps)
             if "swap" in name and not eng.swap_preemptions:
                 print(f"FAIL: {name} never swap-preempted (pressure "
                       "geometry too loose)", file=sys.stderr)
@@ -228,6 +262,17 @@ def main() -> int:
                     print(f"  {n} rid {rid}: {streams[n][rid]} != "
                           f"{baseline[rid]}", file=sys.stderr)
         return 1
+    if _ARGS.trace:
+        # Chrome-export round-trip on the busiest cell: the exported file
+        # must load back as the same schema-valid event stream
+        name, tel = max(_TRACES.items(), key=lambda kv: len(kv[1].trace.events))
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "trace.json")
+            tel.trace.export_chrome(path)
+            validate_events(load_trace(path))
+        total = sum(len(t.trace.events) for t in _TRACES.values())
+        print(f"trace smoke OK: {len(_TRACES)} cells schema-valid "
+              f"({total} events), Chrome export round-trips ({name})")
     tag = f" on mesh {_ARGS.mesh}" if mesh is not None else ""
     print(f"paged smoke OK: {len(reqs)} shared-prefix requests bit-identical "
           f"across {len(cells)} engines ({', '.join(names)}){tag}")

@@ -1,0 +1,84 @@
+"""Print the per-phase step breakdown (and request stats) from a trace file.
+
+Reads either telemetry export — Chrome-trace JSON or raw JSONL (both from
+``launch/serve.py --trace`` / ``TraceRecorder``) — validates it against the
+event schema and span state machine, and prints:
+
+  * per program kind: steps, total host wall-clock, and the split across
+    the pack / dispatch / device / host phases (the table bench_serving's
+    step-phase rows are derived from);
+  * request lifecycle stats from the spans: completed count, p50/p99 TTFT
+    and latency;
+  * event-type counts, so a glance shows which subsystems fired (swaps,
+    preemptions, verify windows, budget moves).
+
+Usage: PYTHONPATH=src python scripts/trace_summary.py TRACE [TRACE...]
+"""
+from __future__ import annotations
+
+import sys
+from collections import Counter
+
+import numpy as np
+
+from repro.serve import (load_trace, phase_breakdown, span_latencies,
+                         validate_events, validate_spans)
+
+PHASES = ("pack", "dispatch", "device", "host")
+
+
+def summarize(path: str) -> None:
+    events = load_trace(path)
+    validate_events(events)
+    paths = validate_spans(events)
+    print(f"== {path}: {len(events)} events, schema + spans valid ==")
+
+    pb = phase_breakdown(events)
+    if pb:
+        kinds = sorted(k for k in pb if k != "all") + ["all"]
+        hdr = f"{'kind':<14}{'steps':>7}{'total_s':>10}" + "".join(
+            f"{p + '_s':>12}" for p in PHASES)
+        print(hdr)
+        for kind in kinds:
+            cell = pb[kind]
+            row = f"{kind:<14}{cell['steps']:>7}{cell['total_s']:>10.4f}"
+            for p in PHASES:
+                row += f"{cell['phases'][p]:>12.4f}"
+            print(row)
+        tot = pb["all"]["total_s"]
+        if tot > 0:
+            shares = "  ".join(
+                f"{p}={pb['all']['phases'][p] / tot:.1%}" for p in PHASES)
+            print(f"phase shares: {shares}")
+    else:
+        print("no engine_step events")
+
+    lat = span_latencies(events)
+    done = [d for d in lat.values() if "latency_s" in d]
+    ttft = np.array([d["ttft_s"] for d in lat.values() if "ttft_s" in d])
+    if ttft.size:
+        print(f"requests: {len(lat)} seen, {len(done)} completed; "
+              f"ttft p50={np.percentile(ttft, 50):.4f}s "
+              f"p99={np.percentile(ttft, 99):.4f}s")
+    if done:
+        lats = np.array([d["latency_s"] for d in done])
+        print(f"latency p50={np.percentile(lats, 50):.4f}s "
+              f"p99={np.percentile(lats, 99):.4f}s")
+
+    counts = Counter(e["type"] for e in events)
+    print("events: " + "  ".join(f"{t}={n}"
+                                 for t, n in sorted(counts.items())))
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0 if argv else 1
+    for path in argv:
+        summarize(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

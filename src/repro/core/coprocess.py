@@ -106,7 +106,18 @@ class AsyncCheckpointer:
 
 
 class MetricWriter:
-    """Drains metric futures on a worker thread (RET-mode companion).
+    """Drains metric payloads on a worker thread (RET-mode companion).
+
+    Two producers share this co-process:
+
+    * training steps submit RET-mode metric *futures* — device arrays that
+      the worker ``device_get``s off the dispatch thread;
+    * the serving engine's ``repro.serve.telemetry.Telemetry`` submits
+      ``MetricsRegistry.snapshot()`` dicts every ``--log-interval`` — plain
+      host floats, which pass through the same tree-map untouched. Pass a
+      writer as ``Telemetry(sink=MetricWriter(...))`` and the registry's
+      counters stream to the sink while the engine runs: UKL's ordinary
+      user process reading from the linked-in hot one.
 
     Sink exceptions are captured and re-raised on the next ``submit`` or on
     ``close`` (same contract as ``AsyncCheckpointer``) — a crashed sink must

@@ -241,6 +241,23 @@ def make_decode_fn(cfg: ArchConfig, opts: ModelOptions, linkage: LinkageConfig,
     return single
 
 
+def program_label(cfg: ArchConfig, linkage: LinkageConfig,
+                  kind: str) -> str:
+    """A stable human-readable label for a compiled serving program —
+    ``kind`` is the program family the engine dispatched ("decode",
+    "serve_chunk", "verify", "prefill_admit"). Telemetry stamps it on
+    ``engine_step`` trace events so a timeline names which linked program
+    each step ran (the trace-side analogue of a kernel symbol name)."""
+    tag = linkage.level
+    if linkage.level == L3_NSS:
+        tag += f"x{linkage.decode_steps}"
+    if linkage.ret_async:
+        tag += "+ret"
+    if linkage.shortcut:
+        tag += "+shortcut"
+    return f"{kind}/{tag}/d{cfg.d_model}L{cfg.num_blocks}"
+
+
 def _serve_jit_kwargs(linkage: LinkageConfig, mesh: Optional[Mesh],
                       param_sharding, cache_sharding,
                       n_extra: int = 0) -> Dict[str, Any]:

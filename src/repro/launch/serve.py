@@ -84,14 +84,25 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                chunk_width: int = 0, preempt: str = "recompute",
                victim: str = "youngest", host_blocks: int = 0,
                prefix_cache: str = "", ttft_slo: float = 0.0,
-               spec_decode: str = "none", spec_width: int = 0):
-    """Continuous-batching serving run; returns the engine report dict."""
+               spec_decode: str = "none", spec_width: int = 0,
+               trace: str = "", metrics: str = "",
+               log_interval: float = 0.0, profile_dir: str = ""):
+    """Continuous-batching serving run; returns the engine report dict.
+
+    Observability (docs/serving.md §Observability): ``trace`` writes the
+    run's Chrome-trace JSON (``.jsonl`` suffix: raw JSONL instead),
+    ``metrics`` writes the Prometheus text exposition, ``log_interval``
+    prints a one-line stats log every S seconds, ``profile_dir`` captures a
+    ``jax.profiler`` device trace around the first post-warmup steps. All
+    empty/zero by default: the engine then runs with the zero-cost
+    NULL_TELEMETRY bundle.
+    """
     import os
 
-    from repro.core import SamplingConfig
+    from repro.core import MetricWriter, SamplingConfig
     from repro.launch.mesh import make_serve_mesh
-    from repro.serve import (PreemptionPolicy, ServeEngine, serve_report,
-                             synthetic_requests)
+    from repro.serve import (PreemptionPolicy, ServeEngine, Telemetry,
+                             serve_report, synthetic_requests)
 
     if requests < 1:
         raise ValueError("need --requests >= 1")
@@ -105,6 +116,26 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                                    decode_steps=decode_steps)
     max_len = prompt_len + gen_len + 8
     sampling = SamplingConfig(temperature=temperature, top_k=top_k, seed=seed)
+
+    tel = None
+    if trace or metrics or log_interval > 0 or profile_dir:
+        sink = None
+        if metrics and log_interval > 0:
+            # stream periodic registry snapshots through the MetricWriter
+            # co-process (UKL's ordinary process beside the linked one)
+            # into <metrics>.jsonl while the run is live, in addition to
+            # the final text exposition written to <metrics> itself
+            stream_path = metrics + ".jsonl"
+            open(stream_path, "w").close()
+
+            def _append(step, m):
+                with open(stream_path, "a") as f:
+                    f.write(json.dumps({"step": step, **m}) + "\n")
+
+            sink = MetricWriter(_append)
+        tel = Telemetry(trace=bool(trace), log_interval=log_interval,
+                        sink=sink,
+                        const_labels={"backend": kv, "preset": preset_name})
     # --prefix-cache PATH persists the host tier across launcher runs: warm
     # start from the file when it exists, save back after the timed run
     warm_start = prefix_cache if prefix_cache and os.path.exists(
@@ -118,7 +149,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                       preempt=PreemptionPolicy(mode=preempt, victim=victim),
                       host_blocks=host_blocks, warm_start=warm_start,
                       ttft_slo_s=ttft_slo / 1e3 if ttft_slo > 0 else None,
-                      spec_decode=spec_decode, spec_width=spec_width)
+                      spec_decode=spec_decode, spec_width=spec_width,
+                      telemetry=tel)
 
     # warmup: compile prefill + decode + admission writers outside the timed
     # region (one decode program suffices — same compiled shapes as the run).
@@ -131,7 +163,12 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
     eng.run(warm, load="closed")
     if hasattr(eng.kv, "drop_prefix_cache"):
         eng.kv.drop_prefix_cache()  # shed warmup residue from the block pool
-    eng.reset_counters()          # don't let warmup inflate the report
+    eng.reset_counters()          # don't let warmup inflate the report (also
+                                  # clears the warmup trace/metrics)
+    if tel is not None and profile_dir:
+        # arm the profiler only now: capturing the warmup steps would
+        # record compilation, not the steady-state programs
+        tel.profile_dir = profile_dir
 
     reqs = synthetic_requests(requests, prompt_len, gen_len, cfg.vocab_size,
                               seed=seed,
@@ -141,6 +178,18 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
     completions, wall = eng.run(reqs, load=load,
                                 concurrency=concurrency or None)
     rep = serve_report(completions, wall, utilization=eng.utilization())
+    if tel is not None:
+        tel.close()               # stop any profiler capture, flush the sink
+        if trace:
+            n = (tel.trace.export_jsonl(trace) if trace.endswith(".jsonl")
+                 else tel.trace.export_chrome(trace))
+            rep["trace_path"], rep["trace_events"] = trace, n
+        if metrics:
+            with open(metrics, "w") as f:
+                f.write(tel.metrics.render())
+            rep["metrics_path"] = metrics
+        if profile_dir:
+            rep["profile_dir"] = profile_dir
     rep.update({
         "arch": cfg.name, "preset": preset_name, "load": load,
         "n_slots": n_slots, "prompt_len": prompt_len, "gen_len": gen_len,
@@ -301,6 +350,22 @@ def main(argv=None) -> int:
                         "clipped to gen-len)")
     p.add_argument("--batch", type=int, default=8,
                    help="batch size for --load seq")
+    p.add_argument("--trace", default="",
+                   help="write the run's trace here: Chrome-trace JSON "
+                        "(loads in chrome://tracing / Perfetto; engine "
+                        "steps as duration events, requests as async "
+                        "spans), or raw JSONL if the path ends in .jsonl")
+    p.add_argument("--metrics", default="",
+                   help="write the Prometheus text exposition of the run's "
+                        "metrics registry here (with --log-interval, also "
+                        "streams periodic snapshots to <path>.jsonl via "
+                        "the MetricWriter co-process)")
+    p.add_argument("--log-interval", type=float, default=0.0,
+                   help="print a one-line engine stats log every S seconds "
+                        "during the run (0 = off)")
+    p.add_argument("--profile-dir", default="",
+                   help="capture a jax.profiler device trace around the "
+                        "first post-warmup engine steps into this dir")
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen-len", type=int, default=32)
     p.add_argument("--requests", type=int, default=8)
@@ -334,7 +399,10 @@ def main(argv=None) -> int:
                          prefix_cache=args.prefix_cache,
                          ttft_slo=args.ttft_slo,
                          spec_decode=args.spec_decode,
-                         spec_width=args.spec_width)
+                         spec_width=args.spec_width,
+                         trace=args.trace, metrics=args.metrics,
+                         log_interval=args.log_interval,
+                         profile_dir=args.profile_dir)
     print(json.dumps(rep, indent=1))
     if args.report_json:
         with open(args.report_json, "w") as f:

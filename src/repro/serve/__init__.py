@@ -16,13 +16,23 @@ from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
                                    PreemptionPolicy, Request, SlotScheduler,
                                    SlotState, bucket_len, pack_chunks,
                                    synthetic_requests)
+from repro.serve.telemetry import (EVENT_SCHEMA, NULL_TELEMETRY,
+                                   SPAN_STATES, SPAN_TRANSITIONS,
+                                   MetricsRegistry, Telemetry, TraceRecorder,
+                                   load_trace, phase_breakdown,
+                                   span_latencies, validate_events,
+                                   validate_spans)
 
 __all__ = [
     "BlockPool", "BlockTable", "BudgetTuner", "Completion", "DraftProposer",
-    "HostBlockStore",
-    "KVBackend", "KV_BACKENDS", "MIN_BUCKET", "PagedKV", "PreemptionPolicy",
-    "PrefixIndex", "Request", "ServeEngine", "SlotScheduler", "SlotState",
-    "SlottedKV", "SwapHandle", "bucket_len", "init_slot_cache",
-    "make_slot_writer", "pack_chunks", "serve_report", "slotify",
-    "synthetic_requests",
+    "EVENT_SCHEMA", "HostBlockStore",
+    "KVBackend", "KV_BACKENDS", "MIN_BUCKET", "MetricsRegistry",
+    "NULL_TELEMETRY", "PagedKV", "PreemptionPolicy",
+    "PrefixIndex", "Request", "SPAN_STATES", "SPAN_TRANSITIONS",
+    "ServeEngine", "SlotScheduler", "SlotState",
+    "SlottedKV", "SwapHandle", "Telemetry", "TraceRecorder", "bucket_len",
+    "init_slot_cache", "load_trace",
+    "make_slot_writer", "pack_chunks", "phase_breakdown", "serve_report",
+    "slotify", "span_latencies", "synthetic_requests", "validate_events",
+    "validate_spans",
 ]

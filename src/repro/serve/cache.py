@@ -29,6 +29,7 @@ from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models.transformer import init_cache
+from repro.serve.telemetry import NULL_TELEMETRY
 
 
 def slotify(cache: Any) -> Any:
@@ -111,6 +112,10 @@ class KVBackend(Protocol):
     streams; only admission capacity and memory accounting differ.
     """
     kind: str
+    #: telemetry hook bundle (``repro.serve.telemetry.Telemetry``); the
+    #: engine installs its own on construction so backend-internal events
+    #: (tier movement) land in the same trace. Defaults to NULL_TELEMETRY.
+    tel: Any
 
     def admit(self, slot: int, prompt: np.ndarray, key: jax.Array
               ) -> jax.Array:
@@ -234,6 +239,10 @@ class SlottedKV:
     """
 
     kind = "slotted"
+    #: telemetry hooks (the owning engine installs its bundle; dense rows
+    #: never move across a tier boundary, so only the engine-side hooks
+    #: fire — the attribute exists so both backends share the contract)
+    tel = NULL_TELEMETRY
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
                  max_len: int, sampling=None, bucket_fn=None, mesh=None,

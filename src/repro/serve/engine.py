@@ -50,11 +50,12 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.coprocess import AdmissionWorker
 from repro.core.linkage import L3_NSS, LinkageConfig
-from repro.core.step import SamplingConfig
+from repro.core.step import SamplingConfig, program_label
 from repro.serve.cache import KVBackend, SlottedKV
 from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
                                    DraftProposer, PreemptionPolicy, Request,
                                    SlotScheduler, bucket_len, pack_chunks)
+from repro.serve.telemetry import NULL_TELEMETRY, Telemetry
 
 KV_BACKENDS = ("slotted", "paged")
 SPEC_MODES = ("none", "ngram")
@@ -98,7 +99,8 @@ class ServeEngine:
                  host_blocks: Optional[int] = 0,
                  warm_start: Optional[str] = None,
                  ttft_slo_s: Optional[float] = None,
-                 spec_decode: str = "none", spec_width: int = 0):
+                 spec_decode: str = "none", spec_width: int = 0,
+                 telemetry: Optional[Telemetry] = None):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -171,6 +173,16 @@ class ServeEngine:
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
+        # telemetry: NULL_TELEMETRY is the zero-cost disabled bundle (every
+        # hook a no-op, now() never reads a clock); the backend shares the
+        # engine's bundle so tier movement lands in the same trace
+        self.tel = telemetry if telemetry is not None else NULL_TELEMETRY
+        self.kv.tel = self.tel
+        # program-family labels stamped on engine_step trace events — the
+        # trace-side analogue of a kernel symbol name for each linked program
+        self._labels = {k: program_label(cfg, linkage, k)
+                        for k in ("decode", "serve_chunk", "verify",
+                                  "prefill_admit")}
         self.tuner = None
         if ttft_slo_s is not None:
             self.tuner = BudgetTuner(
@@ -201,7 +213,9 @@ class ServeEngine:
     # -- admission ----------------------------------------------------------
 
     def _admit(self, now_fn: Callable[[], float]) -> List[Completion]:
-        slot, req = self.sched.admit_next(now_fn())
+        tel = self.tel
+        adm = now_fn()
+        slot, req = self.sched.admit_next(adm)
         if req.prompt.shape[0] + req.max_new_tokens > self.max_len:
             self.sched.release(slot)
             raise ValueError(
@@ -212,16 +226,22 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt+budget can never fit the "
                 f"{self.kv.kind} KV store (pool too small)")
+        tel.admit(req.rid, slot, int(req.prompt.shape[0]), adm)
+        t0 = tel.now()
         first = self.kv.admit(slot, np.asarray(req.prompt, np.int32),
                               self.sampling.request_key(req.rid))
+        t1 = tel.now()
         self.prefill_tokens += int(req.prompt.shape[0])
+        tel.prefill_tokens(int(req.prompt.shape[0]))
         self._next = self._next.at[slot].set(first[0])
         st = self.sched.active[slot]
         # the prefill sample is generated token #1 of the budget
         if self.linkage.ret_async:
             st.chunks.append(first)                 # stays a device future
+            t2 = t1
         else:
             f = np.asarray(first)                   # "iret": sync now
+            t2 = tel.now()
             st.chunks.append(f)
             if req.eos_id is not None and int(f[0]) == req.eos_id:
                 st.eos_seen = True
@@ -230,6 +250,12 @@ class ServeEngine:
         st.prefill_pos = int(req.prompt.shape[0])   # two-phase: all at once
         st.fresh = False
         st.produced = 1
+        tel.state(req.rid, "decoding", st.first_token_s)
+        tel.step("prefill_admit", self.programs_run, t0, 0.0, t1 - t0,
+                 t2 - t1, tel.now() - t2, queued=self.sched.n_queued,
+                 active=len(self.sched.active),
+                 swapped=len(self.sched.swapped),
+                 program=self._labels["prefill_admit"])
         if st.remaining == 0 or st.eos_seen:
             return [self._finalize(slot, now_fn)]
         return []
@@ -257,6 +283,7 @@ class ServeEngine:
         swap parks the slot state + its host-tier KV for an exact resume;
         recompute (or a failed swap: no host tier / pinned full) releases
         everything and requeues the request at the head of the line."""
+        rid = self.sched.active[slot].req.rid
         if self.preempt.mode == "swap":
             handle = self.kv.swap_out(slot)
             if handle is not None:
@@ -265,11 +292,18 @@ class ServeEngine:
                                              # step; resume re-proposes
                 self.sched.suspend_front(st, (handle, self._next[slot]))
                 self.swap_preemptions += 1
+                now = self.tel.now()
+                self.tel.preempt(rid, slot, "swap", now)
+                self.tel.state(rid, "swapped", now)
                 return
         st = self.sched.release(slot)
         self.kv.release(slot)
         self.sched.requeue_front(st.req)
         self.preemptions += 1
+        now = self.tel.now()
+        self.tel.preempt(rid, slot, "recompute", now)
+        self.tel.state(rid, "preempted", now)
+        self.tel.state(rid, "queued", now)
 
     def _resume_swapped(self) -> None:
         """Swap suspended slot states back in, oldest first — they are the
@@ -289,9 +323,15 @@ class ServeEngine:
                 self.sched.release(slot)
                 self.sched.requeue_front(st.req)
                 self.preemptions += 1
+                now = self.tel.now()
+                self.tel.preempt(st.req.rid, slot, "recompute", now)
+                self.tel.state(st.req.rid, "queued", now)
                 continue
             self._next = self._next.at[slot].set(nxt)
             self.swap_resumes += 1
+            self.tel.state(st.req.rid,
+                           "prefilling" if st.prefilling else "decoding",
+                           self.tel.now())
 
     def step(self, now_fn: Callable[[], float]) -> List[Completion]:
         """Run one decode program; harvest tokens; evict finished slots.
@@ -304,15 +344,27 @@ class ServeEngine:
             spec = self._step_spec(now_fn)
             if spec is not None:
                 return spec
+        tel = self.tel
+        t0 = tel.now()
         self._reserve_all()
+        t1 = tel.now()
         toks = self.kv.decode(self._next)
         self._next = toks[:, -1]
         self.programs_run += 1
+        t2 = tel.now()
         toks_host = None
         if not self.linkage.ret_async:
             toks_host = np.asarray(toks)            # "iret": sync every program
-        return self._harvest_decode(sorted(self.sched.active), toks,
-                                    toks_host, now_fn)
+        t3 = tel.now()
+        slots = sorted(self.sched.active)
+        tel.decode_microsteps(len(slots), self.tokens_per_program, t1)
+        finished = self._harvest_decode(slots, toks, toks_host, now_fn)
+        tel.step("decode", self.programs_run, t0, t1 - t0, t2 - t1, t3 - t2,
+                 tel.now() - t3, queued=self.sched.n_queued,
+                 active=len(self.sched.active),
+                 swapped=len(self.sched.swapped),
+                 program=self._labels["decode"])
+        return finished
 
     # -- speculative decode: draft-and-verify -------------------------------
 
@@ -351,6 +403,8 @@ class ServeEngine:
         if not all(self.sched.active[s].produced > 0 for s in order):
             return None                   # a slot with no committed token
                                           # yet cannot feed a verify row
+        tel = self.tel
+        t0 = tel.now()
         any_draft = False
         for s in order:
             st = self.sched.active[s]
@@ -377,10 +431,13 @@ class ServeEngine:
             start[s] = st.prompt_len + st.produced - 1   # next write position
             vmask[s] = True
 
+        t1 = tel.now()
         out, n_emit = self.kv.verify_step(toks, clen, start, vmask)
         self.programs_run += 1
         self.spec_steps += 1
+        t2 = tel.now()
         out_host, n_host = np.asarray(out), np.asarray(n_emit)
+        t3 = tel.now()
         nxt = nxt_host.copy()
         for s in order:
             nxt[s] = out_host[s, int(n_host[s]) - 1]
@@ -397,10 +454,13 @@ class ServeEngine:
             self.spec_accepted_tokens += a - 1
             self.spec_wasted_tokens += m - (a - 1)
             self.spec_emitted_tokens += a
+            tel.verify_window(s, st.req.rid, m, a - 1, now)
             chunk = out_host[s, :a]
             st.chunks.append(chunk)
             st.produced += a                # clamped drafting: never > budget
             self.decode_tokens += a
+            if st.last_emit_s is not None:
+                tel.emit_gap(now - st.last_emit_s)
             st.note_emit(now)
             if st.first_decode_s is None:
                 st.first_decode_s = now
@@ -411,6 +471,11 @@ class ServeEngine:
             self.kv.rollback(s, int(start[s]) + a)
             if st.produced >= st.req.max_new_tokens or st.eos_seen:
                 finished.append(self._finalize(s, now_fn))
+        tel.step("verify", self.programs_run, t0, t1 - t0, t2 - t1, t3 - t2,
+                 tel.now() - t3, queued=self.sched.n_queued,
+                 active=len(self.sched.active),
+                 swapped=len(self.sched.swapped),
+                 program=self._labels["verify"])
         return finished
 
     def _harvest_decode(self, slots, toks, toks_host,
@@ -431,6 +496,8 @@ class ServeEngine:
             st.chunks.append(chunk)
             st.produced += take
             self.decode_tokens += take
+            if st.last_emit_s is not None:
+                self.tel.emit_gap(now - st.last_emit_s)
             st.note_emit(now)
             if st.first_decode_s is None:
                 st.first_decode_s = now
@@ -458,6 +525,8 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt+budget can never fit the "
                 f"{self.kv.kind} KV store (pool too small)")
+        self.tel.admit(req.rid, slot, int(req.prompt.shape[0]),
+                       self.sched.active[slot].admit_s)
         shared = self.kv.admit_chunked(slot, np.asarray(req.prompt, np.int32),
                                        self.sampling.request_key(req.rid))
         # count the radix-shared prefix so prefill_tokens means the same
@@ -465,6 +534,7 @@ class ServeEngine:
         # computed — two-phase _admit counts the full prompt length too;
         # computed-vs-shared is broken out by kv_prefix_shared_tokens)
         self.prefill_tokens += shared
+        self.tel.prefill_tokens(shared)
         st = self.sched.active[slot]
         st.prefill_pos = shared          # radix-shared prefix already resident
 
@@ -514,8 +584,12 @@ class ServeEngine:
         step may run while a prompt is partially resident."""
         if not any(self.sched.active[s].prefilling for s in self.sched.active):
             return self.step(now_fn)
+        tel = self.tel
+        w0 = tel.now()
         B, W = self.n_slots, self.chunk_width
         dec, pre, grants = self._plan_chunks()
+        tel.pack(self.chunk_budget, self.tokens_per_program * len(dec),
+                 int(sum(grants)), w0)
         toks = np.zeros((B, W), np.int32)
         clen = np.zeros(B, np.int32)
         start = np.zeros(B, np.int32)
@@ -535,15 +609,20 @@ class ServeEngine:
                 reset[s] = st.fresh
                 st.fresh = False
                 emit0[s] = st.prefill_pos + g == st.prompt_len
+                tel.prefill_chunk(s, st.req.rid, st.prefill_pos, g, w0)
 
+        w1 = tel.now()
         t0, seq = self.kv.serve_step(toks, clen, start, reset, emit0,
                                      dec_mask, self._next)
         self._next = jnp.where(jnp.asarray(emit0), t0, seq[:, -1])
         self.programs_run += 1
         self.prefill_tokens += int(clen.sum())
+        w2 = tel.now()
+        tel.decode_microsteps(len(dec), self.tokens_per_program, w1)
         t0_host = seq_host = None
         if not self.linkage.ret_async:
             t0_host, seq_host = np.asarray(t0), np.asarray(seq)
+        w3 = tel.now()
         now = now_fn()
         finished = []
         for s, g in zip(pre, grants):
@@ -560,9 +639,15 @@ class ServeEngine:
             st.first_token_s = st.prefill_done_s = now
             st.note_emit(now)
             st.produced = 1
+            tel.state(st.req.rid, "decoding", now)
             if st.remaining == 0 or st.eos_seen:
                 finished.append(self._finalize(s, now_fn))
         finished += self._harvest_decode(dec, seq, seq_host, now_fn)
+        tel.step("serve_chunk", self.programs_run, w0, w1 - w0, w2 - w1,
+                 w3 - w2, tel.now() - w3, queued=self.sched.n_queued,
+                 active=len(self.sched.active),
+                 swapped=len(self.sched.swapped),
+                 program=self._labels["serve_chunk"])
         return finished
 
     def _finalize(self, slot: int,
@@ -578,17 +663,20 @@ class ServeEngine:
                 tokens = tokens[:int(hits[0]) + 1]
         done = now_fn()
         fd = st.first_decode_s if st.first_decode_s is not None else done
-        return Completion(
+        c = Completion(
             rid=st.req.rid, prompt_len=int(st.req.prompt.shape[0]),
             tokens=tokens, arrival_s=st.req.arrival_s, admit_s=st.admit_s,
             first_token_s=st.first_token_s, done_s=done,
             prefill_done_s=st.prefill_done_s, first_decode_s=fd,
             max_stall_s=st.max_stall_s)
+        self.tel.complete(c, done)
+        return c
 
     # -- driving loops ------------------------------------------------------
 
     def _admit_and_step(self, now_fn) -> List[Completion]:
         finished = []
+        self.tel.profile_tick(self.programs_run)
         self._resume_swapped()
         while self.sched.can_admit() and not self.sched.swapped:
             # swapped slots are the head of the line: fresh admissions wait
@@ -604,7 +692,10 @@ class ServeEngine:
                          else self.step(now_fn))
         if self.tuner is not None:
             for c in finished:
+                old = self.chunk_budget
                 self.chunk_budget = self.tuner.observe(c.ttft_s)
+                self.tel.budget_adjust(old, self.chunk_budget,
+                                       self.tel.now())
         return finished
 
     def run(self, requests: List[Request], *, load: str = "closed",
@@ -623,16 +714,21 @@ class ServeEngine:
         completions: List[Completion] = []
         t0 = clock()
         rel = lambda: clock() - t0
+        # trace timestamps share the run's relative clock, so span-derived
+        # TTFT/latency and Completion timestamps are the same timeline
+        self.tel.set_clock(rel)
         if load == "open":
             worker = AdmissionWorker(requests, clock=clock)
             while len(completions) < n:
                 for r in worker.poll():
                     self.sched.enqueue(r)
+                    self.tel.state(r.rid, "queued", r.arrival_s)
                 if (not self.sched.active and not self.sched.can_admit()
                         and not self.sched.swapped and not worker.exhausted):
                     r = worker.wait(timeout=0.05)   # device idle: block
                     if r is not None:
                         self.sched.enqueue(r)
+                        self.tel.state(r.rid, "queued", r.arrival_s)
                     continue
                 completions += self._admit_and_step(rel)
         elif load == "closed":
@@ -644,6 +740,7 @@ class ServeEngine:
                     req = dataclasses.replace(requests[issued],
                                               arrival_s=rel())
                     self.sched.enqueue(req)
+                    self.tel.state(req.rid, "queued", req.arrival_s)
                     issued += 1
                     outstanding += 1
                 done = self._admit_and_step(rel)
@@ -736,6 +833,8 @@ class ServeEngine:
         if self.tuner is not None:
             self.tuner.adjustments = 0
         self.kv.reset_counters()
+        self.tel.reset()                 # warmup events don't belong in the
+                                         # trace or the metrics
 
 
 # ---------------------------------------------------------------------------
@@ -755,8 +854,31 @@ def _kv_bytes_per_shard(cache) -> int:
 
 def serve_report(completions: List[Completion], wall_s: float,
                  utilization: Optional[dict] = None) -> dict:
+    """Summarize a serve run. Well-defined for every completion count:
+
+    - zero completions (a mid-run snapshot before anything finishes):
+      returns the partial report — ``requests``/``total_tokens`` 0, the
+      rates 0.0, utilization merged — with every percentile/latency field
+      *omitted* (there is no sample to summarize; consumers must treat the
+      keys as optional, not read NaNs).
+    - small samples: percentiles are ``np.percentile`` over the observed
+      completions, so with n < 100 the p99 equals the sample maximum (with
+      n == 1, every percentile is that single observation). They are exact
+      order statistics of what was measured, not population estimates.
+    - ``wall_s == 0`` (frozen or zero-resolution clocks): the throughput
+      rates are 0.0 rather than a division error.
+    """
     if not completions:
-        raise ValueError("serve_report needs at least one completion")
+        rep = {
+            "requests": 0,
+            "wall_s": wall_s,
+            "total_tokens": 0,
+            "tokens_per_s": 0.0,
+            "requests_per_s": 0.0,
+        }
+        if utilization:
+            rep.update(utilization)
+        return rep
     lats = np.array([c.latency_s for c in completions])
     ttfts = np.array([c.ttft_s for c in completions])
     queue = np.array([c.queue_wait_s for c in completions])
@@ -767,8 +889,10 @@ def serve_report(completions: List[Completion], wall_s: float,
         "requests": len(completions),
         "wall_s": wall_s,
         "total_tokens": total_tokens,
-        "tokens_per_s": total_tokens / wall_s,
-        "requests_per_s": len(completions) / wall_s,
+        # rates are 0.0 on a zero-length wall clock (e.g. a frozen test
+        # clock), not a ZeroDivisionError — the counts still carry the data
+        "tokens_per_s": total_tokens / wall_s if wall_s else 0.0,
+        "requests_per_s": len(completions) / wall_s if wall_s else 0.0,
         "mean_latency_s": float(lats.mean()),
         "p50_latency_s": float(np.percentile(lats, 50)),
         "p99_latency_s": float(np.percentile(lats, 99)),

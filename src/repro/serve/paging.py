@@ -66,6 +66,7 @@ from repro.models import prefill_suffix
 from repro.sharding.rules import host_to_mesh
 from repro.models.transformer import _check_pageable
 from repro.serve.cache import make_prefill_fn
+from repro.serve.telemetry import NULL_TELEMETRY
 
 
 # ---------------------------------------------------------------------------
@@ -454,6 +455,9 @@ class PagedKV:
     """Block-table KV backend: the engine's ``--kv paged`` subsystem."""
 
     kind = "paged"
+    #: telemetry hooks for tier movement (the owning engine installs its
+    #: bundle here; the class default is the zero-cost null singleton)
+    tel = NULL_TELEMETRY
 
     def __init__(self, cfg: ArchConfig, params, opts, linkage, n_slots: int,
                  max_len: int, sampling=None, bucket_fn=None,
@@ -652,6 +656,7 @@ class PagedKV:
         self.host.touch(h)
         self.prefix_demotions += 1
         self.bytes_moved += self._block_bytes
+        self.tel.demote(self._block_bytes)
 
     def _promote(self, prompt: np.ndarray, matched: List[int]) -> List[int]:
         """Extend a device radix match with host-tier hits: pop each
@@ -686,6 +691,7 @@ class PagedKV:
             i += 1
             self.prefix_promotions += 1
             self.bytes_moved += self._block_bytes
+            self.tel.promote(self._block_bytes)
         if out:
             self.index.insert(prompt, matched + out,
                               len(matched) + len(out), self.pool)
@@ -728,6 +734,7 @@ class PagedKV:
             prompt=self.prompts.get(slot) if self.chunked else None)
         self.swap_out_blocks += len(hblks)
         self.bytes_moved += len(hblks) * self._block_bytes
+        self.tel.swap_out(slot, len(hblks), len(hblks) * self._block_bytes)
         self.release(slot)
         return handle
 
@@ -777,6 +784,7 @@ class PagedKV:
             self.prompts[slot] = handle.prompt
         self.swap_in_blocks += len(dblks)
         self.bytes_moved += len(dblks) * self._block_bytes
+        self.tel.swap_in(slot, len(dblks), len(dblks) * self._block_bytes)
         return True
 
     # -- persistence --------------------------------------------------------

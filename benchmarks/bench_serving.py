@@ -29,6 +29,8 @@ PRESETS = ["base", "byp", "ret_byp", "ret_byp_shortcut", "nss_shortcut"]
 PAGED_PRESETS = ["base", "nss_shortcut"]
 CHUNKED_PROMPT_LENS = [32, 128, 512]
 BENCH_JSON = "BENCH_serving.json"
+# bump when row keys change shape (downstream dashboards key on this)
+BENCH_SCHEMA_VERSION = 2
 
 
 def _stall_cell(chunked: bool, budget: int):
@@ -135,15 +137,19 @@ def run_preempt(json_rows=None):
     a 48-token prompt). Reported per mode: wasted prefill tokens (prompt
     tokens absorbed beyond one pass per request — recompute's bill, ~0 under
     swap), the victim's worst inter-token stall (re-admission latency), and
-    the swap counters (blocks/bytes through the host tier)."""
+    the swap counters (blocks/bytes through the host tier). The swap_sync
+    row re-runs the swap cell with ``async_swap=False`` — deferred stream
+    vs blocking transfers at identical token streams; the delta is
+    victim-resume latency and steady-state tokens/s."""
     n_requests, prompt_len = 6, 48
     cells = {}
-    for mode in ("recompute", "swap"):
+    for mode, kw in [("recompute", dict(preempt="recompute")),
+                     ("swap", dict(preempt="swap")),
+                     ("swap_sync", dict(preempt="swap", async_swap=False))]:
         rep = run_engine("tinyllama-1.1b", "nss_shortcut", n_slots=3,
                          prompt_len=prompt_len, gen_len=24,
                          requests=n_requests, load="closed", decode_steps=4,
-                         kv="paged", block_size=8, num_blocks=24,
-                         preempt=mode)
+                         kv="paged", block_size=8, num_blocks=24, **kw)
         rep["workload"] = f"preemption_{mode}"
         # one prefill pass per request is the floor; anything above it was
         # recomputed after a preemption (shared/promoted tokens count as
@@ -157,7 +163,9 @@ def run_preempt(json_rows=None):
             f"swap_preemptions={rep.get('swap_preemptions', 0)};"
             f"wasted_prefill_tokens={rep['wasted_prefill_tokens']};"
             f"max_decode_stall_s={rep['max_decode_stall_s']:.4f};"
-            f"swap_bytes={rep.get('kv_host_bytes_moved', 0)}")
+            f"swap_bytes={rep.get('kv_host_bytes_moved', 0)};"
+            f"stream_transfers={rep.get('kv_stream_transfers', 0)};"
+            f"prefetch_hits={rep.get('kv_prefetch_hits', 0)}")
         if json_rows is not None:
             json_rows.append(rep)
     return cells
@@ -439,10 +447,19 @@ def run(mesh: str = "", budget: int = 64):
     if mesh:
         run_mesh(mesh)
 
+    # one run_id per invocation so rows from different runs can be told
+    # apart after concatenation; schema_version keys row-shape migrations
+    import time
+    import uuid
+
+    run_id = f"{time.strftime('%Y%m%dT%H%M%S')}-{uuid.uuid4().hex[:8]}"
+    for r in json_rows:
+        r["run_id"] = run_id
+        r["schema_version"] = BENCH_SCHEMA_VERSION
     with open(BENCH_JSON, "w") as f:
         json.dump(json_rows, f, indent=1)
-    print(f"# wrote {len(json_rows)} chunked-vs-two-phase rows to "
-          f"{BENCH_JSON}")
+    print(f"# wrote {len(json_rows)} rows to {BENCH_JSON} "
+          f"(run_id={run_id}, schema_version={BENCH_SCHEMA_VERSION})")
 
 
 if __name__ == "__main__":

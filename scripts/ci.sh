@@ -22,11 +22,11 @@ echo "== smoke: slotted-vs-paged token identity (incl. chunked prefill,"
 echo "          the two-tier swap/warm-start engines under pool pressure,"
 echo "          and speculative decode vs its plain-decode twins),"
 echo "          every engine traced + schema-validated =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --trace
+python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --trace
 
 echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh, "
 echo "          two-phase + chunked + swap/warm-start + spec engines) =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --mesh 1,2 --trace
+python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --mesh 1,2 --trace
 
 echo "== smoke: chunked-prefill serve launcher (open-loop) =="
 python -m repro.launch.serve --preset nss_shortcut --load open \

@@ -57,6 +57,12 @@ def _parse_args(argv=None):
                    help="also run the speculative engines (n-gram drafts + "
                         "verify programs) on a repetitive workload and "
                         "assert identity against their plain-decode twins")
+    p.add_argument("--async-swap", action="store_true",
+                   help="with --swap: also run synchronous-transfer twins "
+                        "(async_swap=False) of the swap cells plus an lru "
+                        "async/sync pair, asserting the async runtime "
+                        "(batched chain transfers, stream drains, resume "
+                        "prefetch) changes no token stream")
     p.add_argument("--budget", type=int, default=6,
                    help="chunked: tokens per serve step (small by default "
                         "so the smoke prompts split into several chunks)")
@@ -207,6 +213,25 @@ def main() -> int:
              dict(preempt="swap", chunked=True, chunk_budget=_ARGS.budget,
                   num_blocks=4)),
         ]
+        if _ARGS.async_swap:
+            # synchronous twins of the swap cells (async_swap is the
+            # default above) plus an lru async/sync pair: every cell is
+            # compared against paged+pressure+recompute below, so sync ==
+            # async identity holds transitively
+            from repro.serve import PreemptionPolicy
+            swap_cells += [
+                ("paged+pressure+swap+sync",
+                 dict(preempt="swap", async_swap=False)),
+                ("paged+pressure+swap+chunked+sync",
+                 dict(preempt="swap", chunked=True,
+                      chunk_budget=_ARGS.budget, num_blocks=4,
+                      async_swap=False)),
+                ("paged+pressure+swap+lru",
+                 dict(preempt=PreemptionPolicy(mode="swap", victim="lru"))),
+                ("paged+pressure+swap+lru+sync",
+                 dict(preempt=PreemptionPolicy(mode="swap", victim="lru"),
+                      async_swap=False)),
+            ]
         tmpdir = tempfile.TemporaryDirectory()   # cleaned up at exit
         cache_path = os.path.join(tmpdir.name, "prefix.npz")
         for name, kw in swap_cells:
@@ -221,6 +246,13 @@ def main() -> int:
                 print(f"FAIL: {name} never swap-preempted (pressure "
                       "geometry too loose)", file=sys.stderr)
                 return 1
+            if _ARGS.async_swap and "swap" in name:
+                engaged = bool(eng.kv.stream_transfers)
+                if engaged != ("sync" not in name):
+                    print(f"FAIL: {name} swap stream "
+                          f"{'engaged' if engaged else 'idle'} (expected "
+                          f"the opposite)", file=sys.stderr)
+                    return 1
             if name == "paged+pressure+swap":
                 eng.save_prefix_cache(cache_path)
         # warm-start restart: a fresh engine restores the saved host tier

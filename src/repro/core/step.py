@@ -470,6 +470,58 @@ def build_block_import_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
     return jax.jit(imp, **kwargs)
 
 
+def build_chain_export_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
+                          chain_sharding=None) -> Callable:
+    """Jitted ``(paged_cache, blks (n,) i32) -> tuple of {"k","v"}``: gather
+    a whole block chain's K/V out of the device pool in one program —
+    (L, n, bs, HKV, dh) per layer group. The chain-at-once counterpart of
+    ``build_block_export_fn``: one dispatch per swapped sequence instead of
+    one per block, and the result is a *fresh* array (the gather copies out
+    of the pool), so the transfer can be drained asynchronously
+    (``copy_to_host_async``) after the pool blocks are already reused.
+
+    Retraces once per chain length n — chain lengths are small and heavily
+    repeated under steady swap pressure, so the jit cache stays tiny.
+
+    With ``mesh`` the output keeps the pool's KV-head sharding
+    (``ArchSharding.serve_swap_chain_specs``).
+    """
+
+    def export(cache, blks):
+        return tuple({"k": g["kp"][:, blks], "v": g["vp"][:, blks]}
+                     for g in cache)
+
+    kwargs: Dict[str, Any] = {}
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        kwargs = dict(in_shardings=(cache_sharding, repl),
+                      out_shardings=chain_sharding)
+    return jax.jit(export, **kwargs)
+
+
+def build_chain_import_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
+                          chain_sharding=None) -> Callable:
+    """Jitted ``(paged_cache, kvs, blks (n,) i32) -> paged_cache``: scatter
+    a whole chain's K/V back into the device pool in one donated program —
+    the host→device half of swap-in resume, prefix promotion, and
+    warm-start restore, chain-at-once. See ``build_chain_export_fn``.
+    """
+
+    def imp(cache, kvs, blks):
+        return tuple(
+            dict(g,
+                 kp=g["kp"].at[:, blks].set(kv["k"].astype(g["kp"].dtype)),
+                 vp=g["vp"].at[:, blks].set(kv["v"].astype(g["vp"].dtype)))
+            for g, kv in zip(cache, kvs))
+
+    kwargs: Dict[str, Any] = {"donate_argnums": (0,)}
+    if mesh is not None:
+        repl = NamedSharding(mesh, P())
+        kwargs.update(in_shardings=(cache_sharding, chain_sharding, repl),
+                      out_shardings=cache_sharding)
+    return jax.jit(imp, **kwargs)
+
+
 def build_serve_step(cfg: ArchConfig, opts: ModelOptions,
                      linkage: LinkageConfig, max_len: int,
                      sampling: Optional[SamplingConfig] = None, *,

@@ -83,6 +83,7 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                mesh: str = "", chunked: bool = False, budget: int = 256,
                chunk_width: int = 0, preempt: str = "recompute",
                victim: str = "youngest", host_blocks: int = 0,
+               async_swap: bool = True,
                prefix_cache: str = "", ttft_slo: float = 0.0,
                spec_decode: str = "none", spec_width: int = 0,
                trace: str = "", metrics: str = "",
@@ -147,7 +148,8 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                       mesh=make_serve_mesh(mesh), chunked=chunked,
                       chunk_budget=budget, chunk_width=chunk_width,
                       preempt=PreemptionPolicy(mode=preempt, victim=victim),
-                      host_blocks=host_blocks, warm_start=warm_start,
+                      host_blocks=host_blocks, async_swap=async_swap,
+                      warm_start=warm_start,
                       ttft_slo_s=ttft_slo / 1e3 if ttft_slo > 0 else None,
                       spec_decode=spec_decode, spec_width=spec_width,
                       telemetry=tel)
@@ -297,6 +299,12 @@ def main(argv=None) -> int:
                    help="paged: host-tier pool size in blocks (0 = auto: "
                         "mirror the device pool when --preempt swap or a "
                         "prefix cache is in play, else disabled)")
+    p.add_argument("--sync-swap", action="store_true",
+                   help="paged: disable the async swap runtime (batched "
+                        "chain transfers behind a double-buffered stream, "
+                        "resume-head prefetch, overlapped dispatch) and fall "
+                        "back to blocking per-step transfers — escape hatch; "
+                        "token streams are bit-identical either way")
     p.add_argument("--prefix-cache", default="",
                    help="paged: persist the prefix cache at this path — "
                         "warm-start from it when it exists, save back after "
@@ -396,6 +404,7 @@ def main(argv=None) -> int:
                          budget=args.budget, chunk_width=args.chunk_width,
                          preempt=args.preempt, victim=args.victim,
                          host_blocks=args.host_blocks,
+                         async_swap=not args.sync_swap,
                          prefix_cache=args.prefix_cache,
                          ttft_slo=args.ttft_slo,
                          spec_decode=args.spec_decode,

@@ -10,7 +10,7 @@ from repro.serve.cache import (KVBackend, SlottedKV, init_slot_cache,
                                make_slot_writer, slotify)
 from repro.serve.engine import KV_BACKENDS, ServeEngine, serve_report
 from repro.serve.paging import (BlockPool, BlockTable, HostBlockStore,
-                                PagedKV, PrefixIndex, SwapHandle)
+                                PagedKV, PrefixIndex, SwapHandle, SwapStream)
 from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
                                    DraftProposer,
                                    PreemptionPolicy, Request, SlotScheduler,
@@ -30,7 +30,8 @@ __all__ = [
     "NULL_TELEMETRY", "PagedKV", "PreemptionPolicy",
     "PrefixIndex", "Request", "SPAN_STATES", "SPAN_TRANSITIONS",
     "ServeEngine", "SlotScheduler", "SlotState",
-    "SlottedKV", "SwapHandle", "Telemetry", "TraceRecorder", "bucket_len",
+    "SlottedKV", "SwapHandle", "SwapStream", "Telemetry", "TraceRecorder",
+    "bucket_len",
     "init_slot_cache", "load_trace",
     "make_slot_writer", "pack_chunks", "phase_breakdown", "serve_report",
     "slotify", "span_latencies", "synthetic_requests", "validate_events",

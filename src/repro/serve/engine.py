@@ -100,7 +100,8 @@ class ServeEngine:
                  warm_start: Optional[str] = None,
                  ttft_slo_s: Optional[float] = None,
                  spec_decode: str = "none", spec_width: int = 0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 async_swap: bool = True):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -169,7 +170,8 @@ class ServeEngine:
                               block_size=block_size, num_blocks=num_blocks,
                               mesh=mesh, chunked=chunked, host_blocks=hb,
                               warm_start=warm_start,
-                              spec=self.proposer is not None)
+                              spec=self.proposer is not None,
+                              async_swap=async_swap)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
@@ -191,6 +193,11 @@ class ServeEngine:
                 cap=(self.tokens_per_program + self.chunk_width) * n_slots)
         self._next = jnp.zeros((n_slots,), jnp.int32)
         self.sched = SlotScheduler(n_slots)
+        # dispatch pipelining: next-step chunk grants computed in the
+        # overlap window, keyed on the exact pack_chunks inputs — consumed
+        # by _plan_chunks only on an exact key match (pack_chunks is pure,
+        # so a hit is bit-identical to recomputing)
+        self._pack_memo: Optional[Tuple[tuple, List[int]]] = None
         self.programs_run = 0
         self.tokens_wasted = 0       # decoded past a request's budget/EOS
         self.preemptions = 0         # paged: recompute-preempted admissions
@@ -295,6 +302,9 @@ class ServeEngine:
                 now = self.tel.now()
                 self.tel.preempt(rid, slot, "swap", now)
                 self.tel.state(rid, "swapped", now)
+                # start staging the resume-head victim's host→device copy
+                # while the victim's device blocks are still being recycled
+                self._prefetch_head()
                 return
         st = self.sched.release(slot)
         self.kv.release(slot)
@@ -332,6 +342,47 @@ class ServeEngine:
             self.tel.state(st.req.rid,
                            "prefilling" if st.prefilling else "decoding",
                            self.tel.now())
+        # whatever still waits (pool not ready / no free slot): stage the
+        # new resume head's copy so its eventual swap-in is a prefetch hit
+        self._prefetch_head()
+
+    # -- async runtime: drain / prefetch / overlapped host work -------------
+
+    def _drain_swaps(self) -> int:
+        """Complete in-flight async swap transfers (no-op for backends
+        without a stream). Called at step boundaries and in the overlap
+        window, so deferred device→host copies never pile past the step."""
+        drain = getattr(self.kv, "drain_swaps", None)
+        return drain() if drain is not None else 0
+
+    def _prefetch_head(self) -> bool:
+        """Speculatively stage the host→device copy for the resume-head
+        swapped victim (smallest original admit_seq — the one
+        ``_resume_swapped`` will pop first). Pure data staging on the
+        handle: no refcounts move until the actual swap-in, and the
+        synchronous path (``--sync-swap``) makes this a no-op."""
+        pf = getattr(self.kv, "prefetch_swap_in", None)
+        if pf is None:
+            return False
+        head = self.sched.peek_swapped()
+        if head is None:
+            return False
+        return pf(head[1][0])
+
+    def _overlap_host_work(self) -> None:
+        """Host-side work pipelined under the just-dispatched device step:
+        drain the swap stream and stage the resume-head prefetch. Runs
+        between dispatch and the blocking host sync, so its cost lands
+        inside the step's device phase instead of pack/host — the overlap
+        PR 7's trace phase breakdown makes visible."""
+        tel = self.tel
+        t = tel.now()
+        if self._drain_swaps():
+            tel.overlap("drain", tel.now() - t)
+        if self.sched.swapped:
+            t = tel.now()
+            if self._prefetch_head():
+                tel.overlap("prefetch", tel.now() - t)
 
     def step(self, now_fn: Callable[[], float]) -> List[Completion]:
         """Run one decode program; harvest tokens; evict finished slots.
@@ -352,6 +403,7 @@ class ServeEngine:
         self._next = toks[:, -1]
         self.programs_run += 1
         t2 = tel.now()
+        self._overlap_host_work()      # under the dispatched device step
         toks_host = None
         if not self.linkage.ret_async:
             toks_host = np.asarray(toks)            # "iret": sync every program
@@ -549,10 +601,16 @@ class ServeEngine:
                            key=lambda s: self.sched.active[s].admit_seq)
             dec = [s for s in order if not self.sched.active[s].prefilling]
             pre = [s for s in order if self.sched.active[s].prefilling]
-            grants = pack_chunks(
-                self.chunk_budget, self.chunk_width, K * len(dec),
-                [self.sched.active[s].prompt_len
-                 - self.sched.active[s].prefill_pos for s in pre])
+            remaining = [self.sched.active[s].prompt_len
+                         - self.sched.active[s].prefill_pos for s in pre]
+            key = (self.chunk_budget, self.chunk_width, K * len(dec),
+                   tuple(remaining))
+            if self._pack_memo is not None and self._pack_memo[0] == key:
+                grants = self._pack_memo[1]
+            else:
+                grants = pack_chunks(self.chunk_budget, self.chunk_width,
+                                     K * len(dec), remaining)
+            self._pack_memo = None       # single-shot; replans recompute
             ok = all(self.kv.reserve(s, K) for s in dec)
             if ok:
                 for s, g in zip(pre, grants):
@@ -619,6 +677,24 @@ class ServeEngine:
         self.prefill_tokens += int(clen.sum())
         w2 = tel.now()
         tel.decode_microsteps(len(dec), self.tokens_per_program, w1)
+        self._overlap_host_work()      # under the dispatched device step
+        # pack next step's chunk grants now, keyed on the exact inputs
+        # _plan_chunks will see; a key hit is bit-identical to recomputing
+        # (pack_chunks is pure), a miss (admission/preemption changed the
+        # picture) silently falls through to the normal recompute
+        nxt_rem = [r for s, g in zip(pre, grants)
+                   for r in [self.sched.active[s].prompt_len
+                             - (self.sched.active[s].prefill_pos + g)]
+                   if r > 0]
+        if nxt_rem:
+            t = tel.now()
+            ndec = len(dec) + sum(1 for s, g in zip(pre, grants) if emit0[s])
+            key = (self.chunk_budget, self.chunk_width,
+                   self.tokens_per_program * ndec, tuple(nxt_rem))
+            self._pack_memo = (key, pack_chunks(
+                self.chunk_budget, self.chunk_width,
+                self.tokens_per_program * ndec, list(nxt_rem)))
+            tel.overlap("pack", tel.now() - t)
         t0_host = seq_host = None
         if not self.linkage.ret_async:
             t0_host, seq_host = np.asarray(t0), np.asarray(seq)
@@ -677,6 +753,7 @@ class ServeEngine:
     def _admit_and_step(self, now_fn) -> List[Completion]:
         finished = []
         self.tel.profile_tick(self.programs_run)
+        self._drain_swaps()          # step boundary: complete deferred copies
         self._resume_swapped()
         while self.sched.can_admit() and not self.sched.swapped:
             # swapped slots are the head of the line: fresh admissions wait

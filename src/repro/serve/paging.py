@@ -33,11 +33,18 @@ sequence length; here capacity is bounded by tokens actually resident:
                 without re-prefill; the engine's ``PreemptionPolicy``
                 chooses).
 
-The two tiers talk through one-block jitted copy programs
-(``repro.core.step.build_block_export_fn`` / ``build_block_import_fn``);
-under a mesh the copies are per-shard (``ArchSharding.serve_swap_block_specs``
+The two tiers talk through jitted chain-at-once copy programs
+(``repro.core.step.build_chain_export_fn`` / ``build_chain_import_fn`` —
+one program per swapped sequence, not one per block; the single-block
+variants remain for point reads);
+under a mesh the copies are per-shard (``ArchSharding.serve_swap_chain_specs``
 + ``repro.sharding.rules.host_to_mesh``), so the host tier mirrors the
-physical shard layout. Evicted shared prefixes demote device→host and
+physical shard layout. Under async swap (the default) device→host chain
+transfers are issued on a ``SwapStream`` double buffer and complete at the
+owning engine's step boundaries (``drain_swaps``) — the exported chains
+are fresh arrays, so device blocks recycle immediately while the copy is
+still in flight; the engine may also ``prefetch_swap_in`` the resume-head
+victim so its host→device copy hides under the current device step. Evicted shared prefixes demote device→host and
 promote back on a radix hit; ``save(path)``/``restore(path)`` persist the
 host tier (plus a lossless export of the device radix index)
 prompt-token-keyed and config-fingerprinted.
@@ -196,6 +203,23 @@ class HostBlockStore(BlockPool):
                       "v": self.v[g][:, blk].copy()}
                      for g in range(len(self.k)))
 
+    def write_chain(self, blks: List[int], kvs) -> None:
+        """Store a whole exported chain at once (tuple of {"k","v"} per
+        group, leaves (L, n, bs, HKV, dh)) — the host half of
+        ``build_chain_export_fn`` and the ``SwapStream`` write callback."""
+        idx = np.asarray(blks, np.int64)
+        for g, kv in enumerate(kvs):
+            self.k[g][:, idx] = np.asarray(kv["k"])
+            self.v[g][:, idx] = np.asarray(kv["v"])
+
+    def read_chain(self, blks: List[int]):
+        """A whole chain's K/V as ``build_chain_import_fn``'s operand type
+        (fancy indexing copies — safe to free the host blocks as soon as
+        the import is dispatched)."""
+        idx = np.asarray(blks, np.int64)
+        return tuple({"k": self.k[g][:, idx], "v": self.v[g][:, idx]}
+                     for g in range(len(self.k)))
+
 
 @dataclasses.dataclass
 class SwapHandle:
@@ -206,6 +230,58 @@ class SwapHandle:
     key: jax.Array                       # (2,) uint32 sampling-chain row
     prompt: Optional[np.ndarray] = None  # chunked: prompt source for the
                                          # remaining (mid-prefill) chunks
+    prefetch: Any = None                 # in-flight speculative host→device
+                                         # copy of the chain (device tree)
+    dropped: bool = False                # drop_swap'd: resuming is an error
+
+
+class SwapStream:
+    """Double-buffered asynchronous device→host transfer queue.
+
+    ``issue`` starts a non-blocking copy of an exported chain
+    (``copy_to_host_async`` on every leaf) and parks the (host block ids,
+    device arrays) pair; the oldest transfer is completed — ``np.asarray``
+    (which merely waits once the async copy landed) then the ``write``
+    callback into the host store — whenever more than ``depth`` are in
+    flight, and ``drain`` completes everything. The exported chains are
+    *fresh* arrays (the gather program copies out of the pool), so the
+    device pool blocks may be freed and reused while the transfer is still
+    in flight — only the host-tier destination blocks must stay allocated
+    until the drain, which is why ``PagedKV`` drains before any host-tier
+    read or free of a possibly-pending block.
+    """
+
+    def __init__(self, write, depth: int = 2):
+        self.write = write               # write(hblks, kvs) callback
+        self.depth = depth
+        self.pending: List[Tuple[List[int], Any, int]] = []
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def issue(self, hblks: List[int], kvs, nbytes: int) -> None:
+        """Start the async copy and enqueue its completion."""
+        for leaf in jax.tree.leaves(kvs):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        self.pending.append((list(hblks), kvs, nbytes))
+        while len(self.pending) > self.depth:
+            self._complete_one()
+
+    def _complete_one(self) -> Tuple[int, int]:
+        hblks, kvs, nbytes = self.pending.pop(0)
+        self.write(hblks, jax.tree.map(np.asarray, kvs))
+        return len(hblks), nbytes
+
+    def drain(self) -> Tuple[int, int, int]:
+        """Complete every in-flight transfer; (transfers, blocks, bytes)."""
+        t = b = n = 0
+        while self.pending:
+            blocks, nbytes = self._complete_one()
+            t += 1
+            b += blocks
+            n += nbytes
+        return t, b, n
 
 
 class _Node:
@@ -464,10 +540,13 @@ class PagedKV:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  mesh=None, chunked: bool = False,
                  host_blocks: Optional[int] = 0,
-                 warm_start: Optional[str] = None, spec: bool = False):
+                 warm_start: Optional[str] = None, spec: bool = False,
+                 async_swap: bool = True):
         from repro.core.linkage import L3_NSS
         from repro.core.step import (build_block_export_fn,
                                      build_block_import_fn,
+                                     build_chain_export_fn,
+                                     build_chain_import_fn,
                                      build_paged_decode_step,
                                      build_serve_step, build_verify_step,
                                      make_sampler)
@@ -501,6 +580,11 @@ class PagedKV:
         self.prefix_demotions = 0
         self.prefix_promotions = 0
         self.restored_entries = 0
+        self.swap_fails = 0           # tier moves that fell back to recompute
+        self.stream_transfers = 0     # async transfers completed at drains
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
+        self.prefetch_cancels = 0
 
         # -- the host tier ---------------------------------------------------
         # host_blocks: 0 disables it; None sizes it like the device pool (the
@@ -525,22 +609,33 @@ class PagedKV:
             2 * int(np.prod(s)) * np.dtype(opts.dtype).itemsize
             for s in group_shapes)
 
-        param_sh = cache_sh = blk_sh = None
+        param_sh = cache_sh = blk_sh = chain_sh = None
         if mesh is not None:
             from repro.sharding.rules import ArchSharding, named
             sh = ArchSharding(cfg, mesh)
             param_sh = named(mesh, sh.serve_param_specs(params))
             cache_sh = named(mesh, sh.serve_paged_cache_specs(self.cache))
             blk_sh = named(mesh, sh.serve_swap_block_specs(self.cache))
+            chain_sh = named(mesh, sh.serve_swap_chain_specs(self.cache))
             self.params = params = jax.device_put(params, param_sh)
             self.cache = jax.device_put(self.cache, cache_sh)
         self._blk_sh = blk_sh
+        self._chain_sh = chain_sh
 
         self.chunked = chunked
         self._copy = _make_copy_block(mesh, cache_sh)
         self._export = build_block_export_fn(mesh, cache_sh, blk_sh)
         self._import = build_block_import_fn(mesh, cache_sh, blk_sh)
+        self._export_chain = build_chain_export_fn(mesh, cache_sh, chain_sh)
+        self._import_chain = build_chain_import_fn(mesh, cache_sh, chain_sh)
         self._setpos = _make_set_pos(mesh, cache_sh)
+        # the async swap stream: device→host chain transfers issued at
+        # swap-out/demote time, completed at the owning engine's step
+        # boundaries (``drain_swaps``); None = fully synchronous tier moves
+        self.async_swap = bool(async_swap)
+        self.stream: Optional[SwapStream] = None
+        if self.async_swap and self.host is not None:
+            self.stream = SwapStream(self.host.write_chain)
         # the decode program is shared by both step disciplines: two-phase
         # decode, and the chunked engine's pure-decode fast path
         self._dec = build_paged_decode_step(cfg, opts, linkage, max_len,
@@ -623,6 +718,10 @@ class PagedKV:
         return h
 
     def _host_evict_lru(self) -> bool:
+        # drain first: an entry picked here may still have its demote write
+        # in flight — freeing (and reallocating) it before the deferred
+        # write lands would corrupt the new owner's data
+        self.drain_swaps()
         cands = [(self.host.tick[h], h) for h in self.host_map.values()
                  if self.host.refs[h] == 1]
         if not cands:
@@ -633,18 +732,37 @@ class PagedKV:
         self.host.free(h)
         return True
 
+    def drain_swaps(self) -> int:
+        """Complete every in-flight async device→host transfer (no-op when
+        the stream is empty or the backend is synchronous). The engine
+        calls this at step boundaries; internally it guards every host-tier
+        read and every free of a possibly-pending host block. Returns the
+        number of transfers completed."""
+        if self.stream is None or not len(self.stream):
+            return 0
+        t, b, n = self.stream.drain()
+        self.stream_transfers += t
+        self.tel.swap_stream(t, b, n)
+        return t
+
     def _demote(self, node) -> None:
         """Device index eviction hook: copy the block's K/V into the host
         tier (keyed by its full token prefix) before the device block is
-        freed — evicted shared prefixes spill instead of dying."""
+        freed — evicted shared prefixes spill instead of dying. The export
+        is a fresh device array, so under async swap the device→host copy
+        is issued on the stream and completes at the next drain; the device
+        block may be reused immediately."""
         if self.host is None:
             return
         h = self._host_alloc()
         if h is None:
             return                    # host tier pinned full: drop as before
-        kvs = jax.device_get(
-            self._export(self.cache, jnp.asarray(node.block, jnp.int32)))
-        self.host.write(h, kvs)
+        kvs = self._export_chain(self.cache,
+                                 jnp.asarray([node.block], jnp.int32))
+        if self.stream is not None:
+            self.stream.issue([h], kvs, self._block_bytes)
+        else:
+            self.host.write_chain([h], jax.device_get(kvs))
         tokens = self.index.node_tokens(node)
         key = tokens.tobytes()
         old = self.host_map.pop(key, None)
@@ -669,7 +787,10 @@ class PagedKV:
         for b in matched:             # pin against demote-eviction below
             self.pool.retain(b)
         P = int(prompt.shape[0])
-        out: List[int] = []
+        # pop every consecutive host hit first, then allocate device blocks
+        # in the same order the per-block path did (identical block ids),
+        # then move the whole chain in ONE import program
+        hits: List[Tuple[bytes, int]] = []     # (key, hblk), chain order
         i = len(matched)
         while (i + 1) * self.bs <= P:
             key = prompt[:(i + 1) * self.bs].tobytes()
@@ -677,22 +798,31 @@ class PagedKV:
             if h is None:
                 break
             del self.host_keys[h]
-            b = self._alloc()
-            if b is None:             # device dry: put the entry back
-                self.host_map[key] = h
-                self.host_keys[h] = (key,
-                                     prompt[:(i + 1) * self.bs].copy())
-                break
-            kvs = host_to_mesh(self.host.read(h), self._blk_sh)
-            self.cache = self._import(self.cache, kvs,
-                                      jnp.asarray(b, jnp.int32))
-            self.host.free(h)
-            out.append(b)
+            hits.append((key, h))
             i += 1
-            self.prefix_promotions += 1
-            self.bytes_moved += self._block_bytes
-            self.tel.promote(self._block_bytes)
+        out: List[int] = []
+        for j, (key, h) in enumerate(hits):
+            b = self._alloc()
+            if b is None:             # device dry: put unplaced entries back
+                for key2, h2 in hits[j:]:
+                    ntok = len(key2) // prompt.itemsize
+                    self.host_map[key2] = h2
+                    self.host_keys[h2] = (key2, prompt[:ntok].copy())
+                del hits[j:]
+                break
+            out.append(b)
         if out:
+            self.drain_swaps()        # pending demote writes may target hits
+            hblks = [h for _, h in hits]
+            kvs = host_to_mesh(self.host.read_chain(hblks), self._chain_sh)
+            self.cache = self._import_chain(self.cache, kvs,
+                                            jnp.asarray(out, jnp.int32))
+            for _, h in hits:
+                self.host.free(h)
+            self.prefix_promotions += len(out)
+            self.bytes_moved += len(out) * self._block_bytes
+            for _ in out:
+                self.tel.promote(self._block_bytes)
             self.index.insert(prompt, matched + out,
                               len(matched) + len(out), self.pool)
             for b in out:             # hand ownership to the index
@@ -711,7 +841,13 @@ class PagedKV:
         """Copy the slot's chain into the host tier and release its device
         memory; the returned handle resumes it via ``swap_in`` without
         re-prefill. None when no host tier exists or it is pinned full —
-        the engine falls back to recompute-preemption."""
+        the engine falls back to recompute-preemption (``swap_fail``).
+
+        The whole chain moves as ONE export program; under async swap the
+        device→host copy is issued on the stream (the export is a fresh
+        array, so the device blocks are released immediately below) and
+        completes at the next drain — host blocks are allocated here
+        either way, so refcounts are identical to the synchronous path."""
         if self.host is None:
             return None
         chain = self.chains.get(slot)
@@ -723,12 +859,18 @@ class PagedKV:
             if h is None:
                 for hb in hblks:
                     self.host.free(hb)
+                self.swap_fails += 1
+                self.tel.swap_fail(slot, len(chain.blocks), "swap_out")
                 return None
             hblks.append(h)
-        for dblk, h in zip(chain.blocks, hblks):
-            kvs = jax.device_get(
-                self._export(self.cache, jnp.asarray(dblk, jnp.int32)))
-            self.host.write(h, kvs)
+        if hblks:
+            kvs = self._export_chain(self.cache,
+                                     jnp.asarray(chain.blocks, jnp.int32))
+            nbytes = len(hblks) * self._block_bytes
+            if self.stream is not None:
+                self.stream.issue(hblks, kvs, nbytes)
+            else:
+                self.host.write_chain(hblks, jax.device_get(kvs))
         handle = SwapHandle(
             hblks=hblks, pos=int(self.pos_host[slot]), key=self.keys[slot],
             prompt=self.prompts.get(slot) if self.chunked else None)
@@ -740,10 +882,21 @@ class PagedKV:
 
     def drop_swap(self, handle: SwapHandle) -> None:
         """Abandon a swapped-out sequence (its request will recompute):
-        release the handle's host-tier blocks so they cannot leak."""
+        release the handle's host-tier blocks so they cannot leak, cancel
+        any speculative swap-in copy, and mark the handle unresumable —
+        a later ``swap_in`` on it is a caller bug and raises."""
+        # drain first: the chain's own swap-out transfer may still be in
+        # flight — freeing (and reallocating) its target blocks before the
+        # deferred write lands would corrupt the new owner's data
+        self.drain_swaps()
+        if handle.prefetch is not None:
+            handle.prefetch = None
+            self.prefetch_cancels += 1
+            self.tel.prefetch(len(handle.hblks), "cancel")
         for h in handle.hblks:
             self.host.free(h)
         handle.hblks = []
+        handle.dropped = True
 
     def can_swap_in(self, handle: SwapHandle) -> bool:
         """Is there device memory to resume this chain now? (Mirrors
@@ -754,25 +907,60 @@ class PagedKV:
             return True
         return need <= self.pool.n_free + self.index.n_evictable(self.pool)
 
+    def prefetch_swap_in(self, handle: SwapHandle) -> bool:
+        """Speculatively start the host→device copy for a swapped chain
+        (the engine calls this for the resume-head victim while the device
+        still executes the current step). The device tree parks on the
+        handle; ``swap_in`` consumes it, ``drop_swap`` cancels it. The
+        handle keeps its host blocks until then, so nothing here changes
+        refcounts — pure data staging, a no-op on the synchronous path."""
+        if (self.stream is None or handle.dropped or not handle.hblks
+                or handle.prefetch is not None):
+            return False
+        self.drain_swaps()            # its own swap-out may be in flight
+        handle.prefetch = host_to_mesh(self.host.read_chain(handle.hblks),
+                                       self._chain_sh)
+        self.prefetch_issued += 1
+        self.tel.prefetch(len(handle.hblks), "issued")
+        return True
+
     def swap_in(self, slot: int, handle: SwapHandle) -> bool:
-        """Restore a swapped-out chain into ``slot``: host→device block
-        copies into fresh blocks, then the slot's table / position /
-        sampling-chain row. False = device pool dry (caller gates with
-        ``can_swap_in``)."""
+        """Restore a swapped-out chain into ``slot``: one host→device
+        chain copy into fresh blocks (or the handle's prefetched device
+        tree, if the speculative copy was issued), then the slot's table /
+        position / sampling-chain row. False = device pool dry (caller
+        gates with ``can_swap_in``; emits ``swap_fail``). Raises on a
+        handle that ``drop_swap`` already released."""
+        if handle.dropped:
+            raise RuntimeError(
+                "swap_in on a dropped SwapHandle: drop_swap already "
+                "released its host blocks (the request must recompute)")
         dblks: List[int] = []
         for _ in handle.hblks:
             b = self._alloc()
             if b is None:
                 for db in dblks:
                     self.pool.free(db)
+                self.swap_fails += 1
+                self.tel.swap_fail(slot, len(handle.hblks), "swap_in")
                 return False
             dblks.append(b)
-        for h, b in zip(handle.hblks, dblks):
-            kvs = host_to_mesh(self.host.read(h), self._blk_sh)
-            self.cache = self._import(self.cache, kvs,
-                                      jnp.asarray(b, jnp.int32))
+        if dblks:
+            kvs = handle.prefetch
+            if kvs is not None:
+                handle.prefetch = None
+                self.prefetch_hits += 1
+                self.tel.prefetch(len(dblks), "hit")
+            else:
+                self.drain_swaps()    # its own swap-out may be in flight
+                kvs = host_to_mesh(self.host.read_chain(handle.hblks),
+                                   self._chain_sh)
+            self.cache = self._import_chain(self.cache, kvs,
+                                            jnp.asarray(dblks, jnp.int32))
         for h in handle.hblks:
             self.host.free(h)
+        handle.hblks = []
+        handle.dropped = True         # consumed: a second resume is a bug
         self.chains[slot] = BlockTable(dblks)
         self.tables_host[slot, :] = self.trash
         self.tables_host[slot, :len(dblks)] = dblks
@@ -805,6 +993,7 @@ class PagedKV:
         entries plus a lossless export of the device radix index — keyed by
         prompt tokens, fingerprinted by config, stored float32 (lossless
         for f32 and bf16 pools). Returns the number of entries written."""
+        self.drain_swaps()             # pending demote writes must land
         entries = []                   # (tokens, kvs) in LRU-ish order
         seen = set()
         for key, h in self.host_map.items():
@@ -1105,6 +1294,12 @@ class PagedKV:
                 "kv_host_bytes_moved": self.bytes_moved,
                 "kv_prefix_demotions": self.prefix_demotions,
                 "kv_prefix_promotions": self.prefix_promotions,
+                "kv_swap_fails": self.swap_fails,
+                "kv_async_swap": int(self.stream is not None),
+                "kv_stream_transfers": self.stream_transfers,
+                "kv_prefetch_issued": self.prefetch_issued,
+                "kv_prefetch_hits": self.prefetch_hits,
+                "kv_prefetch_cancels": self.prefetch_cancels,
             })
         return u
 
@@ -1117,6 +1312,11 @@ class PagedKV:
         self.bytes_moved = 0
         self.prefix_demotions = 0
         self.prefix_promotions = 0
+        self.swap_fails = 0
+        self.stream_transfers = 0
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
+        self.prefetch_cancels = 0
         if self.host is not None:
             self.host.hwm = self.host.n_resident
 

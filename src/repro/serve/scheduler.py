@@ -420,22 +420,40 @@ class SlotScheduler:
     # -- swap-preemption (suspended slot states) ----------------------------
 
     def suspend_front(self, st: SlotState, handle: Any) -> None:
-        """Park a swap-preempted slot state at the head of the line (the
-        swap analogue of ``requeue_front``: preemption order unwinds back
-        to admission order)."""
+        """Park a swap-preempted slot state ahead of the request queue in
+        the FIFO line (the swap analogue of ``requeue_front``). The parked
+        state keeps its original ``admit_seq``; resume order is decided by
+        it (``resume_next``), not by parking order — preemption order is
+        victim-policy-dependent (youngest-first, lru, ...) and only
+        youngest-first happens to unwind back to admission order."""
         self.swapped.appendleft((st, handle))
 
+    def _resume_index(self) -> int:
+        """Index of the suspended state with the smallest original
+        ``admit_seq`` — the one ``peek_swapped`` and ``resume_next`` agree
+        on. Suspended states keep their admission-time ``admit_seq`` (it is
+        only reassigned on resume), so this is FIFO-by-admission regardless
+        of the victim policy that chose the preemption order."""
+        return min(range(len(self.swapped)),
+                   key=lambda i: self.swapped[i][0].admit_seq)
+
     def peek_swapped(self) -> Optional[Tuple[SlotState, Any]]:
-        return self.swapped[0] if self.swapped else None
+        """The suspended state the next ``resume_next`` would pop."""
+        return self.swapped[self._resume_index()] if self.swapped else None
 
     def can_resume(self) -> bool:
         return bool(self.swapped) and bool(self._free)
 
     def resume_next(self) -> tuple:
-        """Pop the oldest suspended state into the lowest free slot. The
-        resumed slot takes a fresh ``admit_seq`` — it is the youngest again,
-        exactly like a recompute victim re-admitted from the queue head."""
-        st, handle = self.swapped.popleft()
+        """Pop the suspended state with the oldest *original* admission
+        (min ``admit_seq``, not parking order — under ``--victim lru``
+        preemption order need not be admission order) into the lowest free
+        slot. The resumed slot takes a fresh ``admit_seq`` — it is the
+        youngest again, exactly like a recompute victim re-admitted from
+        the queue head."""
+        i = self._resume_index()
+        st, handle = self.swapped[i]
+        del self.swapped[i]
         slot = heapq.heappop(self._free)
         self._admit_seq += 1
         st.admit_seq = self._admit_seq

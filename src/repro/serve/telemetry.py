@@ -81,6 +81,18 @@ EVENT_SCHEMA: Dict[str, frozenset] = {
     "swap_in": frozenset({"slot", "blocks", "bytes"}),
     "demote": frozenset({"blocks", "bytes"}),
     "promote": frozenset({"blocks", "bytes"}),
+    # a tier move that could not complete (host/device alloc exhaustion):
+    # ``op`` names the failed direction; the engine falls back to recompute
+    "swap_fail": frozenset({"slot", "blocks", "op"}),
+    # one drain of the async SwapStream: deferred device->host transfers
+    # completed at a step boundary (``transfers`` chains, ``blocks`` total)
+    "swap_stream": frozenset({"transfers", "blocks", "bytes"}),
+    # speculative host->device copy for the resume-head swapped victim:
+    # ``status`` is issued | hit (consumed by swap-in) | cancel (dropped)
+    "prefetch": frozenset({"blocks", "status"}),
+    # host-side work hidden under device execution (dispatch pipelining):
+    # ``kind`` is drain | prefetch | pack; ``hidden_s`` the overlapped time
+    "overlap": frozenset({"kind", "hidden_s"}),
     # a BudgetTuner adjustment of the chunked token budget
     "budget": frozenset({"old", "new"}),
     # per-request lifecycle span transition (rid/state at top level)
@@ -649,6 +661,18 @@ class Telemetry:
             self._tier_bytes = m.counter(
                 "kv_tier_bytes_total",
                 "bytes across the device<->host boundary", labels=("op",))
+            self._swap_fails = m.counter(
+                "kv_swap_failures_total",
+                "tier moves that fell back to recompute", labels=("op",))
+            self._stream_drains = m.counter(
+                "kv_swap_stream_transfers_total",
+                "async swap-stream transfers completed at drains")
+            self._prefetch_c = m.counter(
+                "kv_prefetch_total",
+                "speculative swap-in copies by outcome", labels=("status",))
+            self._overlap_s = m.counter(
+                "engine_overlap_seconds_total",
+                "host work hidden under device execution", labels=("kind",))
             self._spec = m.counter("spec_tokens_total",
                                    "speculative tokens", labels=("kind",))
             self._budget_adj = m.counter("chunk_budget_adjustments_total",
@@ -828,6 +852,42 @@ class Telemetry:
             self._swap_blocks.labels(op=op).inc(blocks)
             self._tier_bytes.labels(op=op).inc(nbytes)
 
+    def swap_fail(self, slot: int, blocks: int, op: str) -> None:
+        """A tier move that could not complete (alloc exhaustion): ``op``
+        is the failed direction (swap_out | swap_in). Makes the engine's
+        silent fallback to recompute visible in traces and counters."""
+        if self.trace is not None:
+            self.trace.emit("swap_fail", self._clock(), slot=slot,
+                            blocks=blocks, op=op)
+        if self.metrics is not None:
+            self._swap_fails.labels(op=op).inc()
+
+    def swap_stream(self, transfers: int, blocks: int, nbytes: int) -> None:
+        """One non-empty drain of the async swap stream."""
+        if self.trace is not None:
+            self.trace.emit("swap_stream", self._clock(),
+                            transfers=transfers, blocks=blocks, bytes=nbytes)
+        if self.metrics is not None:
+            self._stream_drains.inc(transfers)
+
+    def prefetch(self, blocks: int, status: str) -> None:
+        """A speculative swap-in copy event: issued | hit | cancel."""
+        if self.trace is not None:
+            self.trace.emit("prefetch", self._clock(), blocks=blocks,
+                            status=status)
+        if self.metrics is not None:
+            self._prefetch_c.labels(status=status).inc()
+
+    def overlap(self, kind: str, hidden_s: float) -> None:
+        """Host-side work run under device execution (drain | prefetch |
+        pack) — the dispatch-pipelining instrument: this time lands inside
+        the step's device phase instead of its host/pack phases."""
+        if self.trace is not None:
+            self.trace.emit("overlap", self._clock(), kind=kind,
+                            hidden_s=hidden_s)
+        if self.metrics is not None:
+            self._overlap_s.labels(kind=kind).inc(hidden_s)
+
     # -- jax.profiler capture -----------------------------------------------
 
     def profile_tick(self, step: int) -> None:
@@ -926,6 +986,18 @@ class _NullTelemetry(Telemetry):
         pass
 
     def promote(self, *a, **k) -> None:
+        pass
+
+    def swap_fail(self, *a, **k) -> None:
+        pass
+
+    def swap_stream(self, *a, **k) -> None:
+        pass
+
+    def prefetch(self, *a, **k) -> None:
+        pass
+
+    def overlap(self, *a, **k) -> None:
         pass
 
     def profile_tick(self, *a, **k) -> None:

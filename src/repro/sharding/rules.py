@@ -326,6 +326,17 @@ class ArchSharding:
         blk = P(None, None, kv, None)
         return tuple({"k": blk, "v": blk} for _ in cache_tree)
 
+    def serve_swap_chain_specs(self, cache_tree) -> Any:
+        """A whole exported block chain — (L, n, bs, HKV, dh) per layer
+        group, the in/out type of ``repro.core.step.build_chain_export_fn``
+        / ``build_chain_import_fn``. Identical to
+        ``serve_swap_block_specs`` with a leading (replicated) chain axis:
+        the KV-head axis keeps the pool's ``"model"`` sharding so
+        chain-at-once device↔host copies stay per-shard."""
+        kv = "model" if self.tp_kv else None
+        blk = P(None, None, None, kv, None)
+        return tuple({"k": blk, "v": blk} for _ in cache_tree)
+
     def serve_paged_cache_specs(self, cache_tree) -> Any:
         """Paged engine cache: the physical block pools shard their KV-head
         axis over ``"model"`` (one *logical* block table, per-shard physical

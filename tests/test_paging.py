@@ -636,6 +636,66 @@ def test_swap_lru_victim_identity(params):
         assert got[req.rid] == sequential_tokens(params, req), req.rid
 
 
+def test_swapped_victims_resume_in_admission_order():
+    """Regression: under ``--victim lru`` preemption order need not be
+    admission order, and ``suspend_front`` parks the latest victim first —
+    so parking order can INVERT admission order. ``resume_next`` must pop
+    by original ``admit_seq``, not parking position (rid 1 resuming ahead
+    of the earlier-admitted rid 0 was the observable bug)."""
+    from repro.serve import SlotScheduler
+    sched = SlotScheduler(3)
+    for rid in range(3):
+        sched.enqueue(Request(rid=rid, prompt=np.zeros(4, np.int32),
+                              max_new_tokens=4))
+    slots = {}
+    for rid in range(3):
+        slot, req = sched.admit_next(float(rid))
+        slots[rid] = slot
+    # emit recency ascending with rid: LRU victimizes rid 0 first, then
+    # rid 1 — oldest admissions preempted first, the inversion case
+    for rid in range(3):
+        sched.active[slots[rid]].note_emit(10.0 + rid)
+    v1 = sched.choose_victim("lru")
+    assert sched.active[v1].req.rid == 0
+    sched.suspend_front(sched.release(v1), "handle-0")
+    v2 = sched.choose_victim("lru")
+    assert sched.active[v2].req.rid == 1
+    sched.suspend_front(sched.release(v2), "handle-1")
+    # parked [rid 1, rid 0]; admission order is rid 0 first
+    assert [st.req.rid for st, _ in sched.swapped] == [1, 0]
+    head = sched.peek_swapped()
+    assert head is not None and head[0].req.rid == 0
+    _, st, handle = sched.resume_next()
+    assert (st.req.rid, handle) == (0, "handle-0")
+    _, st, handle = sched.resume_next()
+    assert (st.req.rid, handle) == (1, "handle-1")
+    # the resumed state is the youngest again (recompute-readmit parity)
+    assert sched.active and not sched.swapped
+
+
+def test_drop_swap_makes_handle_unresumable(params):
+    """Regression: ``drop_swap`` used to empty the handle but leave it
+    resumable-looking in the caller's hands — a later ``swap_in`` silently
+    restored zero blocks. Dropped handles must refuse to resume, and the
+    drop must return every host block exactly once."""
+    eng = ServeEngine(CFG, params, OPTS, preset("byp"), n_slots=2,
+                      max_len=MAX_LEN, kv="paged", block_size=8,
+                      num_blocks=6, preempt="swap", host_blocks=6)
+    prompt = (np.arange(16, dtype=np.int32) * 5 + 2) % CFG.vocab_size
+    eng.sched.enqueue(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    eng._admit(lambda: 0.0)
+    handle = eng.kv.swap_out(0)
+    assert handle is not None and len(handle.hblks) == 2
+    free_before = eng.kv.host.n_free
+    eng.kv.drop_swap(handle)
+    assert handle.dropped and handle.hblks == []
+    assert eng.kv.host.n_free == free_before + 2
+    with pytest.raises(RuntimeError, match="drop_swap"):
+        eng.kv.swap_in(1, handle)
+    eng.kv.drop_swap(handle)                    # idempotent, no double free
+    assert eng.kv.host.n_free == free_before + 2
+
+
 def test_prefix_demote_promote_roundtrip(params):
     """Index eviction under pool pressure demotes the block to the host
     tier instead of dropping it; a later admission of the same prompt
@@ -860,6 +920,146 @@ def test_pool_scheduler_swap_differential_deterministic():
             drop(b)
     for tag in list(sorted(swapped)):
         for h in swapped.pop(tag):
+            host.free(h)
+            del hrefs[h]
+    assert pool.n_free == N and (pool.refs == 0).all()
+    assert host.n_free == H and (host.refs == 0).all()
+
+
+def test_swap_stream_differential_deterministic():
+    """Deterministic twin of the PoolSchedulerMachine async-swap rules
+    (tests/test_properties.py; hypothesis is optional): a seeded admit /
+    swap-out / prefetch / drop / swap-in / drain sequence drives a real
+    ``SwapStream``, asserting the drain discipline — every deferred
+    device→host write lands exactly once on a still-referenced host block,
+    draining moves no refcounts on either tier, and a prefetched resume
+    cancelled by completion (swap-in) or second preemption (drop) leaves
+    both pools exact."""
+    from repro.serve import BlockPool, HostBlockStore, SwapStream
+    rng = np.random.default_rng(13)
+    N, H = 8, 5
+    pool = BlockPool(N, block_size=4)
+    host = HostBlockStore(H, block_size=4)
+    refs, hrefs = {}, {}
+    chains, swapped = {}, {}
+    prefetched, pending, landed = set(), set(), set()
+    nid = [0]
+
+    def write(hblks, kvs):
+        for h in hblks:
+            assert h in pending, "write landed twice or unissued"
+            pending.discard(h)
+            assert hrefs.get(h, 0) == 1, "write landed on a freed block"
+            landed.add(h)
+
+    stream = SwapStream(write, depth=2)
+
+    def drain():
+        before = (dict(refs), dict(hrefs))
+        stream.drain()
+        assert not pending and before == (refs, hrefs)
+
+    def alloc():
+        blk = pool.alloc()
+        if blk is None:
+            return None
+        refs[blk] = 1
+        return blk
+
+    def drop(blk):
+        pool.free(blk)
+        refs[blk] -= 1
+        if refs[blk] == 0:
+            del refs[blk]
+
+    for op in rng.integers(0, 6, size=500):
+        if op == 0:                                    # admit
+            chain = []
+            for _ in range(int(rng.integers(1, 4))):
+                blk = alloc()
+                if blk is None:
+                    break
+                chain.append(blk)
+            if chain:
+                chains[nid[0]] = chain
+                nid[0] += 1
+        elif op == 1 and chains:                       # async swap-out
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            hblks, ok = [], True
+            for _ in chains[slot]:
+                h = host.alloc()
+                if h is None:
+                    for hb in hblks:
+                        host.free(hb)
+                        del hrefs[hb]
+                    ok = False
+                    break
+                hrefs[h] = 1
+                hblks.append(h)
+            if ok:
+                pending.update(hblks)
+                stream.issue(hblks, ({"k": np.zeros(1, np.float32),
+                                      "v": np.zeros(1, np.float32)},),
+                             len(hblks) * 16)
+                for b in chains.pop(slot):
+                    drop(b)
+                swapped[nid[0]] = hblks
+                nid[0] += 1
+        elif op == 2 and swapped:                      # prefetch resume head
+            tag = min(swapped)
+            drain()
+            assert all(h in landed for h in swapped[tag])
+            prefetched.add(tag)
+        elif op == 3 and swapped:                      # drop (2nd preemption)
+            tag = sorted(swapped)[int(rng.integers(len(swapped)))]
+            drain()
+            prefetched.discard(tag)
+            for h in swapped.pop(tag):
+                host.free(h)
+                del hrefs[h]
+                landed.discard(h)
+        elif op == 4 and swapped:                      # swap-in (resume)
+            tag = sorted(swapped)[int(rng.integers(len(swapped)))]
+            dblks, ok = [], True
+            for _ in swapped[tag]:
+                b = alloc()
+                if b is None:
+                    for db in dblks:
+                        drop(db)
+                    ok = False
+                    break
+                dblks.append(b)
+            if ok:
+                drain()
+                prefetched.discard(tag)
+                for h in swapped.pop(tag):
+                    assert h in landed
+                    host.free(h)
+                    del hrefs[h]
+                    landed.discard(h)
+                chains[nid[0]] = dblks
+                nid[0] += 1
+        elif op == 5 and chains:                       # finish
+            slot = sorted(chains)[int(rng.integers(len(chains)))]
+            for b in chains.pop(slot):
+                drop(b)
+        # differential invariants on both tiers + the stream, every step
+        assert len(stream) <= 2
+        for h in pending:
+            assert hrefs.get(h, 0) == 1
+        assert prefetched <= set(swapped)
+        for blk in range(N):
+            assert pool.refs[blk] == refs.get(blk, 0), blk
+        assert pool.n_free == N - len(refs)
+        for blk in range(H):
+            assert host.refs[blk] == hrefs.get(blk, 0), blk
+        assert host.n_free == H - len(hrefs)
+    drain()
+    for slot in sorted(chains):
+        for b in chains[slot]:
+            drop(b)
+    for tag in sorted(swapped):
+        for h in swapped[tag]:
             host.free(h)
             del hrefs[h]
     assert pool.n_free == N and (pool.refs == 0).all()

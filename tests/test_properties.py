@@ -214,6 +214,14 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
     sequences (the engine's two-tier block-level lifecycle) through a real
     ``BlockPool`` + ``HostBlockStore`` pair while mirroring every reference
     on both tiers in a pure-Python model of refcounts + free-list sizes.
+    Swap-outs ride a real ``SwapStream`` (the async runtime's deferred
+    device→host queue): host blocks are allocated at issue time, the data
+    write lands at a later drain, and the machine proves the drain
+    discipline — every deferred write targets a still-referenced host
+    block, lands exactly once, and draining moves no refcounts. Parked
+    chains may be speculatively prefetched; the prefetch is pure data
+    staging, so cancelling it (drop = second preemption) or consuming it
+    (swap-in completion) must leave both tiers' refcounts exact.
     Any divergence shrinks to a minimal op sequence (hypothesis stateful).
     """
 
@@ -222,7 +230,7 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
 
     def __init__(self):
         super().__init__()
-        from repro.serve import BlockPool, HostBlockStore
+        from repro.serve import BlockPool, HostBlockStore, SwapStream
         self.pool = BlockPool(self.NUM_BLOCKS, block_size=4)
         self.host = HostBlockStore(self.HOST_BLOCKS, block_size=4)
         self.refs = {}                 # blk -> modeled refcount (absent = 0)
@@ -231,6 +239,30 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
         self.swapped = {}              # tag -> [host blk] (a parked chain)
         self.order = []                # admission order (youngest = last)
         self.next_slot = 0
+        self.pending_writes = set()    # host blks with an in-flight transfer
+        self.landed = set()            # host blks whose deferred write landed
+        self.prefetched = set()        # tags with a staged host→device copy
+        self.stream = SwapStream(self._write_landed, depth=2)
+
+    def _write_landed(self, hblks, kvs):
+        """SwapStream write callback: the drain discipline's proof point.
+        A deferred write must land on blocks still referenced by exactly
+        the parked chain that issued it, and exactly once."""
+        for h in hblks:
+            assert h in self.pending_writes, "write landed twice or unissued"
+            self.pending_writes.discard(h)
+            assert self.hrefs.get(h, 0) == 1, \
+                "deferred write landed on a freed/reallocated host block"
+            self.landed.add(h)
+
+    def _drain(self):
+        """Drain the stream (the engine does this before any host-tier
+        read or free of a possibly-pending block)."""
+        before = (dict(self.refs), dict(self.hrefs))
+        self.stream.drain()
+        assert not self.pending_writes, "drain left transfers in flight"
+        # draining completes data movement only — refcounts cannot move
+        assert before == (self.refs, self.hrefs)
 
     # -- model helpers ------------------------------------------------------
     def _alloc(self):
@@ -350,9 +382,12 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
     @precondition(lambda self: self.chains)
     @rule(data=st.data())
     def swap_out(self, data):
-        """Swap-out preemption: the chain's blocks move device→host (one
-        host alloc per device block, then the device refs release). A dry
-        host tier rolls the swap back — the engine's recompute fallback."""
+        """Swap-out preemption, async form: host blocks are allocated at
+        issue time and the device refs release immediately (the export is
+        a fresh array), but the data write is DEFERRED onto the stream —
+        refcounts must be identical to a synchronous swap from here on. A
+        dry host tier rolls the swap back — the engine's recompute
+        fallback."""
         slot = data.draw(st.sampled_from(sorted(self.chains)))
         hblks = []
         for _ in self.chains[slot]:
@@ -366,16 +401,56 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
             assert self.hrefs.get(h, 0) == 0, "host handed out a live block"
             self.hrefs[h] = 1
             hblks.append(h)
+        self.pending_writes.update(hblks)
+        self.stream.issue(hblks, ({"k": np.zeros(1, np.float32),
+                                   "v": np.zeros(1, np.float32)},),
+                          len(hblks) * 16)
         self._teardown(slot)
         self.swapped[self.next_slot] = hblks
         self.next_slot += 1
+
+    @rule()
+    def drain_stream(self):
+        """A step-boundary drain: completes every deferred write, moves no
+        refcounts (asserted inside ``_drain``)."""
+        self._drain()
+
+    @precondition(lambda self: self.swapped)
+    @rule(data=st.data())
+    def prefetch_resume(self, data):
+        """Speculatively stage a parked chain's host→device copy (the
+        engine prefetches the resume head). Pure data staging on the
+        handle: no refcounts move on either tier. Reads the host tier, so
+        it drains first — by then the chain's own deferred write must have
+        landed exactly once."""
+        tag = data.draw(st.sampled_from(sorted(self.swapped)))
+        self._drain()
+        for h in self.swapped[tag]:
+            assert h in self.landed, "prefetch read a block never written"
+        self.prefetched.add(tag)
+
+    @precondition(lambda self: self.swapped)
+    @rule(data=st.data())
+    def drop_swapped(self, data):
+        """Second preemption of a parked chain (``drop_swap``): cancels any
+        staged prefetch and returns the host blocks — after a drain, so an
+        in-flight write can never land on a reallocated block."""
+        tag = data.draw(st.sampled_from(sorted(self.swapped)))
+        self._drain()
+        self.prefetched.discard(tag)
+        for h in self.swapped.pop(tag):
+            self.host.free(h)
+            del self.hrefs[h]
+            self.landed.discard(h)
 
     @precondition(lambda self: self.swapped)
     @rule(data=st.data())
     def swap_in(self, data):
         """Resume a parked chain: one device alloc per host block, then the
         host refs release. A dry device pool rolls the resume back (the
-        engine waits behind ``can_swap_in`` instead)."""
+        engine waits behind ``can_swap_in`` instead). Consuming a staged
+        prefetch (completion cancels it) changes nothing either tier's
+        refcounts can see."""
         tag = data.draw(st.sampled_from(sorted(self.swapped)))
         dblks = []
         for _ in self.swapped[tag]:
@@ -385,9 +460,13 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
                     self._drop(db)
                 return
             dblks.append(b)
+        self._drain()                  # reads the host tier (unless the
+        self.prefetched.discard(tag)   # staged prefetch is consumed instead)
         for h in self.swapped.pop(tag):
+            assert h in self.landed, "swap-in read a block never written"
             self.host.free(h)
             del self.hrefs[h]
+            self.landed.discard(h)
         self.chains[self.next_slot] = dblks
         self.order.append(self.next_slot)
         self.next_slot += 1
@@ -411,6 +490,20 @@ class PoolSchedulerMachine(RuleBasedStateMachine):
         assert self.host.n_free == self.HOST_BLOCKS - len(self.hrefs)
         assert self.host.n_resident == len(self.hrefs)
         assert self.host.n_resident <= self.host.hwm <= self.HOST_BLOCKS
+
+    @invariant()
+    def pending_writes_target_live_blocks(self):
+        """Every in-flight deferred write still has its destination block
+        allocated to exactly its issuing chain (the drain-before-free
+        discipline makes this a global invariant, not just a drain-time
+        check), and prefetches only exist for chains still parked."""
+        assert len(self.stream) <= self.stream.depth
+        for h in self.pending_writes:
+            assert self.hrefs.get(h, 0) == 1
+        assert self.prefetched <= set(self.swapped)
+
+    def teardown(self):
+        self._drain()
 
 
 PoolSchedulerMachine.TestCase.settings = settings(

@@ -64,6 +64,10 @@ def _one_of_everything() -> TraceRecorder:
     rec.emit("swap_out", 0.5, slot=1, blocks=3, bytes=3072)
     rec.emit("preempt", 0.5, rid=9, slot=1, mode="swap")
     rec.emit("swap_in", 0.6, slot=1, blocks=3, bytes=3072)
+    rec.emit("swap_fail", 0.6, slot=1, blocks=3, op="swap_out")
+    rec.emit("swap_stream", 0.65, transfers=2, blocks=5, bytes=5120)
+    rec.emit("prefetch", 0.65, blocks=3, status="issued")
+    rec.emit("overlap", 0.65, kind="drain", hidden_s=0.002)
     rec.emit("demote", 0.7, blocks=1, bytes=1024)
     rec.emit("promote", 0.8, blocks=1, bytes=1024)
     rec.emit("budget", 0.9, old=8, new=12)
@@ -265,6 +269,47 @@ def test_engine_trace_swap_preemption_spans(params):
                for e in outs + ins)
     assert tel.metrics.snapshot()['kv_tier_blocks_total{op="swap_out"}'] \
         == eng.kv.swap_out_blocks
+    # the async runtime leaves its own trail: every deferred device→host
+    # transfer is completed by a drain (swap_stream), and the resume head
+    # gets its host→device copy staged ahead of the swap-in (prefetch)
+    streams = [e for e in evs if e["type"] == "swap_stream"]
+    assert streams and all(e["args"]["transfers"] > 0 for e in streams)
+    assert sum(e["args"]["transfers"] for e in streams) \
+        == eng.kv.stream_transfers
+    pf = [e for e in evs if e["type"] == "prefetch"]
+    assert any(e["args"]["status"] == "issued" for e in pf)
+    assert eng.kv.prefetch_hits + eng.kv.prefetch_cancels \
+        <= eng.kv.prefetch_issued
+
+
+def test_swap_fail_event_and_counter(params):
+    """A swap_out that dies mid-chain (host tier too small for the victim's
+    chain) must emit a swap_fail event and bump the failure counter — the
+    silent None return used to make failed swaps indistinguishable from
+    a recompute-policy preemption in every trace and metric."""
+    lk = dataclasses.replace(preset("nss_shortcut"), decode_steps=4)
+    opts = lk.model_options(OPTS, on_tpu=False)
+    # 16-token prompts at block_size=8 with a budget that grants the whole
+    # prompt in one chunk: every victim chain spans >= 2 blocks, so the
+    # 1-block host tier allocates the first block and dies on the second —
+    # the exact mid-chain rollback the event reports
+    reqs = synthetic_requests(4, prompt_len=16, max_new_tokens=12,
+                              vocab_size=CFG.vocab_size, seed=0)
+    tel = Telemetry()
+    eng = ServeEngine(CFG, params, opts, lk, n_slots=2, max_len=32,
+                      kv="paged", block_size=8, num_blocks=5,
+                      preempt="swap", host_blocks=1, chunked=True,
+                      chunk_budget=24, telemetry=tel)
+    eng.run(reqs, load="closed")
+    fails = [e for e in tel.trace.events if e["type"] == "swap_fail"]
+    assert fails, "a 1-block host tier must fail a multi-block swap_out"
+    assert all(e["args"]["op"] == "swap_out" and e["args"]["blocks"] > 0
+               for e in fails)
+    assert eng.kv.swap_fails == len(fails)
+    assert tel.metrics.snapshot()['kv_swap_failures_total{op="swap_out"}'] \
+        == len(fails)
+    # failed swaps degrade to recompute preemption; spans stay legal
+    validate_spans(tel.trace.events)
 
 
 def test_engine_trace_recompute_preemption_spans(params):

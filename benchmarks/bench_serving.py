@@ -13,6 +13,11 @@ fixed-size blocks (reporting the resident-block high-watermark), and the
 shared-prefix row adds a common 16-token "system prompt" so the radix index
 prefills it once and CoW-shares its blocks across all requests.
 
+The kv_dtype rows (Table 11) sweep the paged cache's quantization axis
+{bf16, int8, fp8} at equal block budgets: greedy token-flip rate against the
+bf16 control and model-level logit max-divergence (the quality gate), beside
+per-shard KV bytes and tokens/s through the fused-dequant kernels.
+
 With ``--mesh data,model`` (e.g. ``--mesh 1,2`` under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2``) a sharded-serving
 row runs both backends over the device mesh and reports the per-shard KV
@@ -30,7 +35,9 @@ PAGED_PRESETS = ["base", "nss_shortcut"]
 CHUNKED_PROMPT_LENS = [32, 128, 512]
 BENCH_JSON = "BENCH_serving.json"
 # bump when row keys change shape (downstream dashboards key on this)
-BENCH_SCHEMA_VERSION = 2
+# v3: kv_bytes_per_shard on every row + table11 kv_dtype quality rows
+BENCH_SCHEMA_VERSION = 3
+KV_DTYPES = ["bf16", "int8", "fp8"]
 
 
 def _stall_cell(chunked: bool, budget: int):
@@ -372,6 +379,132 @@ def run_telemetry(json_rows=None):
     return cells
 
 
+def _quant_logit_divergence(kv_dtype: str, prompt_lens=(16, 32),
+                            steps: int = 16, block_size: int = 16,
+                            seed: int = 0):
+    """Teacher-forced logit error injected by per-block KV quantization.
+
+    Prefills each prompt exactly (dense f32 cache) and round-trips the
+    cached K/V through the per-(block, head) symmetric encoding — the same
+    transform the fused paged kernels apply in-kernel (kernel ==
+    quantize-then-dequant parity is asserted in tests/test_kernels.py).
+    Then decodes ``steps`` tokens feeding BOTH caches the exact run's
+    greedy choice each step (re-round-tripping the quantized cache after
+    every write, mirroring requant-on-write), so each position's logit
+    delta and argmax flip measures quantization alone — unlike free-running
+    streams, where one near-tie flip rewrites everything after it.
+    Returns (max |logit delta|, argmax flips, positions compared)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import kv_quant
+    from repro.launch.serve import _setup
+    from repro.models import decode_step, prefill
+
+    cfg, lk, opts, params = _setup("tinyllama-1.1b", "nss_shortcut",
+                                   gen_len=8)
+    dt = kv_quant.storage_dtype(kv_dtype, jnp.float32)
+    rng = np.random.default_rng(seed)
+
+    def roundtrip(a):                    # (L, B, T, HKV, dh), T % bs == 0
+        L, B, T, H, dh = a.shape
+        blocks = a.astype(jnp.float32).reshape(
+            L * B * (T // block_size), block_size, H, dh)
+        s = kv_quant.block_scales(
+            jnp.max(jnp.abs(blocks), axis=(1, 3)), dt)
+        q = kv_quant.quantize(blocks, s[:, None, :, None], dt)
+        return kv_quant.dequantize(
+            q, s[:, None, :, None]).reshape(a.shape).astype(a.dtype)
+
+    def rt_tree(cache):
+        return tuple(dict(g, k=roundtrip(g["k"]), v=roundtrip(g["v"]))
+                     if "k" in g else g for g in cache)
+
+    max_div, flips, n = 0.0, 0, 0
+    for plen in prompt_lens:
+        # pad the window to a block multiple with decode headroom
+        max_len = -(-(plen + steps) // block_size) * block_size
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (1, plen), dtype=np.int32))
+        logits, cache = prefill(params, toks, cfg, opts, max_len=max_len)
+        qcache = rt_tree(cache)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(steps):
+            l_ref, cache = decode_step(params, cache, nxt, cfg, opts)
+            l_q, qc = decode_step(params, qcache, nxt, cfg, opts)
+            qcache = rt_tree(qc)
+            max_div = max(max_div, float(jnp.max(jnp.abs(l_q - l_ref))))
+            flips += int(jnp.argmax(l_q, -1)[0] != jnp.argmax(l_ref, -1)[0])
+            n += 1
+            nxt = jnp.argmax(l_ref, -1).astype(jnp.int32)   # teacher-forced
+    return max_div, flips, n
+
+
+def run_kv_quant(json_rows=None):
+    """Table 11 — the paged cache's ``kv_dtype`` axis at equal block
+    budgets: the quality gate (greedy token-flip rate vs the bf16 control,
+    model-level logit max-divergence) beside what compression buys
+    (``kv_bytes_per_shard`` / ``kv_bytes_per_block`` for the SAME pool
+    geometry) and what it costs (tokens/s through the fused-dequant
+    kernels). The bf16 row is the control: identical engine, no scale
+    tables, flip rate 0 by construction."""
+    import dataclasses
+
+    from repro.launch.serve import _setup
+    from repro.serve import ServeEngine, serve_report, synthetic_requests
+
+    cfg, lk, opts, params = _setup("tinyllama-1.1b", "nss_shortcut",
+                                   gen_len=24, decode_steps=8)
+    reqs = synthetic_requests(8, prompt_len=16, max_new_tokens=24,
+                              vocab_size=cfg.vocab_size, seed=0)
+    streams, cells = {}, {}
+    for kv_dtype in KV_DTYPES:
+        eng = ServeEngine(cfg, params, opts, lk, n_slots=4, max_len=48,
+                          kv="paged", block_size=16, kv_dtype=kv_dtype)
+        # warmup: compile the prefill/serve/decode shapes outside the run
+        warm = [dataclasses.replace(r, rid=100 + r.rid) for r in reqs[:4]]
+        eng.run(warm, load="closed")
+        eng.kv.drop_prefix_cache()
+        eng.reset_counters()
+        comps, wall = eng.run(reqs, load="closed")
+        rep = serve_report(comps, wall, utilization=eng.utilization())
+        rep["workload"] = "kv_quant_quality"
+        streams[kv_dtype] = {c.rid: list(c.tokens) for c in comps}
+        cells[kv_dtype] = rep
+
+    base = streams["bf16"]
+    total = sum(len(v) for v in base.values())
+    for kv_dtype in KV_DTYPES:
+        rep = cells[kv_dtype]
+        flips = 0
+        for rid, toks in base.items():
+            got = streams[kv_dtype].get(rid, [])
+            flips += sum(1 for a, b in zip(toks, got) if a != b)
+            flips += abs(len(toks) - len(got))
+        rep["kv_quant_flip_rate"] = round(flips / max(total, 1), 4)
+        if kv_dtype == "bf16":
+            div, aflips, nprompts = 0.0, 0, 0
+        else:
+            div, aflips, nprompts = _quant_logit_divergence(kv_dtype)
+        rep["kv_quant_logit_max_div"] = round(div, 5)
+        rep["kv_quant_logit_argmax_flips"] = aflips
+        row(f"table11_kvq_{kv_dtype}", rep["mean_latency_s"] * 1e6,
+            f"tokens_per_s={rep['tokens_per_s']:.0f};"
+            f"kv_bytes_per_shard={rep['kv_bytes_per_shard']};"
+            f"kv_bytes_per_block={rep['kv_bytes_per_block']};"
+            f"flip_rate={rep['kv_quant_flip_rate']};"
+            f"logit_max_div={rep['kv_quant_logit_max_div']}")
+        if json_rows is not None:
+            json_rows.append(rep)
+    for kv_dtype in ("int8", "fp8"):
+        ratio = (cells["bf16"]["kv_bytes_per_shard"]
+                 / cells[kv_dtype]["kv_bytes_per_shard"])
+        row(f"table11_kvq_{kv_dtype}_compression", ratio * 1e6,
+            f"bytes_vs_bf16={ratio:.2f}x;"
+            f"flip_rate={cells[kv_dtype]['kv_quant_flip_rate']}")
+    return cells
+
+
 def run_mesh(mesh: str):
     """Sharded-serving rows: slotted + paged engines on a ``data,model``
     mesh, token streams identical to 1-device by construction (asserted in
@@ -443,6 +576,7 @@ def run(mesh: str = "", budget: int = 64):
     run_preempt(json_rows=json_rows)
     run_spec(json_rows=json_rows)
     run_telemetry(json_rows=json_rows)
+    run_kv_quant(json_rows=json_rows)
 
     if mesh:
         run_mesh(mesh)

@@ -21,12 +21,15 @@ python -m repro.launch.serve --preset nss_shortcut --load open \
 echo "== smoke: slotted-vs-paged token identity (incl. chunked prefill,"
 echo "          the two-tier swap/warm-start engines under pool pressure,"
 echo "          and speculative decode vs its plain-decode twins),"
-echo "          every engine traced + schema-validated =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --trace
+echo "          every engine traced + schema-validated; the bf16 matrix is"
+echo "          the bit-identical control for the int8 tolerance cells"
+echo "          (quantized lifecycle + teacher-forced flip gate) =="
+python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --trace --kv-dtype int8
 
 echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh, "
-echo "          two-phase + chunked + swap/warm-start + spec engines) =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --mesh 1,2 --trace
+echo "          two-phase + chunked + swap/warm-start + spec engines,"
+echo "          plus the int8 cells over sharded scale tables) =="
+python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --mesh 1,2 --trace --kv-dtype int8
 
 echo "== smoke: chunked-prefill serve launcher (open-loop) =="
 python -m repro.launch.serve --preset nss_shortcut --load open \
@@ -37,6 +40,11 @@ echo "== smoke: swap-preemption serve launcher (pool pressure, host tier) =="
 python -m repro.launch.serve --preset nss_shortcut --load closed \
     --requests 4 --slots 2 --prompt-len 8 --gen-len 12 --decode-steps 4 \
     --kv paged --block-size 8 --num-blocks 5 --preempt swap
+
+echo "== smoke: quantized-KV serve launcher (int8 blocks, swap pressure) =="
+python -m repro.launch.serve --preset nss_shortcut --load closed \
+    --requests 4 --slots 2 --prompt-len 8 --gen-len 12 --decode-steps 4 \
+    --kv paged --block-size 8 --num-blocks 5 --preempt swap --kv-dtype int8
 
 echo "== smoke: speculative-decode serve launcher (n-gram drafts) =="
 python -m repro.launch.serve --preset nss_shortcut --load closed \

@@ -66,6 +66,17 @@ def _parse_args(argv=None):
     p.add_argument("--budget", type=int, default=6,
                    help="chunked: tokens per serve step (small by default "
                         "so the smoke prompts split into several chunks)")
+    p.add_argument("--kv-dtype", default="bf16",
+                   choices=["bf16", "int8", "fp8"],
+                   help="also run quantized-cache cells at this kv_dtype: "
+                        "the bf16 matrix above stays the bit-identical "
+                        "control; the quantized engine is gated on "
+                        "lifecycle (every request completes within bounds, "
+                        "preempts and swaps correctly) plus a greedy "
+                        "flip-rate tolerance vs the bf16 paged streams, "
+                        "and WITHIN the kv_dtype swap must reproduce the "
+                        "unpressured streams exactly (swap moves the "
+                        "compressed bytes verbatim)")
     p.add_argument("--trace", action="store_true",
                    help="run every engine with telemetry attached and "
                         "schema-validate its trace: every event against "
@@ -124,6 +135,127 @@ def _check_trace(name, tel, comps):
     _TRACES[name] = tel
 
 
+#: free-running stream flip budget vs the bf16 control. The smoke model is
+#: random-init, so its greedy argmax margins are near-ties everywhere: one
+#: sub-0.02 logit nudge flips a coin-toss position and rewrites the whole
+#: tail, so the stream rate measures compounding, not per-step quality.
+#: These bounds are catastrophe detectors (a scale/lane bug scores ~1.0);
+#: the per-step quality claim is gated teacher-forced below.
+_STREAM_BUDGET = {"int8": 0.5, "fp8": 1.0}
+
+#: teacher-forced per-step flip budget (both caches replay the exact run's
+#: tokens, so flips measure quantization alone — no compounding). int8
+#: carries the accuracy claim (≤1%); fp8's 3-bit mantissa concedes near-tie
+#: flips on random-init logits, so its bound only catches catastrophe.
+_TF_FLIP_BUDGET = {"int8": 0.01, "fp8": 0.35}
+
+
+def _run_quantized_cells(cfg, params, opts, lk, mesh, reqs, base_stream,
+                         base_util) -> int:
+    """The --kv-dtype tolerance cells. Lossy block encodings cannot promise
+    cross-dtype bit-identity, so the gate is: (a) lifecycle — every request
+    completes within its token budget, and under pool pressure the engine
+    swap-preempts and recovers; (b) tolerance — greedy flip rate vs the bf16
+    paged streams within the dtype's budget; (c) compression — bytes/block
+    at the shared pool geometry shrink ≥1.9x and the host tier moves
+    compressed bytes; (d) WITHIN the kv_dtype, swap-under-pressure must
+    reproduce the unpressured engine's streams bit for bit (swap moves the
+    stored blocks verbatim, so lossiness is no excuse for divergence)."""
+    dt = _ARGS.kv_dtype
+    tel = _make_tel()
+    eng = ServeEngine(cfg, params, opts, lk, n_slots=2, max_len=32,
+                      kv="paged", block_size=8, mesh=mesh, telemetry=tel,
+                      kv_dtype=dt)
+    comps, _ = eng.run(reqs, load="closed")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    u = eng.utilization()
+    print(f"paged+{dt}: {u}")
+    _check_trace(f"paged+{dt}", tel, comps)
+
+    if set(got) != set(base_stream):
+        print(f"FAIL: paged+{dt} lost requests: "
+              f"{sorted(set(base_stream) - set(got))}", file=sys.stderr)
+        return 1
+    by_rid = {r.rid: r for r in reqs}
+    for rid, toks in got.items():
+        if not 1 <= len(toks) <= by_rid[rid].max_new_tokens:
+            print(f"FAIL: paged+{dt} rid {rid} emitted {len(toks)} tokens "
+                  f"(budget {by_rid[rid].max_new_tokens})", file=sys.stderr)
+            return 1
+    total = sum(len(v) for v in base_stream.values())
+    flips = sum(sum(a != b for a, b in zip(base_stream[r], got[r]))
+                + abs(len(base_stream[r]) - len(got[r]))
+                for r in base_stream)
+    rate = flips / max(total, 1)
+    if rate > _STREAM_BUDGET[dt]:
+        print(f"FAIL: paged+{dt} stream flip rate {rate:.4f} exceeds the "
+              f"{_STREAM_BUDGET[dt]:.2f} catastrophe bound vs bf16",
+              file=sys.stderr)
+        return 1
+    # the per-step quality gate: teacher-forced flips (shared bench harness)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.bench_serving import _quant_logit_divergence
+    div, tf_flips, tf_n = _quant_logit_divergence(dt)
+    tf_rate = tf_flips / max(tf_n, 1)
+    print(f"paged+{dt}: teacher-forced flips {tf_flips}/{tf_n}, "
+          f"logit_max_div {div:.5f}")
+    if tf_rate > _TF_FLIP_BUDGET[dt]:
+        print(f"FAIL: paged+{dt} teacher-forced flip rate {tf_rate:.4f} "
+              f"exceeds the {_TF_FLIP_BUDGET[dt]:.2f} budget",
+              file=sys.stderr)
+        return 1
+    ratio = base_util["kv_bytes_per_block"] / u["kv_bytes_per_block"]
+    if ratio < 1.9:
+        print(f"FAIL: paged+{dt} bytes/block only {ratio:.2f}x smaller "
+              f"than bf16 (need >=1.9x)", file=sys.stderr)
+        return 1
+
+    # pool pressure WITHIN the dtype: swap must preempt, move compressed
+    # bytes, and reproduce the unpressured quantized streams exactly
+    lk_q = dataclasses.replace(lk, decode_steps=4)
+    qreqs = synthetic_requests(4, prompt_len=8, max_new_tokens=12,
+                               vocab_size=cfg.vocab_size, seed=0)
+    geo = dict(n_slots=2, max_len=32, kv="paged", block_size=8, mesh=mesh,
+               kv_dtype=dt)
+    ref = ServeEngine(cfg, params, opts, lk_q, **geo)
+    comps, _ = ref.run(qreqs, load="closed")
+    want = {c.rid: c.tokens.tolist() for c in comps}
+    tel = _make_tel()
+    eng = ServeEngine(cfg, params, opts, lk_q, telemetry=tel, num_blocks=5,
+                      preempt="swap", **geo)
+    comps, _ = eng.run(qreqs, load="closed")
+    got = {c.rid: c.tokens.tolist() for c in comps}
+    u = eng.utilization()
+    print(f"paged+{dt}+pressure+swap: {u}")
+    _check_trace(f"paged+{dt}+pressure+swap", tel, comps)
+    if not eng.swap_preemptions:
+        print(f"FAIL: paged+{dt}+pressure never swap-preempted",
+              file=sys.stderr)
+        return 1
+    if got != want:
+        print(f"FAIL: paged+{dt}+pressure+swap diverges from the "
+              f"unpressured {dt} engine (swap moves stored blocks "
+              "verbatim; even lossy modes must match here)",
+              file=sys.stderr)
+        for rid in sorted(want):
+            if got.get(rid) != want[rid]:
+                print(f"  rid {rid}: {got.get(rid)} != {want[rid]}",
+                      file=sys.stderr)
+        return 1
+    if u["kv_host_bytes_moved_raw"] < 1.9 * u["kv_host_bytes_moved"]:
+        print(f"FAIL: paged+{dt} swap moved "
+              f"{u['kv_host_bytes_moved']} bytes vs "
+              f"{u['kv_host_bytes_moved_raw']} raw (compression never "
+              "reached the host tier)", file=sys.stderr)
+        return 1
+    print(f"kv_dtype smoke OK: {dt} completes the matrix (teacher-forced "
+          f"flip rate {tf_rate:.4f}, stream {rate:.4f}, {ratio:.2f}x "
+          f"smaller blocks), swap under pressure bit-identical to "
+          f"unpressured {dt}")
+    return 0
+
+
 def main() -> int:
     mesh = make_serve_mesh(_ARGS.mesh)
     cfg = get_config("tinyllama-1.1b").smoke()
@@ -138,7 +270,7 @@ def main() -> int:
     cells = [("slotted", False), ("paged", False)]
     if _ARGS.chunked:
         cells += [("slotted", True), ("paged", True)]
-    streams = {}
+    streams, utils = {}, {}
     for kv, chunked in cells:
         kw = dict(chunked=True, chunk_budget=_ARGS.budget) if chunked else {}
         tel = _make_tel()
@@ -148,8 +280,15 @@ def main() -> int:
         comps, _ = eng.run(reqs, load="closed")
         name = f"{kv}{'+chunked' if chunked else ''}"
         streams[name] = {c.rid: c.tokens.tolist() for c in comps}
-        print(f"{name}: {eng.utilization()}")
+        utils[name] = eng.utilization()
+        print(f"{name}: {utils[name]}")
         _check_trace(name, tel, comps)
+
+    if _ARGS.kv_dtype != "bf16":
+        rc = _run_quantized_cells(cfg, params, opts, lk, mesh, reqs,
+                                  streams["paged"], utils["paged"])
+        if rc:
+            return rc
 
     if _ARGS.spec_decode:
         # self-speculation needs draft history and short fused programs to

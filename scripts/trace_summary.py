@@ -10,7 +10,10 @@ event schema and span state machine, and prints:
   * request lifecycle stats from the spans: completed count, p50/p99 TTFT
     and latency;
   * event-type counts, so a glance shows which subsystems fired (swaps,
-    preemptions, verify windows, budget moves).
+    preemptions, verify windows, budget moves);
+  * host-tier bandwidth: bytes moved across the device<->host boundary,
+    and — when the cache is quantized — the compressed-vs-raw ratio the
+    kv_dtype axis saves.
 
 Usage: PYTHONPATH=src python scripts/trace_summary.py TRACE [TRACE...]
 """
@@ -68,6 +71,22 @@ def summarize(path: str) -> None:
     counts = Counter(e["type"] for e in events)
     print("events: " + "  ".join(f"{t}={n}"
                                  for t, n in sorted(counts.items())))
+
+    # tier bandwidth: quantized caches move compressed bytes and stamp each
+    # move with the uncompressed equivalent (``raw_bytes``); the ratio is
+    # the host-tier bandwidth the kv_dtype axis saves
+    tier = [e for e in events
+            if e["type"] in ("swap_out", "swap_in", "demote", "promote")]
+    if tier:
+        moved = sum(e["args"]["bytes"] for e in tier)
+        raw = sum(e["args"].get("raw_bytes", e["args"]["bytes"])
+                  for e in tier)
+        line = (f"kv tier: {len(tier)} moves, {moved} bytes across the "
+                f"device<->host boundary")
+        if raw != moved and moved:
+            line += (f"; {raw} uncompressed — quantized blocks moved "
+                     f"{raw / moved:.2f}x fewer bytes")
+        print(line)
 
 
 def main(argv=None) -> int:

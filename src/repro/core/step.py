@@ -433,8 +433,14 @@ def build_block_export_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
     """
 
     def export(cache, blk):
-        return tuple({"k": g["kp"][:, blk], "v": g["vp"][:, blk]}
-                     for g in cache)
+        out = []
+        for g in cache:
+            kv = {"k": g["kp"][:, blk], "v": g["vp"][:, blk]}
+            if "ks" in g:              # quantized pool: scales ride along
+                kv["ks"] = g["ks"][:, blk]
+                kv["vs"] = g["vs"][:, blk]
+            out.append(kv)
+        return tuple(out)
 
     kwargs: Dict[str, Any] = {}
     if mesh is not None:
@@ -456,11 +462,16 @@ def build_block_import_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
     """
 
     def imp(cache, kvs, blk):
-        return tuple(
-            dict(g,
-                 kp=g["kp"].at[:, blk].set(kv["k"].astype(g["kp"].dtype)),
-                 vp=g["vp"].at[:, blk].set(kv["v"].astype(g["vp"].dtype)))
-            for g, kv in zip(cache, kvs))
+        out = []
+        for g, kv in zip(cache, kvs):
+            d = dict(g,
+                     kp=g["kp"].at[:, blk].set(kv["k"].astype(g["kp"].dtype)),
+                     vp=g["vp"].at[:, blk].set(kv["v"].astype(g["vp"].dtype)))
+            if "ks" in g:
+                d["ks"] = g["ks"].at[:, blk].set(kv["ks"])
+                d["vs"] = g["vs"].at[:, blk].set(kv["vs"])
+            out.append(d)
+        return tuple(out)
 
     kwargs: Dict[str, Any] = {"donate_argnums": (0,)}
     if mesh is not None:
@@ -488,8 +499,14 @@ def build_chain_export_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
     """
 
     def export(cache, blks):
-        return tuple({"k": g["kp"][:, blks], "v": g["vp"][:, blks]}
-                     for g in cache)
+        out = []
+        for g in cache:
+            kv = {"k": g["kp"][:, blks], "v": g["vp"][:, blks]}
+            if "ks" in g:
+                kv["ks"] = g["ks"][:, blks]
+                kv["vs"] = g["vs"][:, blks]
+            out.append(kv)
+        return tuple(out)
 
     kwargs: Dict[str, Any] = {}
     if mesh is not None:
@@ -508,11 +525,18 @@ def build_chain_import_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
     """
 
     def imp(cache, kvs, blks):
-        return tuple(
-            dict(g,
-                 kp=g["kp"].at[:, blks].set(kv["k"].astype(g["kp"].dtype)),
-                 vp=g["vp"].at[:, blks].set(kv["v"].astype(g["vp"].dtype)))
-            for g, kv in zip(cache, kvs))
+        out = []
+        for g, kv in zip(cache, kvs):
+            d = dict(g,
+                     kp=g["kp"].at[:, blks].set(
+                         kv["k"].astype(g["kp"].dtype)),
+                     vp=g["vp"].at[:, blks].set(
+                         kv["v"].astype(g["vp"].dtype)))
+            if "ks" in g:
+                d["ks"] = g["ks"].at[:, blks].set(kv["ks"])
+                d["vs"] = g["vs"].at[:, blks].set(kv["vs"])
+            out.append(d)
+        return tuple(out)
 
     kwargs: Dict[str, Any] = {"donate_argnums": (0,)}
     if mesh is not None:

@@ -1,0 +1,118 @@
+"""Per-block symmetric KV quantization: the ``kv_dtype`` axis of the paged
+cache.
+
+The paged backend stores KV state as fixed-size physical blocks; this module
+owns the compressed representations of those blocks and the (de)quantization
+math shared by every layer that touches them — the write paths in
+``repro.serve.paging`` / ``repro.models.layers``, the fused-dequant Pallas
+kernels in ``repro.kernels.paged_decode`` / ``paged_prefill``, and the
+``kernels.ref`` oracles.
+
+Layout: one f32 scale per (block, kv-head), stored in ``"ks"``/``"vs"``
+leaves beside the ``"kp"``/``"vp"`` pools — (P+1, HKV) per layer against a
+(P+1, bs, HKV, dh) pool. Quantization is symmetric (no zero point):
+
+  int8   q = round(x / s) in [-127, 127],  s = amax / 127
+  fp8    q = cast_e4m3(x / s),             s = amax / 448 (e4m3 max normal)
+
+``kv_dtype == "bf16"`` is the uncompressed control: the cache tree carries
+NO scale leaves and every write path takes its original branch, so the
+unquantized engine stays bit-identical to the pre-quantization code.
+
+Writes requantize at *block* granularity: the touched blocks are dequantized,
+the new tokens inserted, a fresh per-head amax taken over the whole block,
+and the block re-encoded under the new scale. Untouched blocks keep their
+stored bytes and scales exactly (no drift); within a touched block,
+re-encoding under an unchanged scale is idempotent, and a growing amax costs
+at most one extra quantization step of error for the block's older tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: the ``kv_dtype`` axis of the paged backend ("bf16" = uncompressed control)
+KV_DTYPES = ("bf16", "int8", "fp8")
+
+#: largest representable magnitude per quantized storage format
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def storage_dtype(kv_dtype: str, base_dtype):
+    """The pool element dtype for a ``kv_dtype`` mode (``base_dtype`` is the
+    engine's activation dtype — what the uncompressed control stores)."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; known: {KV_DTYPES}")
+    if kv_dtype == "bf16":
+        return base_dtype
+    if kv_dtype == "int8":
+        return jnp.int8
+    fp8 = getattr(jnp, "float8_e4m3fn", None)
+    if fp8 is None:
+        raise ValueError("kv_dtype='fp8' needs a jax with float8_e4m3fn")
+    return fp8
+
+
+def qmax(kv_dtype: str) -> float:
+    return _QMAX[kv_dtype]
+
+
+def qmax_of(dtype) -> float:
+    """``qmax`` keyed by a concrete storage dtype (the in-graph write paths
+    see only the pool's dtype, not the mode string)."""
+    return 127.0 if np.dtype(dtype) == np.dtype(np.int8) else 448.0
+
+
+def quantize(x, scale, dtype):
+    """Encode f32 ``x`` under broadcastable ``scale`` into ``dtype``."""
+    m = qmax_of(dtype)
+    y = jnp.clip(x / scale, -m, m)
+    if np.dtype(dtype) == np.dtype(np.int8):
+        y = jnp.round(y)
+    return y.astype(dtype)
+
+
+def dequantize(q, scale):
+    """Decode a quantized tile: f32 values ``q * scale``."""
+    return q.astype(jnp.float32) * scale
+
+
+def block_scales(amax, dtype):
+    """Per-(block, head) scales from per-(block, head) amax; all-zero blocks
+    get scale 1.0 so decode stays division-free and NaN-free."""
+    return jnp.where(amax > 0, amax / qmax_of(dtype), 1.0).astype(jnp.float32)
+
+
+def dequantize_pool(pool, scales):
+    """Whole-pool decode: pool (P+1, bs, HKV, dh) x scales (P+1, HKV)."""
+    return dequantize(pool, scales[:, None, :, None])
+
+
+def quant_insert(pool, scales, blk, off, vals):
+    """Write ``vals`` at flat pool positions ``(blk, off)`` with block-level
+    requantization — the quantized counterpart of ``pool.at[blk, off].set``.
+
+    pool: (P+1, bs, HKV, dh) quantized; scales: (P+1, HKV) f32;
+    blk/off: matching int32 index shapes (e.g. (B,) decode, (B, W) chunk,
+    (S,) admission scatter); vals: blk.shape + (HKV, dh).
+    Returns (new pool, new scales). Only blocks named in ``blk`` are
+    re-encoded; every other block's bytes and scales pass through untouched.
+    """
+    P1 = pool.shape[0]
+    poolf = dequantize_pool(pool, scales)
+    poolf = poolf.at[blk, off].set(vals.astype(jnp.float32))
+    touched = jnp.zeros((P1,), bool).at[blk].set(True)
+    amax = jnp.max(jnp.abs(poolf), axis=(1, 3))              # (P+1, HKV)
+    new_s = jnp.where(touched[:, None], block_scales(amax, pool.dtype),
+                      scales)
+    q = quantize(poolf, new_s[:, None, :, None], pool.dtype)
+    q = jnp.where(touched[:, None, None, None], q, pool)
+    return q, new_s
+
+
+#: ``quant_insert`` over a layer-stacked pool (L, P+1, bs, HKV, dh) with
+#: per-layer scales (L, P+1, HKV) and values (L, ...) — the admission
+#: scatter's layout (indices shared across layers).
+quant_insert_stacked = jax.vmap(quant_insert,
+                                in_axes=(0, 0, None, None, 0))

@@ -58,30 +58,34 @@ def slot_decode_attention(q, ck, cv, slot_pos, pos, *, window: int = 0,
     return out[:, None]
 
 
-def paged_decode_attention(q, kp, vp, tables, pos):
+def paged_decode_attention(q, kp, vp, tables, pos, ks=None, vs=None):
     """Paged decode: block-table indirection instead of dense slot rows.
 
     q: (B,1,HQ,dh) fresh query; kp/vp: (P+1,bs,HKV,dh) physical block pools
     (row P is the trash block); tables: (B,nb) int32 logical->physical map;
     pos: (B,) per-slot positions. Validity is logical-position order —
     ``arange(nb*bs) <= pos`` — since block chains are never circular.
+    ks/vs: optional (P+1,HKV) f32 per-block scales when the pools are
+    quantized — dequant fuses into the kernel.
     """
     nb, bs = tables.shape[1], kp.shape[1]
     valid = jnp.arange(nb * bs, dtype=jnp.int32)[None] <= pos[:, None]
     out = _paged.paged_decode_attention(q[:, 0], kp, vp, tables, valid,
-                                        interpret=_interpret())
+                                        ks, vs, interpret=_interpret())
     return out[:, None]
 
 
-def paged_prefill_attention(q, kp, vp, tables, start):
+def paged_prefill_attention(q, kp, vp, tables, start, ks=None, vs=None):
     """Paged chunked-prefill: every slot's prompt chunk attends over its
     resident block chain (the rectangular generalization of paged decode).
 
     q: (B,W,HQ,dh) chunk queries (the chunk's own K/V already scattered into
     the pools); kp/vp: (P+1,bs,HKV,dh) physical pools; tables: (B,nb) int32
     logical->physical map; start: (B,) first chunk position per row.
+    ks/vs: optional (P+1,HKV) f32 per-block scales when the pools are
+    quantized — dequant fuses into the kernel.
     """
-    return _paged_pf.paged_prefill_attention(q, kp, vp, tables, start,
+    return _paged_pf.paged_prefill_attention(q, kp, vp, tables, start, ks, vs,
                                              interpret=_interpret())
 
 

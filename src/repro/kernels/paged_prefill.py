@@ -79,8 +79,48 @@ def _paged_prefill_kernel(tbl_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel_quant(tbl_ref, start_ref, q_ref, k_ref, v_ref,
+                                ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref,
+                                *, scale: float, nt: int, bs: int, G: int):
+    # fused-dequant variant: quantized KV tiles plus their per-(block, head)
+    # scales, fetched through the same ``tbl[b, i]`` indirection as the
+    # tiles themselves. Identical flash accumulation, f32 restored in VMEM.
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (W*G, dh)
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]  # (bs, dh), dequant
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+    WG = q.shape[0]
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = start_ref[b] + lax.broadcasted_iota(jnp.int32, (WG, bs), 0) // G
+    k_pos = i * bs + lax.broadcasted_iota(jnp.int32, (WG, bs), 1)
+    live = k_pos <= q_pos
+    s = jnp.where(live, s, NEG_INF)
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.where(live, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_cur
+
+    @pl.when(i == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_prefill_attention(q, kp, vp, tables, start, *,
+def paged_prefill_attention(q, kp, vp, tables, start, ks=None, vs=None, *,
                             interpret: bool = False):
     """q:(B,W,HQ,dh) chunk queries; kp,vp:(P+1,bs,HKV,dh) physical pools;
     tables:(B,nb) int32 logical->physical block map; start:(B,) int32 first
@@ -89,6 +129,9 @@ def paged_prefill_attention(q, kp, vp, tables, start, *,
     The chunk's own K/V must already be scattered into the pools (the serve
     step writes before it attends). Query rows past a row's true chunk
     length produce garbage the caller discards.
+
+    ``ks``/``vs`` (P+1, HKV) f32 mark the pools as per-block quantized: the
+    dequant fuses into the flash body (``_paged_prefill_kernel_quant``).
     """
     B, W, HQ, dh = q.shape
     bs, HKV = kp.shape[1], kp.shape[2]
@@ -108,17 +151,29 @@ def paged_prefill_attention(q, kp, vp, tables, start, *,
     qg = q.reshape(B, W, HKV, G, dhf).transpose(0, 2, 1, 3, 4) \
         .reshape(B, HKV, W * G, dhf)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, W * G, dhf),
+                     lambda b, h, i, tbl, st: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dhf),
+                     lambda b, h, i, tbl, st: (tbl[b, i], h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dhf),
+                     lambda b, h, i, tbl, st: (tbl[b, i], h, 0, 0)),
+    ]
+    operands = [qg, kT, vT]
+    kernel = _paged_prefill_kernel
+    if ks is not None:
+        # per-(block, head) scale tables ride the same table indirection
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda b, h, i, tbl, st: (tbl[b, i], h)),
+            pl.BlockSpec((1, 1), lambda b, h, i, tbl, st: (tbl[b, i], h)),
+        ]
+        operands += [ks, vs]
+        kernel = _paged_prefill_kernel_quant
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, HKV, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, W * G, dhf),
-                         lambda b, h, i, tbl, st: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dhf),
-                         lambda b, h, i, tbl, st: (tbl[b, i], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dhf),
-                         lambda b, h, i, tbl, st: (tbl[b, i], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, W * G, dhf),
                                lambda b, h, i, tbl, st: (b, h, 0, 0)),
         scratch_shapes=[
@@ -128,13 +183,12 @@ def paged_prefill_attention(q, kp, vp, tables, start, *,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_prefill_kernel, scale=scale, nt=nb, bs=bs,
-                          G=G),
+        functools.partial(kernel, scale=scale, nt=nb, bs=bs, G=G),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, HKV, W * G, dhf), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(tables, start.astype(jnp.int32), qg, kT, vT)
+    )(tables, start.astype(jnp.int32), *operands)
     return out.reshape(B, HKV, W, G, dhf).transpose(0, 2, 1, 3, 4) \
         .reshape(B, W, HQ, dhf)[..., :dh]

@@ -58,29 +58,40 @@ def slot_decode_attention_ref(q, k, v, valid, *, scale=None):
     return out.reshape(B, HQ, dh)
 
 
-def paged_decode_attention_ref(q, kp, vp, tables, valid, *, scale=None):
+def paged_decode_attention_ref(q, kp, vp, tables, valid, *, scale=None,
+                               ks=None, vs=None):
     """Paged decode oracle: gather each slot's logical view through its
     block table, then slot-decode over it. q:(B,HQ,dh); kp,vp:
-    (P+1,bs,HKV,dh) physical pools; tables:(B,nb) int32; valid:(B,nb*bs)."""
+    (P+1,bs,HKV,dh) physical pools; tables:(B,nb) int32; valid:(B,nb*bs).
+    ks/vs: optional (P+1,HKV) f32 per-block scales — the quantize-then-
+    dequant reference the fused kernels must match."""
     B = q.shape[0]
     bs, HKV, dh = kp.shape[1], kp.shape[2], kp.shape[3]
     nb = tables.shape[1]
+    if ks is not None:
+        kp = kp.astype(jnp.float32) * ks[:, None, :, None]
+        vp = vp.astype(jnp.float32) * vs[:, None, :, None]
     kg = kp[tables].reshape(B, nb * bs, HKV, dh)
     vg = vp[tables].reshape(B, nb * bs, HKV, dh)
     return slot_decode_attention_ref(q, kg, vg, valid, scale=scale)
 
 
-def paged_prefill_attention_ref(q, kp, vp, tables, start, *, scale=None):
+def paged_prefill_attention_ref(q, kp, vp, tables, start, *, scale=None,
+                                ks=None, vs=None):
     """Paged chunked-prefill oracle: gather each slot's logical view through
     its block table, then rectangular chunk attention with the per-query
     causal mask ``k_pos <= start + w``. q:(B,W,HQ,dh); kp,vp:(P+1,bs,HKV,dh)
     physical pools; tables:(B,nb) int32; start:(B,) first chunk position.
-    Query rows past a row's true chunk length are garbage by contract."""
+    Query rows past a row's true chunk length are garbage by contract.
+    ks/vs: optional (P+1,HKV) f32 per-block scales (quantized pools)."""
     B, W, HQ, dh = q.shape
     bs, HKV = kp.shape[1], kp.shape[2]
     nb = tables.shape[1]
     G = HQ // HKV
     scale = scale or 1.0 / math.sqrt(dh)
+    if ks is not None:
+        kp = kp.astype(jnp.float32) * ks[:, None, :, None]
+        vp = vp.astype(jnp.float32) * vs[:, None, :, None]
     kg = kp[tables].reshape(B, nb * bs, HKV, dh)
     vg = vp[tables].reshape(B, nb * bs, HKV, dh)
     q_pos = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B,W)

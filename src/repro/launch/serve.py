@@ -83,7 +83,7 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                mesh: str = "", chunked: bool = False, budget: int = 256,
                chunk_width: int = 0, preempt: str = "recompute",
                victim: str = "youngest", host_blocks: int = 0,
-               async_swap: bool = True,
+               async_swap: bool = True, kv_dtype: str = "bf16",
                prefix_cache: str = "", ttft_slo: float = 0.0,
                spec_decode: str = "none", spec_width: int = 0,
                trace: str = "", metrics: str = "",
@@ -111,6 +111,9 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
         # fail before the (possibly long) run, not at the save afterwards
         raise ValueError("--prefix-cache needs --kv paged (dense slot rows "
                          "have no prompt-keyed blocks to persist)")
+    if kv_dtype != "bf16" and kv != "paged":
+        raise ValueError("--kv-dtype quantization needs --kv paged (dense "
+                         "slot rows have no per-block scale tables)")
 
     cfg, lk, opts, params = _setup(arch, preset_name, smoke=smoke, scale=scale,
                                    seed=seed, gen_len=gen_len,
@@ -149,7 +152,7 @@ def run_engine(arch: str, preset_name: str, *, n_slots: int = 4,
                       chunk_budget=budget, chunk_width=chunk_width,
                       preempt=PreemptionPolicy(mode=preempt, victim=victim),
                       host_blocks=host_blocks, async_swap=async_swap,
-                      warm_start=warm_start,
+                      kv_dtype=kv_dtype, warm_start=warm_start,
                       ttft_slo_s=ttft_slo / 1e3 if ttft_slo > 0 else None,
                       spec_decode=spec_decode, spec_width=spec_width,
                       telemetry=tel)
@@ -299,6 +302,13 @@ def main(argv=None) -> int:
                    help="paged: host-tier pool size in blocks (0 = auto: "
                         "mirror the device pool when --preempt swap or a "
                         "prefix cache is in play, else disabled)")
+    p.add_argument("--kv-dtype", default="bf16",
+                   choices=["bf16", "int8", "fp8"],
+                   help="paged: block-pool storage dtype — int8/fp8 store "
+                        "per-(block, head) symmetric scales beside the pools "
+                        "and dequantize inside the attention kernels (2-4x "
+                        "resident tokens per HBM byte; bf16 = uncompressed "
+                        "control, bit-identical to the unquantized engine)")
     p.add_argument("--sync-swap", action="store_true",
                    help="paged: disable the async swap runtime (batched "
                         "chain transfers behind a double-buffered stream, "
@@ -405,6 +415,7 @@ def main(argv=None) -> int:
                          preempt=args.preempt, victim=args.victim,
                          host_blocks=args.host_blocks,
                          async_swap=not args.sync_swap,
+                         kv_dtype=args.kv_dtype,
                          prefix_cache=args.prefix_cache,
                          ttft_slo=args.ttft_slo,
                          spec_decode=args.spec_decode,

@@ -498,18 +498,33 @@ def attention_decode_paged(params: Params, x: jax.Array, cache: Params,
     logical_blk = jnp.clip(pos // bs, 0, nb - 1)
     blk = jnp.take_along_axis(tables, logical_blk[:, None], axis=1)[:, 0]
     off = pos % bs
-    kp = cache["kp"].at[blk, off].set(k[:, 0].astype(cache["kp"].dtype))
-    vp = cache["vp"].at[blk, off].set(v[:, 0].astype(cache["vp"].dtype))
+    ks = vs = None
+    if "ks" in cache:
+        # quantized pool: block-level requantize-on-write (see kv_quant)
+        from repro.kernels import kv_quant
+        kp, ks = kv_quant.quant_insert(cache["kp"], cache["ks"], blk, off,
+                                       k[:, 0])
+        vp, vs = kv_quant.quant_insert(cache["vp"], cache["vs"], blk, off,
+                                       v[:, 0])
+    else:
+        kp = cache["kp"].at[blk, off].set(k[:, 0].astype(cache["kp"].dtype))
+        vp = cache["vp"].at[blk, off].set(v[:, 0].astype(cache["vp"].dtype))
 
     if opts.attn_impl == "pallas":
         from repro.kernels import ops as kops
-        out = kops.paged_decode_attention(q, kp, vp, tables, pos)
+        out = kops.paged_decode_attention(q, kp, vp, tables, pos, ks, vs)
     else:
         # gather the logical view: (B, nb, bs, ...) -> (B, max_len, ...).
         # Same shapes, values and masks as the slotted dense row, so the
         # einsum/softmax below is bit-identical to attention_decode_slots.
-        kg = kp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
-        vg = vp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        if ks is not None:
+            from repro.kernels import kv_quant
+            kd = kv_quant.dequantize_pool(kp, ks).astype(x.dtype)
+            vd = kv_quant.dequantize_pool(vp, vs).astype(x.dtype)
+        else:
+            kd, vd = kp, vp
+        kg = kd[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        vg = vd[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
         valid = jnp.arange(max_len, dtype=jnp.int32)[None] <= pos[:, None]
         qg = q.reshape(B, 1, hkv, hq // hkv, dh)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kg).astype(jnp.float32)
@@ -520,6 +535,8 @@ def attention_decode_paged(params: Params, x: jax.Array, cache: Params,
 
     y = out.reshape(B, 1, -1) @ params["wo"].astype(x.dtype)
     new_cache = dict(cache, kp=kp, vp=vp, pos=pos + 1)
+    if ks is not None:
+        new_cache["ks"], new_cache["vs"] = ks, vs
     return y, new_cache
 
 
@@ -620,17 +637,31 @@ def attention_serve_chunk_paged(params: Params, x: jax.Array, cache: Params,
     blk = jnp.take_along_axis(tables, logical_blk, axis=1)          # (B, W)
     blk = jnp.where(real, blk, trash)
     off = q_pos % bs
-    kp = cache["kp"].at[blk, off].set(k.astype(cache["kp"].dtype))
-    vp = cache["vp"].at[blk, off].set(v.astype(cache["vp"].dtype))
+    ks = vs = None
+    if "ks" in cache:
+        # quantized pool: padding rows target the trash block, so their
+        # garbage writes requantize only the trash row (never validly read)
+        from repro.kernels import kv_quant
+        kp, ks = kv_quant.quant_insert(cache["kp"], cache["ks"], blk, off, k)
+        vp, vs = kv_quant.quant_insert(cache["vp"], cache["vs"], blk, off, v)
+    else:
+        kp = cache["kp"].at[blk, off].set(k.astype(cache["kp"].dtype))
+        vp = cache["vp"].at[blk, off].set(v.astype(cache["vp"].dtype))
 
     if opts.attn_impl == "pallas":
         from repro.kernels import ops as kops
-        out = kops.paged_prefill_attention(q, kp, vp, tables, start)
+        out = kops.paged_prefill_attention(q, kp, vp, tables, start, ks, vs)
     else:
         # gather fallback: assemble each row's logical view and mask by
         # position — same shapes and reductions as the dense chunk path
-        kg = kp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
-        vg = vp[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        if ks is not None:
+            from repro.kernels import kv_quant
+            kd = kv_quant.dequantize_pool(kp, ks).astype(x.dtype)
+            vd = kv_quant.dequantize_pool(vp, vs).astype(x.dtype)
+        else:
+            kd, vd = kp, vp
+        kg = kd[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
+        vg = vd[tables].reshape(B, nb * bs, hkv, dh)[:, :max_len]
         valid = jnp.arange(max_len, dtype=jnp.int32)[None, None, :] \
             <= q_pos[:, :, None]                        # (B, W, max_len)
         qg = q.reshape(B, W, hkv, hq // hkv, dh)
@@ -642,6 +673,8 @@ def attention_serve_chunk_paged(params: Params, x: jax.Array, cache: Params,
 
     y = out.reshape(B, W, -1) @ params["wo"].astype(x.dtype)
     new_cache = dict(cache, kp=kp, vp=vp, pos=start + clen)
+    if ks is not None:
+        new_cache["ks"], new_cache["vs"] = ks, vs
     return y, new_cache
 
 

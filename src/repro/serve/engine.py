@@ -101,7 +101,7 @@ class ServeEngine:
                  ttft_slo_s: Optional[float] = None,
                  spec_decode: str = "none", spec_width: int = 0,
                  telemetry: Optional[Telemetry] = None,
-                 async_swap: bool = True):
+                 async_swap: bool = True, kv_dtype: str = "bf16"):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -153,6 +153,10 @@ class ServeEngine:
                 raise ValueError("the host tier (host_blocks / warm_start) "
                                  "needs kv='paged': dense slot rows have no "
                                  "block structure to spill")
+            if kv_dtype != "bf16":
+                raise ValueError("kv_dtype quantization needs kv='paged': "
+                                 "dense slot rows have no per-block scale "
+                                 "tables")
             self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
                                            n_slots, max_len, self.sampling,
                                            bucket_fn, mesh=mesh,
@@ -171,7 +175,7 @@ class ServeEngine:
                               mesh=mesh, chunked=chunked, host_blocks=hb,
                               warm_start=warm_start,
                               spec=self.proposer is not None,
-                              async_swap=async_swap)
+                              async_swap=async_swap, kv_dtype=kv_dtype)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
@@ -878,15 +882,18 @@ class ServeEngine:
             u["ttft_slo_s"] = self.tuner.slo_s
             u["budget_adjustments"] = self.tuner.adjustments
         u.update(self.kv.utilization())
+        # on one device the single shard holds the whole store, so this
+        # doubles as total KV residency — the equal-block-budget bytes the
+        # kv_dtype axis compresses
+        u["kv_bytes_per_shard"] = _kv_bytes_per_shard(self.kv.cache)
+        if "kv_blocks_hwm" in u:
+            # resident high-watermark in per-shard bytes (+1: trash row)
+            u["kv_hwm_bytes_per_shard"] = int(
+                u["kv_bytes_per_shard"] * u["kv_blocks_hwm"]
+                / (u["kv_blocks_total"] + 1))
         if self.mesh is not None:
             u["mesh"] = "x".join(str(self.mesh.shape[a])
                                  for a in self.mesh.axis_names)
-            u["kv_bytes_per_shard"] = _kv_bytes_per_shard(self.kv.cache)
-            if "kv_blocks_hwm" in u:
-                # resident high-watermark in per-shard bytes (+1: trash row)
-                u["kv_hwm_bytes_per_shard"] = int(
-                    u["kv_bytes_per_shard"] * u["kv_blocks_hwm"]
-                    / (u["kv_blocks_total"] + 1))
         return u
 
     def reset_counters(self) -> None:

@@ -69,6 +69,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import kv_quant
+from repro.kernels.kv_quant import KV_DTYPES
 from repro.models import prefill_suffix
 from repro.sharding.rules import host_to_mesh
 from repro.models.transformer import _check_pageable
@@ -168,17 +170,25 @@ class HostBlockStore(BlockPool):
 
     def __init__(self, num_blocks: int, block_size: int,
                  group_shapes: Optional[List[Tuple[int, ...]]] = None,
-                 dtype=np.float32):
+                 dtype=np.float32, scale_shapes=None):
         super().__init__(num_blocks, block_size)
         self.tick = np.zeros(num_blocks, np.int64)
         self._tick = 0
         self.k = self.v = None
+        self.ks = self.vs = None
         if group_shapes is not None:
             dt = np.dtype(dtype)
             self.k = [np.zeros((s[0], num_blocks) + tuple(s[1:]), dt)
                       for s in group_shapes]
             self.v = [np.zeros((s[0], num_blocks) + tuple(s[1:]), dt)
                       for s in group_shapes]
+            # quantized tier: per-block scale tables ride beside the values
+            # — (L, num_blocks, HKV) f32 per group
+            if scale_shapes is not None:
+                self.ks = [np.ones((s[0], num_blocks) + tuple(s[1:]),
+                                   np.float32) for s in scale_shapes]
+                self.vs = [np.ones((s[0], num_blocks) + tuple(s[1:]),
+                                   np.float32) for s in scale_shapes]
 
     def alloc(self) -> Optional[int]:
         blk = super().alloc()
@@ -191,17 +201,27 @@ class HostBlockStore(BlockPool):
         self.tick[blk] = self._tick
 
     def write(self, blk: int, kvs) -> None:
-        """Store one exported device block (tuple of {"k","v"} per group)."""
+        """Store one exported device block (tuple of {"k","v"} — plus
+        {"ks","vs"} scales on a quantized tier — per group)."""
         for g, kv in enumerate(kvs):
             self.k[g][:, blk] = np.asarray(kv["k"])
             self.v[g][:, blk] = np.asarray(kv["v"])
+            if self.ks is not None:
+                self.ks[g][:, blk] = np.asarray(kv["ks"])
+                self.vs[g][:, blk] = np.asarray(kv["vs"])
 
     def read(self, blk: int):
         """The block's K/V as the import program's operand type (copies —
         safe to free the host block as soon as the import is dispatched)."""
-        return tuple({"k": self.k[g][:, blk].copy(),
-                      "v": self.v[g][:, blk].copy()}
-                     for g in range(len(self.k)))
+        out = []
+        for g in range(len(self.k)):
+            kv = {"k": self.k[g][:, blk].copy(),
+                  "v": self.v[g][:, blk].copy()}
+            if self.ks is not None:
+                kv["ks"] = self.ks[g][:, blk].copy()
+                kv["vs"] = self.vs[g][:, blk].copy()
+            out.append(kv)
+        return tuple(out)
 
     def write_chain(self, blks: List[int], kvs) -> None:
         """Store a whole exported chain at once (tuple of {"k","v"} per
@@ -211,14 +231,23 @@ class HostBlockStore(BlockPool):
         for g, kv in enumerate(kvs):
             self.k[g][:, idx] = np.asarray(kv["k"])
             self.v[g][:, idx] = np.asarray(kv["v"])
+            if self.ks is not None:
+                self.ks[g][:, idx] = np.asarray(kv["ks"])
+                self.vs[g][:, idx] = np.asarray(kv["vs"])
 
     def read_chain(self, blks: List[int]):
         """A whole chain's K/V as ``build_chain_import_fn``'s operand type
         (fancy indexing copies — safe to free the host blocks as soon as
         the import is dispatched)."""
         idx = np.asarray(blks, np.int64)
-        return tuple({"k": self.k[g][:, idx], "v": self.v[g][:, idx]}
-                     for g in range(len(self.k)))
+        out = []
+        for g in range(len(self.k)):
+            kv = {"k": self.k[g][:, idx], "v": self.v[g][:, idx]}
+            if self.ks is not None:
+                kv["ks"] = self.ks[g][:, idx]
+                kv["vs"] = self.vs[g][:, idx]
+            out.append(kv)
+        return tuple(out)
 
 
 @dataclasses.dataclass
@@ -425,18 +454,30 @@ class PrefixIndex:
 # ---------------------------------------------------------------------------
 
 def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
-                     n_slots: int, dtype=jnp.bfloat16):
+                     n_slots: int, dtype=jnp.bfloat16, kv_dtype: str = "bf16"):
     """Physical pools per layer group: {"kp","vp"}: (L, P+1, bs, HKV, dh)
-    (row P = trash block), plus per-slot positions (L, B)."""
+    (row P = trash block), plus per-slot positions (L, B).
+
+    With a quantized ``kv_dtype`` (int8 / fp8) the pools store the compressed
+    encoding and each group gains per-block symmetric scale tables
+    {"ks","vs"}: (L, P+1, HKV) f32 — one scale per block per KV head (see
+    ``repro.kernels.kv_quant``). ``kv_dtype="bf16"`` adds nothing: the cache
+    tree is structurally identical to the unquantized engine's."""
+    store = kv_quant.storage_dtype(kv_dtype, dtype)
     out = []
     for _ in cfg.block_pattern:
         shape = (cfg.num_blocks, num_blocks + 1, block_size,
                  cfg.n_kv_heads, cfg.head_dim)
-        out.append({
-            "kp": jnp.zeros(shape, dtype),
-            "vp": jnp.zeros(shape, dtype),
+        g = {
+            "kp": jnp.zeros(shape, store),
+            "vp": jnp.zeros(shape, store),
             "pos": jnp.zeros((cfg.num_blocks, n_slots), jnp.int32),
-        })
+        }
+        if kv_dtype != "bf16":
+            sshape = (cfg.num_blocks, num_blocks + 1, cfg.n_kv_heads)
+            g["ks"] = jnp.ones(sshape, jnp.float32)
+            g["vs"] = jnp.ones(sshape, jnp.float32)
+        out.append(g)
     return tuple(out)
 
 
@@ -462,11 +503,19 @@ def _make_scatter(mesh=None, cache_sharding=None):
     def scatter(cache, kvs, blks, offs, slot, new_pos):
         out = []
         for g, kv in zip(cache, kvs):
+            pos = g["pos"].at[:, slot].set(new_pos)
+            if "ks" in g:
+                # quantize-on-write: block-level requant around the run
+                kp, ks = kv_quant.quant_insert_stacked(
+                    g["kp"], g["ks"], blks, offs, kv["k"][:, 0])
+                vp, vs = kv_quant.quant_insert_stacked(
+                    g["vp"], g["vs"], blks, offs, kv["v"][:, 0])
+                out.append(dict(g, kp=kp, vp=vp, ks=ks, vs=vs, pos=pos))
+                continue
             kp = g["kp"].at[:, blks, offs].set(
                 kv["k"][:, 0].astype(g["kp"].dtype))
             vp = g["vp"].at[:, blks, offs].set(
                 kv["v"][:, 0].astype(g["vp"].dtype))
-            pos = g["pos"].at[:, slot].set(new_pos)
             out.append(dict(g, kp=kp, vp=vp, pos=pos))
         return tuple(out)
 
@@ -484,12 +533,15 @@ def _make_gather(max_len: int, mesh=None, cache_sharding=None):
     def gather(cache, row):
         out = []
         for g in cache:
-            def view(p):
+            def view(p, s=None):
                 v = p[:, row]                        # (L, nb, bs, HKV, dh)
+                if s is not None:                    # dequantize the view
+                    v = kv_quant.dequantize(v, s[:, row][:, :, None, :, None])
                 L_, nb_, bs_ = v.shape[:3]
                 v = v.reshape(L_, nb_ * bs_, *v.shape[3:])[:, :max_len]
                 return v[:, None]                    # (L, 1, max_len, ...)
-            out.append({"k": view(g["kp"]), "v": view(g["vp"])})
+            out.append({"k": view(g["kp"], g.get("ks")),
+                        "v": view(g["vp"], g.get("vs"))})
         return tuple(out)
 
     return jax.jit(gather, **_sharding_kwargs(mesh, cache_sharding, 1,
@@ -502,12 +554,45 @@ def _make_copy_block(mesh=None, cache_sharding=None):
     own slice of the block (no cross-shard traffic)."""
 
     def copy(cache, src, dst):
-        return tuple(dict(g, kp=g["kp"].at[:, dst].set(g["kp"][:, src]),
-                          vp=g["vp"].at[:, dst].set(g["vp"][:, src]))
-                     for g in cache)
+        out = []
+        for g in cache:
+            d = dict(g, kp=g["kp"].at[:, dst].set(g["kp"][:, src]),
+                     vp=g["vp"].at[:, dst].set(g["vp"][:, src]))
+            if "ks" in g:                  # CoW forks copy the block scales
+                d["ks"] = g["ks"].at[:, dst].set(g["ks"][:, src])
+                d["vs"] = g["vs"].at[:, dst].set(g["vs"][:, src])
+            out.append(d)
+        return tuple(out)
 
     return jax.jit(copy, donate_argnums=(0,),
                    **_sharding_kwargs(mesh, cache_sharding, 2))
+
+
+def _make_zero_block(mesh=None, cache_sharding=None):
+    """Jitted ``(cache, blk) -> cache``: clear one physical block's values
+    and reset its scales to 1. Run at allocation time on *quantized* pools:
+    ``quant_insert`` takes each touched block's amax over all its lanes, so
+    a freshly allocated block must not carry a previous tenant's stale
+    bytes — they would leak into the scale and make quantized token streams
+    depend on pool allocation history (the bf16 control masks stale lanes
+    at attention time and needs no zeroing). Donated."""
+
+    def zero(cache, blk):
+        out = []
+        for g in cache:
+            d = dict(g,
+                     kp=g["kp"].at[:, blk].set(
+                         jnp.zeros((), g["kp"].dtype)),
+                     vp=g["vp"].at[:, blk].set(
+                         jnp.zeros((), g["vp"].dtype)))
+            if "ks" in g:
+                d["ks"] = g["ks"].at[:, blk].set(1.0)
+                d["vs"] = g["vs"].at[:, blk].set(1.0)
+            out.append(d)
+        return tuple(out)
+
+    return jax.jit(zero, donate_argnums=(0,),
+                   **_sharding_kwargs(mesh, cache_sharding, 1))
 
 
 def _make_set_pos(mesh=None, cache_sharding=None):
@@ -541,7 +626,7 @@ class PagedKV:
                  mesh=None, chunked: bool = False,
                  host_blocks: Optional[int] = 0,
                  warm_start: Optional[str] = None, spec: bool = False,
-                 async_swap: bool = True):
+                 async_swap: bool = True, kv_dtype: str = "bf16"):
         from repro.core.linkage import L3_NSS
         from repro.core.step import (build_block_export_fn,
                                      build_block_import_fn,
@@ -551,7 +636,11 @@ class PagedKV:
                                      build_serve_step, build_verify_step,
                                      make_sampler)
         _check_pageable(cfg, "PagedKV")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; known: "
+                             f"{KV_DTYPES}")
         self.cfg, self.params, self.opts = cfg, params, opts
+        self.kv_dtype = kv_dtype
         self.n_slots, self.max_len = n_slots, max_len
         self.bs = block_size
         self.nb = -(-max_len // block_size)          # logical blocks per slot
@@ -571,7 +660,7 @@ class PagedKV:
         self.pos_host = np.zeros(n_slots, np.int64)
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self.cache = init_paged_cache(cfg, num_blocks, block_size, n_slots,
-                                      opts.dtype)
+                                      opts.dtype, kv_dtype=kv_dtype)
         self.cow_forks = 0
         self.prefix_shared_tokens = 0
         self.swap_out_blocks = 0
@@ -598,14 +687,29 @@ class PagedKV:
             host_blocks = max(host_blocks, n_persisted)
         group_shapes = [(cfg.num_blocks, block_size, cfg.n_kv_heads,
                          cfg.head_dim) for _ in cfg.block_pattern]
+        store_dt = kv_quant.storage_dtype(kv_dtype, opts.dtype)
+        scale_shapes = None
+        if kv_dtype != "bf16":
+            scale_shapes = [(cfg.num_blocks, cfg.n_kv_heads)
+                            for _ in cfg.block_pattern]
         self.host: Optional[HostBlockStore] = None
         if host_blocks > 0:
             self.host = HostBlockStore(host_blocks, block_size,
                                        group_shapes=group_shapes,
-                                       dtype=opts.dtype)
+                                       dtype=store_dt,
+                                       scale_shapes=scale_shapes)
         self.host_map: Dict[bytes, int] = {}     # token-prefix key -> hblk
         self.host_keys: Dict[int, Tuple[bytes, np.ndarray]] = {}
+        # per-block tier-transfer bytes: quantized values + scale tables.
+        # _raw_block_bytes is the uncompressed equivalent — the ratio is the
+        # bandwidth saving the report's *_raw counter makes visible.
         self._block_bytes = sum(
+            2 * int(np.prod(s)) * np.dtype(store_dt).itemsize
+            for s in group_shapes)
+        if scale_shapes is not None:
+            self._block_bytes += sum(2 * int(np.prod(s)) * 4
+                                     for s in scale_shapes)
+        self._raw_block_bytes = sum(
             2 * int(np.prod(s)) * np.dtype(opts.dtype).itemsize
             for s in group_shapes)
 
@@ -624,6 +728,8 @@ class PagedKV:
 
         self.chunked = chunked
         self._copy = _make_copy_block(mesh, cache_sh)
+        self._zero = (_make_zero_block(mesh, cache_sh)
+                      if self.kv_dtype != "bf16" else None)
         self._export = build_block_export_fn(mesh, cache_sh, blk_sh)
         self._import = build_block_import_fn(mesh, cache_sh, blk_sh)
         self._export_chain = build_chain_export_fn(mesh, cache_sh, chain_sh)
@@ -687,6 +793,10 @@ class PagedKV:
         if blk is None and self.index.evict(self.pool, 1,
                                             on_evict=self._demote):
             blk = self.pool.alloc()
+        if blk is not None and self._zero is not None:
+            # quantized pools: scrub the previous tenant's bytes so block
+            # scales stay a pure function of the sequence's own content
+            self.cache = self._zero(self.cache, jnp.asarray(blk, jnp.int32))
         return blk
 
     def _cow(self, slot: int, chain: BlockTable, bi: int) -> bool:
@@ -732,6 +842,15 @@ class PagedKV:
         self.host.free(h)
         return True
 
+    def _raw_bytes_of(self, blocks: int):
+        """``raw_bytes`` telemetry arg for a tier move of ``blocks`` blocks:
+        None for the bf16 control (wire bytes == logical bytes, and its
+        trace events stay identical to the pre-quantization schema), else
+        what the compressed blocks decode to."""
+        if self.kv_dtype == "bf16":
+            return None
+        return blocks * self._raw_block_bytes
+
     def drain_swaps(self) -> int:
         """Complete every in-flight async device→host transfer (no-op when
         the stream is empty or the backend is synchronous). The engine
@@ -742,7 +861,7 @@ class PagedKV:
             return 0
         t, b, n = self.stream.drain()
         self.stream_transfers += t
-        self.tel.swap_stream(t, b, n)
+        self.tel.swap_stream(t, b, n, self._raw_bytes_of(b))
         return t
 
     def _demote(self, node) -> None:
@@ -774,7 +893,7 @@ class PagedKV:
         self.host.touch(h)
         self.prefix_demotions += 1
         self.bytes_moved += self._block_bytes
-        self.tel.demote(self._block_bytes)
+        self.tel.demote(self._block_bytes, self._raw_bytes_of(1))
 
     def _promote(self, prompt: np.ndarray, matched: List[int]) -> List[int]:
         """Extend a device radix match with host-tier hits: pop each
@@ -822,7 +941,7 @@ class PagedKV:
             self.prefix_promotions += len(out)
             self.bytes_moved += len(out) * self._block_bytes
             for _ in out:
-                self.tel.promote(self._block_bytes)
+                self.tel.promote(self._block_bytes, self._raw_bytes_of(1))
             self.index.insert(prompt, matched + out,
                               len(matched) + len(out), self.pool)
             for b in out:             # hand ownership to the index
@@ -876,7 +995,8 @@ class PagedKV:
             prompt=self.prompts.get(slot) if self.chunked else None)
         self.swap_out_blocks += len(hblks)
         self.bytes_moved += len(hblks) * self._block_bytes
-        self.tel.swap_out(slot, len(hblks), len(hblks) * self._block_bytes)
+        self.tel.swap_out(slot, len(hblks), len(hblks) * self._block_bytes,
+                          self._raw_bytes_of(len(hblks)))
         self.release(slot)
         return handle
 
@@ -972,7 +1092,8 @@ class PagedKV:
             self.prompts[slot] = handle.prompt
         self.swap_in_blocks += len(dblks)
         self.bytes_moved += len(dblks) * self._block_bytes
-        self.tel.swap_in(slot, len(dblks), len(dblks) * self._block_bytes)
+        self.tel.swap_in(slot, len(dblks), len(dblks) * self._block_bytes,
+                         self._raw_bytes_of(len(dblks)))
         return True
 
     # -- persistence --------------------------------------------------------
@@ -986,13 +1107,17 @@ class PagedKV:
             "groups": len(self.cfg.block_pattern),
             "n_kv_heads": self.cfg.n_kv_heads,
             "head_dim": self.cfg.head_dim, "block_size": self.bs,
-            "dtype": np.dtype(self.opts.dtype).name}, sort_keys=True)
+            "dtype": np.dtype(self.opts.dtype).name,
+            "kv_dtype": self.kv_dtype}, sort_keys=True)
 
     def save(self, path: str) -> int:
         """Persist every prefix block the hierarchy knows — host-tier
         entries plus a lossless export of the device radix index — keyed by
-        prompt tokens, fingerprinted by config, stored float32 (lossless
-        for f32 and bf16 pools). Returns the number of entries written."""
+        prompt tokens, fingerprinted by config. Unquantized pools store
+        float32 (lossless for f32 and bf16); quantized pools persist the
+        compressed bytes plus their f32 scale tables (fp8 rides as a uint8
+        bitcast — numpy has no float8 dtype in npz). Returns the number of
+        entries written."""
         self.drain_swaps()             # pending demote writes must land
         entries = []                   # (tokens, kvs) in LRU-ish order
         seen = set()
@@ -1013,8 +1138,17 @@ class PagedKV:
         for i, (tokens, kvs) in enumerate(entries):
             payload[f"tok_{i}"] = tokens
             for g, kv in enumerate(kvs):
-                payload[f"k_{i}_{g}"] = np.asarray(kv["k"], np.float32)
-                payload[f"v_{i}_{g}"] = np.asarray(kv["v"], np.float32)
+                if self.kv_dtype == "bf16":
+                    payload[f"k_{i}_{g}"] = np.asarray(kv["k"], np.float32)
+                    payload[f"v_{i}_{g}"] = np.asarray(kv["v"], np.float32)
+                    continue
+                k, v = np.asarray(kv["k"]), np.asarray(kv["v"])
+                if self.kv_dtype == "fp8":
+                    k, v = k.view(np.uint8), v.view(np.uint8)
+                payload[f"k_{i}_{g}"] = k
+                payload[f"v_{i}_{g}"] = v
+                payload[f"ks_{i}_{g}"] = np.asarray(kv["ks"], np.float32)
+                payload[f"vs_{i}_{g}"] = np.asarray(kv["vs"], np.float32)
         with open(path, "wb") as f:
             np.savez(f, **payload)
         return len(entries)
@@ -1024,7 +1158,11 @@ class PagedKV:
         device on the first radix hit — no re-prefill). Raises on a config
         fingerprint mismatch; keeps what fits when the tier is smaller than
         the file. Returns the number of entries restored."""
-        dt = np.dtype(self.opts.dtype)
+        if self.kv_dtype == "bf16":
+            dt = np.dtype(self.opts.dtype)
+        else:
+            dt = np.dtype(kv_quant.storage_dtype(self.kv_dtype,
+                                                 self.opts.dtype))
         with np.load(path) as data:
             fp = str(data["fingerprint"])
             if fp != self._fingerprint():
@@ -1043,10 +1181,17 @@ class PagedKV:
                 h = self.host.alloc()
                 if h is None:
                     break              # host tier full: keep what fits
-                kvs = tuple(
-                    {"k": data[f"k_{i}_{g}"].astype(dt),
-                     "v": data[f"v_{i}_{g}"].astype(dt)}
-                    for g in range(len(self.cfg.block_pattern)))
+                kvs = []
+                for g in range(len(self.cfg.block_pattern)):
+                    k, v = data[f"k_{i}_{g}"], data[f"v_{i}_{g}"]
+                    if self.kv_dtype == "fp8":
+                        k, v = k.view(dt), v.view(dt)
+                    kv = {"k": k.astype(dt), "v": v.astype(dt)}
+                    if self.kv_dtype != "bf16":
+                        kv["ks"] = data[f"ks_{i}_{g}"].astype(np.float32)
+                        kv["vs"] = data[f"vs_{i}_{g}"].astype(np.float32)
+                    kvs.append(kv)
+                kvs = tuple(kvs)
                 self.host.write(h, kvs)
                 self.host_map[key] = h
                 self.host_keys[h] = (key, tokens)
@@ -1283,6 +1428,8 @@ class PagedKV:
             "kv_blocks_hwm": self.pool.hwm,
             "kv_cow_forks": self.cow_forks,
             "kv_prefix_shared_tokens": self.prefix_shared_tokens,
+            "kv_dtype": self.kv_dtype,
+            "kv_bytes_per_block": self._block_bytes,
         }
         if self.host is not None:
             u.update({
@@ -1292,6 +1439,11 @@ class PagedKV:
                 "kv_swap_out_blocks": self.swap_out_blocks,
                 "kv_swap_in_blocks": self.swap_in_blocks,
                 "kv_host_bytes_moved": self.bytes_moved,
+                # uncompressed-equivalent traffic: every increment is a
+                # whole-block multiple, so the ratio recovers the block count
+                "kv_host_bytes_moved_raw": (
+                    (self.bytes_moved // self._block_bytes)
+                    * self._raw_block_bytes if self._block_bytes else 0),
                 "kv_prefix_demotions": self.prefix_demotions,
                 "kv_prefix_promotions": self.prefix_promotions,
                 "kv_swap_fails": self.swap_fails,

@@ -661,6 +661,11 @@ class Telemetry:
             self._tier_bytes = m.counter(
                 "kv_tier_bytes_total",
                 "bytes across the device<->host boundary", labels=("op",))
+            self._tier_raw = m.counter(
+                "kv_tier_raw_bytes_total",
+                "uncompressed bytes the moved blocks decode to (equals "
+                "kv_tier_bytes_total unless the cache is quantized)",
+                labels=("op",))
             self._swap_fails = m.counter(
                 "kv_swap_failures_total",
                 "tier moves that fell back to recompute", labels=("op",))
@@ -832,25 +837,35 @@ class Telemetry:
 
     # -- KV tier movement (called from PagedKV) -----------------------------
 
-    def swap_out(self, slot: int, blocks: int, nbytes: int) -> None:
-        self._tier("swap_out", blocks, nbytes, slot=slot)
+    def swap_out(self, slot: int, blocks: int, nbytes: int,
+                 raw_bytes: Optional[int] = None) -> None:
+        self._tier("swap_out", blocks, nbytes, raw_bytes, slot=slot)
 
-    def swap_in(self, slot: int, blocks: int, nbytes: int) -> None:
-        self._tier("swap_in", blocks, nbytes, slot=slot)
+    def swap_in(self, slot: int, blocks: int, nbytes: int,
+                raw_bytes: Optional[int] = None) -> None:
+        self._tier("swap_in", blocks, nbytes, raw_bytes, slot=slot)
 
-    def demote(self, nbytes: int) -> None:
-        self._tier("demote", 1, nbytes)
+    def demote(self, nbytes: int, raw_bytes: Optional[int] = None) -> None:
+        self._tier("demote", 1, nbytes, raw_bytes)
 
-    def promote(self, nbytes: int) -> None:
-        self._tier("promote", 1, nbytes)
+    def promote(self, nbytes: int, raw_bytes: Optional[int] = None) -> None:
+        self._tier("promote", 1, nbytes, raw_bytes)
 
-    def _tier(self, op: str, blocks: int, nbytes: int, **args) -> None:
+    def _tier(self, op: str, blocks: int, nbytes: int,
+              raw_bytes: Optional[int] = None, **args) -> None:
+        """``raw_bytes`` is what the moved blocks decode to uncompressed —
+        given only by quantized caches, where wire bytes != logical bytes;
+        the raw counter falls back to ``nbytes`` so the compressed/raw
+        ratio is well-defined (1.0) for unquantized engines too."""
         if self.trace is not None:
+            extra = {} if raw_bytes is None else {"raw_bytes": raw_bytes}
             self.trace.emit(op, self._clock(), blocks=blocks, bytes=nbytes,
-                            **args)
+                            **extra, **args)
         if self.metrics is not None:
             self._swap_blocks.labels(op=op).inc(blocks)
             self._tier_bytes.labels(op=op).inc(nbytes)
+            self._tier_raw.labels(op=op).inc(
+                nbytes if raw_bytes is None else raw_bytes)
 
     def swap_fail(self, slot: int, blocks: int, op: str) -> None:
         """A tier move that could not complete (alloc exhaustion): ``op``
@@ -862,11 +877,14 @@ class Telemetry:
         if self.metrics is not None:
             self._swap_fails.labels(op=op).inc()
 
-    def swap_stream(self, transfers: int, blocks: int, nbytes: int) -> None:
+    def swap_stream(self, transfers: int, blocks: int, nbytes: int,
+                    raw_bytes: Optional[int] = None) -> None:
         """One non-empty drain of the async swap stream."""
         if self.trace is not None:
+            extra = {} if raw_bytes is None else {"raw_bytes": raw_bytes}
             self.trace.emit("swap_stream", self._clock(),
-                            transfers=transfers, blocks=blocks, bytes=nbytes)
+                            transfers=transfers, blocks=blocks,
+                            bytes=nbytes, **extra)
         if self.metrics is not None:
             self._stream_drains.inc(transfers)
 

@@ -324,7 +324,13 @@ class ArchSharding:
         physical shard layout)."""
         kv = "model" if self.tp_kv else None
         blk = P(None, None, kv, None)
-        return tuple({"k": blk, "v": blk} for _ in cache_tree)
+        out = []
+        for g in cache_tree:
+            spec = {"k": blk, "v": blk}
+            if "ks" in g:              # quantized pool: (L, HKV) scales
+                spec["ks"] = spec["vs"] = P(None, kv)
+            out.append(spec)
+        return tuple(out)
 
     def serve_swap_chain_specs(self, cache_tree) -> Any:
         """A whole exported block chain — (L, n, bs, HKV, dh) per layer
@@ -335,7 +341,13 @@ class ArchSharding:
         chain-at-once device↔host copies stay per-shard."""
         kv = "model" if self.tp_kv else None
         blk = P(None, None, None, kv, None)
-        return tuple({"k": blk, "v": blk} for _ in cache_tree)
+        out = []
+        for g in cache_tree:
+            spec = {"k": blk, "v": blk}
+            if "ks" in g:              # quantized pool: (L, n, HKV) scales
+                spec["ks"] = spec["vs"] = P(None, None, kv)
+            out.append(spec)
+        return tuple(out)
 
     def serve_paged_cache_specs(self, cache_tree) -> Any:
         """Paged engine cache: the physical block pools shard their KV-head
@@ -349,6 +361,8 @@ class ArchSharding:
             name = names[-1] if names else ""
             if name in ("kp", "vp"):                   # (L,P+1,bs,HKV,dh)
                 return P(None, None, None, kv, None)
+            if name in ("ks", "vs"):                   # (L,P+1,HKV) scales
+                return P(None, None, kv)
             return P(*([None] * leaf.ndim))
 
         return jax.tree_util.tree_map_with_path(walk, cache_tree)

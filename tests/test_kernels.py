@@ -357,3 +357,136 @@ def test_verify_accept_boundaries_match_decode_oracle(width):
     assert u["spec_draft_tokens"] == drafts
     assert u["spec_accepted_tokens"] == accepted
     assert u["spec_wasted_tokens"] == drafts - accepted
+
+
+# ---------------------------------------------------------------------------
+# Quantized paged kernels (int8/fp8 block pools, fused dequant): the fused
+# kernel must match the quantize-then-dequant ref oracle exactly (same math,
+# different fetch path), and sit within an absolute error bound of the fp32
+# oracle that reflects the format's precision. Geometry sweep mirrors the
+# unquantized parity tests: HKV=3, block sizes 8/16, odd dh, W=1 decode edge.
+# ---------------------------------------------------------------------------
+
+def _quantize_pool(pool, kv_dtype):
+    """Per-(block, head) symmetric quantization of an f32 pool — the same
+    encoding the engine's write paths produce."""
+    from repro.kernels import kv_quant
+    dt = kv_quant.storage_dtype(kv_dtype, jnp.float32)
+    amax = jnp.max(jnp.abs(pool), axis=(1, 3))
+    s = kv_quant.block_scales(amax, dt)
+    return kv_quant.quantize(pool, s[:, None, :, None], dt), s
+
+
+# attention outputs are convex combinations of ~N(0,1) values, so the output
+# error tracks the format's worst-case relative step at block amax
+_QTOL = {"int8": 0.06, "fp8": 0.40}
+
+
+@pytest.mark.parametrize("P1,bs,nb,B,HQ,HKV,dh,lives,kvd", [
+    (7, 8, 3, 2, 4, 2, 64, (13, 1), "int8"),        # mid-block boundary
+    (9, 16, 2, 2, 6, 3, 64, (17, 32), "int8"),      # bs=16, HKV=3
+    (5, 8, 2, 1, 8, 2, 80, (9,), "int8"),           # odd dh
+    (9, 16, 2, 2, 6, 3, 64, (17, 32), "fp8"),
+    (5, 8, 2, 1, 8, 2, 80, (9,), "fp8"),
+])
+def test_paged_decode_quantized_parity(P1, bs, nb, B, HQ, HKV, dh, lives,
+                                       kvd):
+    from repro.kernels.paged_decode import paged_decode_attention
+    ks_ = jax.random.split(KEY, 4)
+    kpf = jax.random.normal(ks_[0], (P1, bs, HKV, dh), jnp.float32)
+    vpf = jax.random.normal(ks_[1], (P1, bs, HKV, dh), jnp.float32)
+    q = jax.random.normal(ks_[2], (B, HQ, dh), jnp.float32)
+    kp, ks = _quantize_pool(kpf, kvd)
+    vp, vs = _quantize_pool(vpf, kvd)
+    rng = np.random.default_rng(P1 * bs + B)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(P1)[:nb] for _ in range(B)]).astype(np.int32))
+    valid = np.zeros((B, nb * bs), bool)
+    for b, live in enumerate(lives):
+        valid[b, :live] = True
+    valid = jnp.asarray(valid)
+    out = paged_decode_attention(q, kp, vp, tables, valid, ks, vs,
+                                 interpret=True)
+    # fused kernel == quantize-then-dequant oracle (same math, fused fetch)
+    ref_q = kref.paged_decode_attention_ref(q, kp, vp, tables, valid,
+                                            ks=ks, vs=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_q),
+                               atol=3e-5, rtol=3e-5)
+    # and within the format's error bound of the unquantized fp32 oracle
+    ref_f = kref.paged_decode_attention_ref(q, kpf, vpf, tables, valid)
+    assert float(np.max(np.abs(np.asarray(out) - np.asarray(ref_f)))) \
+        <= _QTOL[kvd]
+
+
+@pytest.mark.parametrize("P1,bs,nb,B,W,HQ,HKV,dh,starts,kvd", [
+    (7, 8, 3, 2, 8, 4, 2, 64, (0, 13), "int8"),     # resident 0 + mid-block
+    (9, 16, 2, 2, 7, 6, 3, 64, (5, 17), "int8"),    # bs=16, HKV=3
+    (5, 8, 2, 1, 1, 8, 2, 80, (9,), "int8"),        # W=1 decode edge, odd dh
+    (9, 16, 2, 2, 7, 6, 3, 64, (5, 17), "fp8"),
+    (5, 8, 2, 1, 1, 8, 2, 80, (9,), "fp8"),
+])
+def test_paged_prefill_quantized_parity(P1, bs, nb, B, W, HQ, HKV, dh,
+                                        starts, kvd):
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    ks_ = jax.random.split(KEY, 3)
+    kpf = jax.random.normal(ks_[0], (P1, bs, HKV, dh), jnp.float32)
+    vpf = jax.random.normal(ks_[1], (P1, bs, HKV, dh), jnp.float32)
+    q = jax.random.normal(ks_[2], (B, W, HQ, dh), jnp.float32)
+    kp, ks = _quantize_pool(kpf, kvd)
+    vp, vs = _quantize_pool(vpf, kvd)
+    rng = np.random.default_rng(P1 * bs + B + W)
+    tables = jnp.asarray(np.stack(
+        [rng.permutation(P1)[:nb] for _ in range(B)]).astype(np.int32))
+    start = jnp.asarray(np.array(starts, np.int32))
+    out = paged_prefill_attention(q, kp, vp, tables, start, ks, vs,
+                                  interpret=True)
+    ref_q = kref.paged_prefill_attention_ref(q, kp, vp, tables, start,
+                                             ks=ks, vs=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_q),
+                               atol=3e-5, rtol=3e-5)
+    ref_f = kref.paged_prefill_attention_ref(q, kpf, vpf, tables, start)
+    assert float(np.max(np.abs(np.asarray(out) - np.asarray(ref_f)))) \
+        <= _QTOL[kvd]
+
+
+def test_paged_prefill_quantized_width_one_matches_decode_kernel():
+    """The W=1 == decode-row edge holds for quantized pools too: both fused
+    kernels dequantize through the same scale tables."""
+    from repro.kernels.paged_decode import paged_decode_attention
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    P1, bs, nb, B, HQ, HKV, dh = 7, 8, 3, 2, 6, 3, 64
+    ks_ = jax.random.split(KEY, 3)
+    kpf = jax.random.normal(ks_[0], (P1, bs, HKV, dh), jnp.float32)
+    vpf = jax.random.normal(ks_[1], (P1, bs, HKV, dh), jnp.float32)
+    q = jax.random.normal(ks_[2], (B, 1, HQ, dh), jnp.float32)
+    kp, ks = _quantize_pool(kpf, "int8")
+    vp, vs = _quantize_pool(vpf, "int8")
+    tables = jnp.asarray(np.array([[0, 2, 5], [4, 1, 6]], np.int32))
+    pos = jnp.asarray(np.array([12, 0], np.int32))
+    out_pf = paged_prefill_attention(q, kp, vp, tables, pos, ks, vs,
+                                     interpret=True)
+    valid = jnp.arange(nb * bs, dtype=jnp.int32)[None] <= pos[:, None]
+    out_dec = paged_decode_attention(q[:, 0], kp, vp, tables, valid, ks, vs,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(out_pf[:, 0]), np.asarray(out_dec),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_quant_insert_untouched_blocks_bitwise_stable():
+    """Repeated writes to one block must not drift any *other* block: the
+    requantize-on-write masks untouched rows through bit-exactly."""
+    from repro.kernels import kv_quant
+    P1, bs, HKV, dh = 6, 8, 3, 16
+    rng = np.random.default_rng(3)
+    pool_f = jnp.asarray(rng.normal(size=(P1, bs, HKV, dh)).astype(np.float32))
+    pool, scales = _quantize_pool(pool_f, "int8")
+    p0, s0 = np.asarray(pool), np.asarray(scales)
+    blk = jnp.asarray(np.array([2], np.int32))
+    for step in range(5):
+        off = jnp.asarray(np.array([step % bs], np.int32))
+        vals = jnp.asarray(rng.normal(size=(1, HKV, dh)).astype(np.float32))
+        pool, scales = kv_quant.quant_insert(pool, scales, blk, off, vals)
+    p1, s1 = np.asarray(pool), np.asarray(scales)
+    untouched = [i for i in range(P1) if i != 2]
+    assert (p1[untouched] == p0[untouched]).all()
+    assert (s1[untouched] == s0[untouched]).all()

@@ -23,13 +23,15 @@ echo "          the two-tier swap/warm-start engines under pool pressure,"
 echo "          and speculative decode vs its plain-decode twins),"
 echo "          every engine traced + schema-validated; the bf16 matrix is"
 echo "          the bit-identical control for the int8 tolerance cells"
-echo "          (quantized lifecycle + teacher-forced flip gate) =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --trace --kv-dtype int8
+echo "          (quantized lifecycle + teacher-forced flip gate), plus the"
+echo "          fleet cells (1-replica identity, disaggregated-vs-colocated"
+echo "          handoffs, shared-prefix-store warm hit) =="
+python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --fleet --trace --kv-dtype int8
 
 echo "== smoke: sharded serving (2 virtual devices, 1x2 data,model mesh, "
 echo "          two-phase + chunked + swap/warm-start + spec engines,"
 echo "          plus the int8 cells over sharded scale tables) =="
-python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --mesh 1,2 --trace --kv-dtype int8
+python scripts/paged_smoke.py --chunked --swap --spec-decode --async-swap --fleet --mesh 1,2 --trace --kv-dtype int8
 
 echo "== smoke: chunked-prefill serve launcher (open-loop) =="
 python -m repro.launch.serve --preset nss_shortcut --load open \
@@ -50,6 +52,11 @@ echo "== smoke: speculative-decode serve launcher (n-gram drafts) =="
 python -m repro.launch.serve --preset nss_shortcut --load closed \
     --requests 4 --slots 2 --prompt-len 18 --gen-len 14 --decode-steps 3 \
     --kv paged --block-size 8 --spec-decode ngram --spec-width 6
+
+echo "== smoke: fleet serve launcher (2 replicas, disaggregated) =="
+python -m repro.launch.fleet --preset nss_shortcut --load open \
+    --requests 4 --slots 2 --prompt-len 16 --gen-len 8 --decode-steps 4 \
+    --replicas 2 --disaggregate 1 --block-size 8
 
 echo "== smoke: telemetry — traced chunked launcher + trace_summary =="
 CI_TRACE_DIR="$(mktemp -d)"

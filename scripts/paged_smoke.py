@@ -77,6 +77,14 @@ def _parse_args(argv=None):
                         "and WITHIN the kv_dtype swap must reproduce the "
                         "unpressured streams exactly (swap moves the "
                         "compressed bytes verbatim)")
+    p.add_argument("--fleet", action="store_true",
+                   help="also run the fleet cells: a 1-replica fleet joins "
+                        "the global identity matrix (fleet == bare engine), "
+                        "a 2-replica colocated fleet must warm-hit the "
+                        "shared prefix store with unchanged streams, and a "
+                        "2-replica disaggregated fleet (prefill cell -> "
+                        "decode cell handoffs over the swap lane) must "
+                        "reproduce its colocated twin bit for bit")
     p.add_argument("--trace", action="store_true",
                    help="run every engine with telemetry attached and "
                         "schema-validate its trace: every event against "
@@ -109,8 +117,9 @@ from repro.configs import get_config
 from repro.core import preset
 from repro.launch.mesh import make_serve_mesh
 from repro.models import ModelOptions, init_params
-from repro.serve import (Request, ServeEngine, Telemetry, load_trace,
-                         synthetic_requests, validate_events, validate_spans)
+from repro.serve import (FleetEngine, Request, ServeEngine, Telemetry,
+                         load_trace, synthetic_requests, validate_events,
+                         validate_spans)
 
 
 def _make_tel():
@@ -289,6 +298,71 @@ def main() -> int:
                                   streams["paged"], utils["paged"])
         if rc:
             return rc
+
+    if _ARGS.fleet:
+        geo = dict(n_slots=2, max_len=32, kv="paged", block_size=8,
+                   mesh=mesh)
+        # 1-replica fleet: joins the global identity matrix — the fleet
+        # tick's dispatch/commit halves run back to back ARE the engine's
+        tel = _make_tel()
+        fl = FleetEngine(cfg, params, opts, lk, replicas=1, telemetry=tel,
+                         **geo)
+        comps, _ = fl.run(reqs, load="closed")
+        streams["fleet1"] = {c.rid: c.tokens.tolist() for c in comps}
+        print(f"fleet1: handoffs={fl.handoffs}")
+        _check_trace("fleet1", tel, comps)
+        # 2-replica colocated fleet: identical streams (joins the matrix),
+        # and the shared prefix store must actually warm the second
+        # replica — a write-through publish by one cell, a cross hit by
+        # the other
+        tel = _make_tel()
+        fl = FleetEngine(cfg, params, opts, lk, replicas=2, telemetry=tel,
+                         **geo)
+        comps, _ = fl.run(reqs, load="closed")
+        streams["fleet2"] = {c.rid: c.tokens.tolist() for c in comps}
+        u = fl.utilization()
+        print(f"fleet2: publishes={u['kv_prefix_publishes']} cross_hits="
+              f"{u['shared_store_cross_hits']} entries="
+              f"{u['shared_store_entries']}")
+        _check_trace("fleet2", tel, comps)
+        if not (u["kv_prefix_publishes"] and u["shared_store_cross_hits"]):
+            print("FAIL: the shared prefix store never warmed a second "
+                  f"replica (publishes={u['kv_prefix_publishes']}, "
+                  f"cross_hits={u['shared_store_cross_hits']})",
+                  file=sys.stderr)
+            return 1
+        # disaggregated vs colocated: short fused programs (K=4) so the
+        # decode cell runs several programs per handed-off stream; its own
+        # colocated baseline, since K differs from the base cells
+        lk_f = dataclasses.replace(lk, decode_steps=4)
+        ref = ServeEngine(cfg, params, opts, lk_f, **geo)
+        comps, _ = ref.run(reqs, load="closed")
+        want = {c.rid: c.tokens.tolist() for c in comps}
+        tel = _make_tel()
+        fl = FleetEngine(cfg, params, opts, lk_f, replicas=2,
+                         prefill_replicas=1, telemetry=tel, **geo)
+        comps, _ = fl.run(reqs, load="closed")
+        got = {c.rid: c.tokens.tolist() for c in comps}
+        _check_trace("fleet2+disagg", tel, comps)
+        if got != want:
+            print("FAIL: disaggregated fleet diverges from the colocated "
+                  "engine", file=sys.stderr)
+            for rid in sorted(want):
+                if got.get(rid) != want[rid]:
+                    print(f"  rid {rid}: {got.get(rid)} != {want[rid]}",
+                          file=sys.stderr)
+            return 1
+        if fl.handoffs < len(reqs):
+            print(f"FAIL: disaggregated fleet handed off only "
+                  f"{fl.handoffs}/{len(reqs)} chains", file=sys.stderr)
+            return 1
+        if fl.engines[0].decode_tokens:
+            print("FAIL: the prefill cell ran decode work "
+                  f"({fl.engines[0].decode_tokens} tokens)", file=sys.stderr)
+            return 1
+        print(f"fleet smoke OK: 1-replica == bare engine, shared store "
+              f"warm-hit across replicas, disaggregated == colocated "
+              f"({fl.handoffs} handoffs)")
 
     if _ARGS.spec_decode:
         # self-speculation needs draft history and short fused programs to

@@ -13,7 +13,10 @@ event schema and span state machine, and prints:
     preemptions, verify windows, budget moves);
   * host-tier bandwidth: bytes moved across the device<->host boundary,
     and — when the cache is quantized — the compressed-vs-raw ratio the
-    kv_dtype axis saves.
+    kv_dtype axis saves;
+  * fleet traces: per-replica event counts (events stamped with a replica
+    id land on distinct Perfetto pid lanes) and the prefill->decode
+    handoffs that crossed them, with the chain bytes they carried.
 
 Usage: PYTHONPATH=src python scripts/trace_summary.py TRACE [TRACE...]
 """
@@ -87,6 +90,23 @@ def summarize(path: str) -> None:
             line += (f"; {raw} uncompressed — quantized blocks moved "
                      f"{raw / moved:.2f}x fewer bytes")
         print(line)
+
+    # fleet: replica lanes and the handoffs crossing them
+    if any("eng" in e for e in events):
+        per_eng = Counter(e.get("eng", 0) for e in events
+                          if e["type"] != "span")
+        lanes = "  ".join(f"engine/{e}={n}"
+                          for e, n in sorted(per_eng.items()))
+        print(f"fleet: {len(per_eng)} replica lanes ({lanes})")
+        hand = [e for e in events if e["type"] == "handoff"]
+        if hand:
+            hb = sum(e["args"]["bytes"] for e in hand)
+            routes = Counter((e["args"]["src"], e["args"]["dst"])
+                             for e in hand)
+            path = "  ".join(f"{s}->{d}={n}"
+                             for (s, d), n in sorted(routes.items()))
+            print(f"handoffs: {len(hand)} chains, {hb} bytes prefill->"
+                  f"decode ({path})")
 
 
 def main(argv=None) -> int:

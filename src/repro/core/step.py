@@ -491,6 +491,12 @@ def build_chain_export_fn(mesh: Optional[Mesh] = None, cache_sharding=None,
     of the pool), so the transfer can be drained asynchronously
     (``copy_to_host_async``) after the pool blocks are already reused.
 
+    This pair is also the fleet's prefill→decode handoff lane
+    (``repro.serve.fleet``): a finished prompt's chain exports out of the
+    prefill cell's pool into the shared host tier and imports into a
+    *different* engine's pool — disaggregation is a swap-out whose
+    swap-in lands elsewhere, no third program needed.
+
     Retraces once per chain length n — chain lengths are small and heavily
     repeated under steady swap pressure, so the jit cache stays tiny.
 

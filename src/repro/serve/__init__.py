@@ -9,8 +9,11 @@ beside it. See docs/serving.md.
 from repro.serve.cache import (KVBackend, SlottedKV, init_slot_cache,
                                make_slot_writer, slotify)
 from repro.serve.engine import KV_BACKENDS, ServeEngine, serve_report
+from repro.serve.fleet import (FleetEngine, ReplicaView, fleet_report,
+                               route_request)
 from repro.serve.paging import (BlockPool, BlockTable, HostBlockStore,
-                                PagedKV, PrefixIndex, SwapHandle, SwapStream)
+                                PagedKV, PrefixIndex, SharedHostTier,
+                                SwapHandle, SwapStream)
 from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
                                    DraftProposer,
                                    PreemptionPolicy, Request, SlotScheduler,
@@ -25,15 +28,17 @@ from repro.serve.telemetry import (EVENT_SCHEMA, NULL_TELEMETRY,
 
 __all__ = [
     "BlockPool", "BlockTable", "BudgetTuner", "Completion", "DraftProposer",
-    "EVENT_SCHEMA", "HostBlockStore",
+    "EVENT_SCHEMA", "FleetEngine", "HostBlockStore",
     "KVBackend", "KV_BACKENDS", "MIN_BUCKET", "MetricsRegistry",
     "NULL_TELEMETRY", "PagedKV", "PreemptionPolicy",
-    "PrefixIndex", "Request", "SPAN_STATES", "SPAN_TRANSITIONS",
-    "ServeEngine", "SlotScheduler", "SlotState",
+    "PrefixIndex", "ReplicaView", "Request", "SPAN_STATES",
+    "SPAN_TRANSITIONS", "ServeEngine", "SharedHostTier", "SlotScheduler",
+    "SlotState",
     "SlottedKV", "SwapHandle", "SwapStream", "Telemetry", "TraceRecorder",
-    "bucket_len",
+    "bucket_len", "fleet_report",
     "init_slot_cache", "load_trace",
-    "make_slot_writer", "pack_chunks", "phase_breakdown", "serve_report",
+    "make_slot_writer", "pack_chunks", "phase_breakdown", "route_request",
+    "serve_report",
     "slotify", "span_latencies", "synthetic_requests", "validate_events",
     "validate_spans",
 ]

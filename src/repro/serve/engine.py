@@ -54,7 +54,8 @@ from repro.core.step import SamplingConfig, program_label
 from repro.serve.cache import KVBackend, SlottedKV
 from repro.serve.scheduler import (MIN_BUCKET, BudgetTuner, Completion,
                                    DraftProposer, PreemptionPolicy, Request,
-                                   SlotScheduler, bucket_len, pack_chunks)
+                                   SlotScheduler, SlotState, bucket_len,
+                                   pack_chunks)
 from repro.serve.telemetry import NULL_TELEMETRY, Telemetry
 
 KV_BACKENDS = ("slotted", "paged")
@@ -101,7 +102,8 @@ class ServeEngine:
                  ttft_slo_s: Optional[float] = None,
                  spec_decode: str = "none", spec_width: int = 0,
                  telemetry: Optional[Telemetry] = None,
-                 async_swap: bool = True, kv_dtype: str = "bf16"):
+                 async_swap: bool = True, kv_dtype: str = "bf16",
+                 shared_host=None):
         linkage.validate()
         if cfg.embeds_in:
             raise ValueError("serving engine takes token ids, not embeddings")
@@ -157,6 +159,10 @@ class ServeEngine:
                 raise ValueError("kv_dtype quantization needs kv='paged': "
                                  "dense slot rows have no per-block scale "
                                  "tables")
+            if shared_host is not None:
+                raise ValueError("a shared host tier (shared_host) needs "
+                                 "kv='paged': dense slot rows have no block "
+                                 "structure to publish")
             self.kv: KVBackend = SlottedKV(cfg, params, opts, linkage,
                                            n_slots, max_len, self.sampling,
                                            bucket_fn, mesh=mesh,
@@ -175,7 +181,8 @@ class ServeEngine:
                               mesh=mesh, chunked=chunked, host_blocks=hb,
                               warm_start=warm_start,
                               spec=self.proposer is not None,
-                              async_swap=async_swap, kv_dtype=kv_dtype)
+                              async_swap=async_swap, kv_dtype=kv_dtype,
+                              shared_host=shared_host)
         else:
             raise ValueError(f"unknown kv backend {kv!r}; known: "
                              f"{KV_BACKENDS}")
@@ -215,6 +222,9 @@ class ServeEngine:
         self.spec_wasted_tokens = 0  # ...that it rejected (verify compute
                                      # spent on positions never emitted)
         self.spec_emitted_tokens = 0    # tokens emitted by verify programs
+        self.handoffs_out = 0        # fleet: chains handed to a decode cell
+        self.handoffs_in = 0         # fleet: chains adopted from a prefill
+                                     # cell (swap-in landed in this pool)
 
     def _bucket(self, n: int) -> int:
         """Power-of-two admission bucket (owned by the scheduler module —
@@ -394,11 +404,25 @@ class ServeEngine:
         With speculative decoding enabled, a draft-and-verify program runs
         instead whenever the proposer has drafts for any slot; steps where
         every slot draws a blank fall through to the plain decode program
-        (zero overhead relative to the spec-off engine)."""
+        (zero overhead relative to the spec-off engine).
+
+        Internally split at the blocking host sync so a fleet driver can
+        dispatch every replica's program before committing any of them
+        (``tick_dispatch``/``tick_commit``); run back to back the two
+        halves ARE this method — the 1-replica fleet is bit-identical to
+        the bare engine by construction."""
+        return self._step_end(self._step_begin(now_fn), now_fn)
+
+    def _step_begin(self, now_fn: Callable[[], float]):
+        """Dispatch half of ``step``: reserve, launch the decode program,
+        run the overlap-window host work — everything up to (excluding) the
+        blocking ``np.asarray`` sync. Returns a tagged pending ticket for
+        ``_step_end``. The spec-decode path resolves accept counts on the
+        host, so it runs whole here and returns its completions directly."""
         if self.proposer is not None:
             spec = self._step_spec(now_fn)
             if spec is not None:
-                return spec
+                return ("done", spec)
         tel = self.tel
         t0 = tel.now()
         self._reserve_all()
@@ -408,6 +432,20 @@ class ServeEngine:
         self.programs_run += 1
         t2 = tel.now()
         self._overlap_host_work()      # under the dispatched device step
+        return ("decode", (toks, t0, t1, t2))
+
+    def _step_end(self, pending, now_fn: Callable[[], float]
+                  ) -> List[Completion]:
+        """Commit half: block on the device result, harvest tokens, evict
+        finished slots, stamp the step trace event. Dispatches on the
+        ticket tag from ``_step_begin`` / ``_chunk_begin``."""
+        tag, data = pending
+        if tag == "done":
+            return data
+        if tag == "chunk":
+            return self._chunk_end(data, now_fn)
+        tel = self.tel
+        toks, t0, t1, t2 = data
         toks_host = None
         if not self.linkage.ret_async:
             toks_host = np.asarray(toks)            # "iret": sync every program
@@ -644,8 +682,14 @@ class ServeEngine:
         harvest mid-prefill slots as decode rows and write their garbage
         through real block tables / circular rows, so only the masked serve
         step may run while a prompt is partially resident."""
+        return self._step_end(self._chunk_begin(now_fn), now_fn)
+
+    def _chunk_begin(self, now_fn: Callable[[], float]):
+        """Dispatch half of the chunked serve step (see ``_step_begin`` for
+        the split discipline). Pure-decode steps fall through to the plain
+        decode dispatch."""
         if not any(self.sched.active[s].prefilling for s in self.sched.active):
-            return self.step(now_fn)
+            return self._step_begin(now_fn)
         tel = self.tel
         w0 = tel.now()
         B, W = self.n_slots, self.chunk_width
@@ -699,6 +743,14 @@ class ServeEngine:
                 self.chunk_budget, self.chunk_width,
                 self.tokens_per_program * ndec, list(nxt_rem)))
             tel.overlap("pack", tel.now() - t)
+        return ("chunk", (pre, grants, dec, emit0, t0, seq, w0, w1, w2))
+
+    def _chunk_end(self, data, now_fn: Callable[[], float]
+                   ) -> List[Completion]:
+        """Commit half of the chunked serve step: sync, harvest prefill
+        first-tokens and decode tokens, evict finished slots."""
+        pre, grants, dec, emit0, t0, seq, w0, w1, w2 = data
+        tel = self.tel
         t0_host = seq_host = None
         if not self.linkage.ret_async:
             t0_host, seq_host = np.asarray(t0), np.asarray(seq)
@@ -755,6 +807,18 @@ class ServeEngine:
     # -- driving loops ------------------------------------------------------
 
     def _admit_and_step(self, now_fn) -> List[Completion]:
+        return self.tick_commit(self.tick_dispatch(now_fn), now_fn)
+
+    def tick_dispatch(self, now_fn) -> Tuple[List[Completion],
+                                             Optional[tuple]]:
+        """Dispatch half of one engine tick: resume/admit bookkeeping plus
+        the step's dispatch half. Returns (completions so far, pending
+        ticket) for ``tick_commit``. A fleet driver calls every replica's
+        dispatch before any replica's commit, so all device programs are in
+        flight before the first blocking sync — the same overlap discipline
+        ``_overlap_host_work`` applies within one step, lifted across
+        replicas. ``tick_commit(tick_dispatch(now))`` run back to back is
+        exactly the single-engine tick."""
         finished = []
         self.tel.profile_tick(self.programs_run)
         self._drain_swaps()          # step boundary: complete deferred copies
@@ -768,9 +832,19 @@ class ServeEngine:
                 self._admit_chunked(now_fn)   # bookkeeping only, no program
             else:
                 finished += self._admit(now_fn)
+        pend = None
         if self.sched.active:
-            finished += (self._step_chunked(now_fn) if self.chunked
-                         else self.step(now_fn))
+            pend = (self._chunk_begin(now_fn) if self.chunked
+                    else self._step_begin(now_fn))
+        return finished, pend
+
+    def tick_commit(self, ticket, now_fn) -> List[Completion]:
+        """Commit half of one engine tick: block on the dispatched program,
+        harvest, and feed the TTFT tuner."""
+        finished, pend = ticket
+        finished = list(finished)
+        if pend is not None:
+            finished += self._step_end(pend, now_fn)
         if self.tuner is not None:
             for c in finished:
                 old = self.chunk_budget
@@ -778,6 +852,63 @@ class ServeEngine:
                 self.tel.budget_adjust(old, self.chunk_budget,
                                        self.tel.now())
         return finished
+
+    # -- fleet: prefill/decode disaggregation handoff -----------------------
+
+    def extract_handoffs(self) -> List[tuple]:
+        """Harvest every decode-ready slot for a fleet prefill→decode
+        handoff: the prompt is fully resident and generated token #1 is
+        committed, so a decode cell can continue the stream exactly where
+        this (prefill) cell left off. The transfer rides the swap lane —
+        ``swap_out`` exports the slot's chain through the host tier, and
+        the decode cell's ``swap_in`` imports it into its own pool; swap
+        round-trip identity (tests/test_paging.py) is what makes the
+        disaggregated stream bit-identical to the colocated one.
+
+        Slots whose chain cannot reach the host tier (no tier / tier full)
+        simply stay and decode locally — values unchanged, retried never
+        (this cell finishes them). Returns [(SlotState, SwapHandle,
+        next-token device scalar), ...] in slot order."""
+        out = []
+        for slot in sorted(self.sched.active):
+            st = self.sched.active[slot]
+            if st.prefilling or st.produced < 1:
+                continue
+            nxt = self._next[slot]
+            handle = self.kv.swap_out(slot)
+            if handle is None:
+                continue             # no host room: decode locally instead
+            st2 = self.sched.release(slot)
+            st2.pending_drafts = None    # drafts die with the handoff; the
+                                         # decode cell re-proposes
+            self.handoffs_out += 1
+            out.append((st2, handle, nxt))
+        return out
+
+    def inject_handoff(self, st: SlotState, handle, next_token) -> bool:
+        """Adopt a prefill cell's finished chain into this engine: claim a
+        slot, swap the chain into this pool, and resume decoding from the
+        carried next token. Returns False (nothing consumed) when no slot
+        is free or the pool cannot hold the chain yet — the fleet retries
+        or leaves the stream on its prefill cell."""
+        if self.sched.n_free == 0 or not self.kv.can_swap_in(handle):
+            return False
+        slot = self.sched.adopt(st)
+        if not self.kv.swap_in(slot, handle):
+            # can_swap_in raced nothing (single-threaded) — belt and braces,
+            # mirroring _resume_swapped: recompute the request from scratch
+            # here (deterministic sampling replays the identical stream)
+            self.kv.drop_swap(handle)
+            self.sched.release(slot)
+            self.sched.requeue_front(st.req)
+            self.preemptions += 1
+            now = self.tel.now()
+            self.tel.preempt(st.req.rid, slot, "recompute", now)
+            self.tel.state(st.req.rid, "queued", now)
+            return True                  # consumed (as a requeue)
+        self._next = self._next.at[slot].set(next_token)
+        self.handoffs_in += 1
+        return True
 
     def run(self, requests: List[Request], *, load: str = "closed",
             concurrency: Optional[int] = None,
@@ -881,6 +1012,9 @@ class ServeEngine:
         if self.tuner is not None:
             u["ttft_slo_s"] = self.tuner.slo_s
             u["budget_adjustments"] = self.tuner.adjustments
+        if self.handoffs_out or self.handoffs_in:
+            u["handoffs_out"] = self.handoffs_out
+            u["handoffs_in"] = self.handoffs_in
         u.update(self.kv.utilization())
         # on one device the single shard holds the whole store, so this
         # doubles as total KV residency — the equal-block-budget bytes the
@@ -910,6 +1044,8 @@ class ServeEngine:
         self.spec_accepted_tokens = 0
         self.spec_wasted_tokens = 0
         self.spec_emitted_tokens = 0
+        self.handoffs_out = 0
+        self.handoffs_in = 0
         if self.proposer is not None:
             self.proposer.proposed_tokens = 0
             self.proposer.lookups = 0

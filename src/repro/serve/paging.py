@@ -176,6 +176,12 @@ class HostBlockStore(BlockPool):
         self._tick = 0
         self.k = self.v = None
         self.ks = self.vs = None
+        #: drain callbacks of every SwapStream writing into this store —
+        #: each owning PagedKV registers its own. A store shared across
+        #: fleet replicas must complete EVERY writer's in-flight transfers
+        #: before a read or a free of a possibly-pending block, not just
+        #: the reading replica's (``PagedKV._drain_tier``).
+        self.drains: List[Any] = []
         if group_shapes is not None:
             dt = np.dtype(dtype)
             self.k = [np.zeros((s[0], num_blocks) + tuple(s[1:]), dt)
@@ -313,6 +319,51 @@ class SwapStream:
         return t, b, n
 
 
+@dataclasses.dataclass
+class SharedHostTier:
+    """One host tier shared by every replica of an engine fleet: the
+    ``HostBlockStore`` plus the prompt-keyed prefix map all replicas
+    demote into and promote from — a system prompt prefilled by any cell
+    warms the whole fleet. Also the transfer lane for prefill->decode
+    disaggregation handoffs (a ``SwapHandle``'s host blocks are pinned
+    here between the source replica's swap-out and the destination's
+    swap-in).
+
+    Coherence: single-threaded fleet ticks serialize all map mutations;
+    the async hazard is per-replica ``SwapStream`` writes still in flight
+    when *another* replica reads or frees a host block — every replica
+    registers its drain on ``store.drains`` and drains them all first
+    (see ``PagedKV._drain_tier``).
+    """
+    store: HostBlockStore
+    prefix_map: Dict[bytes, int] = dataclasses.field(default_factory=dict)
+    prefix_keys: Dict[int, Tuple[bytes, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    #: prefix key -> replica that wrote it (write-through publish / demote)
+    writer: Dict[bytes, Any] = dataclasses.field(default_factory=dict)
+    #: promotions of a prefix some *other* replica published — the
+    #: cross-engine warm hits the shared store exists for
+    cross_hits: int = 0
+
+    @classmethod
+    def build(cls, cfg: ArchConfig, opts, block_size: int, host_blocks: int,
+              kv_dtype: str = "bf16") -> "SharedHostTier":
+        """A store with the same block geometry ``PagedKV`` would build
+        for itself — replicas constructed from the same (cfg, opts,
+        block_size, kv_dtype) attach to it interchangeably."""
+        group_shapes = [(cfg.num_blocks, block_size, cfg.n_kv_heads,
+                         cfg.head_dim) for _ in cfg.block_pattern]
+        store_dt = kv_quant.storage_dtype(kv_dtype, opts.dtype)
+        scale_shapes = None
+        if kv_dtype != "bf16":
+            scale_shapes = [(cfg.num_blocks, cfg.n_kv_heads)
+                            for _ in cfg.block_pattern]
+        store = HostBlockStore(host_blocks, block_size,
+                               group_shapes=group_shapes, dtype=store_dt,
+                               scale_shapes=scale_shapes)
+        return cls(store=store)
+
+
 class _Node:
     __slots__ = ("key", "block", "children", "parent", "tick")
 
@@ -366,12 +417,15 @@ class PrefixIndex:
         return out
 
     def insert(self, tokens: np.ndarray, blocks: List[int], n_full: int,
-               pool: BlockPool) -> None:
+               pool: BlockPool) -> List[_Node]:
         """Register the first ``n_full`` full blocks of ``tokens`` (their
         KV already written to ``blocks``). Existing nodes are kept — the
         caller matched them first, so a fresh node always carries a fresh
-        block. The index retains each block it adopts."""
+        block. The index retains each block it adopts. Returns the nodes
+        created by THIS insert (the set a shared host tier write-through
+        publishes — see ``PagedKV._publish``)."""
         node = self.root
+        created: List[_Node] = []
         for i, key in enumerate(self._keys(tokens)):
             if i >= n_full:
                 break
@@ -381,8 +435,10 @@ class PrefixIndex:
                 node.children[key] = child
                 self._by_block[blocks[i]] = child
                 pool.retain(blocks[i])
+                created.append(child)
             self._touch(child)
             node = child
+        return created
 
     def n_evictable(self, pool: BlockPool) -> int:
         """Blocks freeable by cascading leaf eviction: nodes whose whole
@@ -626,7 +682,8 @@ class PagedKV:
                  mesh=None, chunked: bool = False,
                  host_blocks: Optional[int] = 0,
                  warm_start: Optional[str] = None, spec: bool = False,
-                 async_swap: bool = True, kv_dtype: str = "bf16"):
+                 async_swap: bool = True, kv_dtype: str = "bf16",
+                 shared_host: Optional[SharedHostTier] = None):
         from repro.core.linkage import L3_NSS
         from repro.core.step import (build_block_export_fn,
                                      build_block_import_fn,
@@ -674,17 +731,19 @@ class PagedKV:
         self.prefetch_issued = 0
         self.prefetch_hits = 0
         self.prefetch_cancels = 0
+        self.prefix_publishes = 0     # write-through copies to a shared tier
+        self._pending_publish: List[Any] = []  # chunked: nodes whose blocks
+                                               # the next serve_step writes
+        #: fleet replica id (the fleet runtime stamps it); feeds the shared
+        #: tier's writer map so cross-replica warm hits are countable
+        self.owner: Any = None
 
         # -- the host tier ---------------------------------------------------
         # host_blocks: 0 disables it; None sizes it like the device pool (the
         # swap-preemption default); warm_start grows it to fit the file.
-        if host_blocks is None:
-            host_blocks = num_blocks
-        n_persisted = 0
-        if warm_start:
-            with np.load(warm_start) as data:
-                n_persisted = int(data["n"])
-            host_blocks = max(host_blocks, n_persisted)
+        # A SharedHostTier overrides all of that: the store and prefix maps
+        # are the fleet's, sized and built once by the fleet runtime.
+        self.shared = shared_host
         group_shapes = [(cfg.num_blocks, block_size, cfg.n_kv_heads,
                          cfg.head_dim) for _ in cfg.block_pattern]
         store_dt = kv_quant.storage_dtype(kv_dtype, opts.dtype)
@@ -692,14 +751,34 @@ class PagedKV:
         if kv_dtype != "bf16":
             scale_shapes = [(cfg.num_blocks, cfg.n_kv_heads)
                             for _ in cfg.block_pattern]
-        self.host: Optional[HostBlockStore] = None
-        if host_blocks > 0:
-            self.host = HostBlockStore(host_blocks, block_size,
-                                       group_shapes=group_shapes,
-                                       dtype=store_dt,
-                                       scale_shapes=scale_shapes)
-        self.host_map: Dict[bytes, int] = {}     # token-prefix key -> hblk
-        self.host_keys: Dict[int, Tuple[bytes, np.ndarray]] = {}
+        if shared_host is not None:
+            st = shared_host.store
+            if st.block_size != block_size or st.k is None or \
+                    tuple(st.k[0].shape[2:]) != tuple(group_shapes[0][1:]) \
+                    or np.dtype(st.k[0].dtype) != np.dtype(store_dt):
+                raise ValueError(
+                    "shared host tier geometry does not match this replica "
+                    "(build it via SharedHostTier.build from the same cfg/"
+                    "opts/block_size/kv_dtype)")
+            self.host: Optional[HostBlockStore] = st
+            self.host_map = shared_host.prefix_map
+            self.host_keys = shared_host.prefix_keys
+        else:
+            if host_blocks is None:
+                host_blocks = num_blocks
+            n_persisted = 0
+            if warm_start:
+                with np.load(warm_start) as data:
+                    n_persisted = int(data["n"])
+                host_blocks = max(host_blocks, n_persisted)
+            self.host = None
+            if host_blocks > 0:
+                self.host = HostBlockStore(host_blocks, block_size,
+                                           group_shapes=group_shapes,
+                                           dtype=store_dt,
+                                           scale_shapes=scale_shapes)
+            self.host_map: Dict[bytes, int] = {}  # token-prefix key -> hblk
+            self.host_keys: Dict[int, Tuple[bytes, np.ndarray]] = {}
         # per-block tier-transfer bytes: quantized values + scale tables.
         # _raw_block_bytes is the uncompressed equivalent — the ratio is the
         # bandwidth saving the report's *_raw counter makes visible.
@@ -742,6 +821,10 @@ class PagedKV:
         self.stream: Optional[SwapStream] = None
         if self.async_swap and self.host is not None:
             self.stream = SwapStream(self.host.write_chain)
+            # every writer registers on the store: a shared tier must be
+            # able to complete ALL replicas' in-flight writes before any
+            # replica reads or frees a possibly-pending host block
+            self.host.drains.append(self.drain_swaps)
         # the decode program is shared by both step disciplines: two-phase
         # decode, and the chunked engine's pure-decode fast path
         self._dec = build_paged_decode_step(cfg, opts, linkage, max_len,
@@ -827,11 +910,22 @@ class PagedKV:
             h = self.host.alloc()
         return h
 
+    def _drain_tier(self) -> None:
+        """Complete every in-flight write into this host tier — ours AND,
+        on a fleet-shared tier, every other replica's (their streams all
+        registered on ``host.drains``). The guard before any host-tier
+        read or any free of a possibly-pending host block; equivalent to
+        ``drain_swaps`` for a private tier."""
+        if self.host is None:
+            return
+        for drain in self.host.drains:
+            drain()
+
     def _host_evict_lru(self) -> bool:
         # drain first: an entry picked here may still have its demote write
         # in flight — freeing (and reallocating) it before the deferred
         # write lands would corrupt the new owner's data
-        self.drain_swaps()
+        self._drain_tier()
         cands = [(self.host.tick[h], h) for h in self.host_map.values()
                  if self.host.refs[h] == 1]
         if not cands:
@@ -839,6 +933,8 @@ class PagedKV:
         _, h = min(cands)
         key, _ = self.host_keys.pop(h)
         del self.host_map[key]
+        if self.shared is not None:
+            self.shared.writer.pop(key, None)
         self.host.free(h)
         return True
 
@@ -891,32 +987,87 @@ class PagedKV:
         self.host_map[key] = h
         self.host_keys[h] = (key, tokens)
         self.host.touch(h)
+        if self.shared is not None:
+            self.shared.writer[key] = self.owner
         self.prefix_demotions += 1
         self.bytes_moved += self._block_bytes
         self.tel.demote(self._block_bytes, self._raw_bytes_of(1))
+
+    def _publish(self, nodes: List[Any]) -> None:
+        """Write-through to a fleet-shared tier: copy freshly indexed
+        prompt blocks host-side immediately (not only at eviction time),
+        so a prefix prefilled by THIS replica warms every other replica's
+        next admission. A prompt block's content is final once the index
+        adopts it (decode writes land past the prompt; CoW forks shared
+        blocks before any write), so the copy never goes stale. One chain
+        export program for all new blocks; async via the stream. No-op on
+        a private tier — single-engine behavior is untouched."""
+        if self.shared is None or self.host is None or not nodes:
+            return
+        hblks: List[int] = []
+        todo: List[Tuple[bytes, np.ndarray, Any]] = []
+        for node in nodes:
+            tokens = self.index.node_tokens(node)
+            key = tokens.tobytes()
+            if key in self.host_map:  # another replica already published it
+                continue
+            h = self._host_alloc()
+            if h is None:
+                break                 # tier pinned full: publish what fits
+            hblks.append(h)
+            todo.append((key, tokens, node))
+        if not hblks:
+            return
+        kvs = self._export_chain(
+            self.cache,
+            jnp.asarray([n.block for _, _, n in todo], jnp.int32))
+        nbytes = len(hblks) * self._block_bytes
+        if self.stream is not None:
+            self.stream.issue(hblks, kvs, nbytes)
+        else:
+            self.host.write_chain(hblks, jax.device_get(kvs))
+        for h, (key, tokens, _) in zip(hblks, todo):
+            self.host_map[key] = h
+            self.host_keys[h] = (key, tokens)
+            self.host.touch(h)
+            self.shared.writer[key] = self.owner
+        self.prefix_publishes += len(hblks)
+        self.bytes_moved += nbytes
+        for _ in hblks:
+            self.tel.demote(self._block_bytes, self._raw_bytes_of(1))
 
     def _promote(self, prompt: np.ndarray, matched: List[int]) -> List[int]:
         """Extend a device radix match with host-tier hits: pop each
         matching host entry, copy it back into a fresh device block, and
         adopt the promoted chain into the device index (so later admissions
         share on-device). Returns the promoted blocks — index-owned, like
-        ``PrefixIndex.match`` results."""
+        ``PrefixIndex.match`` results.
+
+        On a private tier the hits MOVE (host entry consumed); on a
+        fleet-shared tier they COPY — the entry stays in the shared map so
+        every other replica can still warm-hit it (it is pinned for the
+        duration against LRU eviction by a concurrent ``_host_alloc``)."""
         if self.host is None or not self.host_map:
             return []
         for b in matched:             # pin against demote-eviction below
             self.pool.retain(b)
         P = int(prompt.shape[0])
-        # pop every consecutive host hit first, then allocate device blocks
-        # in the same order the per-block path did (identical block ids),
-        # then move the whole chain in ONE import program
+        move = self.shared is None
+        # pop (or pin) every consecutive host hit first, then allocate
+        # device blocks in the same order the per-block path did (identical
+        # block ids), then move the whole chain in ONE import program
         hits: List[Tuple[bytes, int]] = []     # (key, hblk), chain order
         i = len(matched)
         while (i + 1) * self.bs <= P:
             key = prompt[:(i + 1) * self.bs].tobytes()
-            h = self.host_map.pop(key, None)
+            h = self.host_map.get(key)
             if h is None:
                 break
-            del self.host_keys[h]
+            if move:
+                del self.host_map[key]
+                del self.host_keys[h]
+            else:
+                self.host.retain(h)   # pin: refs 2 blocks LRU eviction
             hits.append((key, h))
             i += 1
         out: List[int] = []
@@ -924,20 +1075,28 @@ class PagedKV:
             b = self._alloc()
             if b is None:             # device dry: put unplaced entries back
                 for key2, h2 in hits[j:]:
-                    ntok = len(key2) // prompt.itemsize
-                    self.host_map[key2] = h2
-                    self.host_keys[h2] = (key2, prompt[:ntok].copy())
+                    if move:
+                        ntok = len(key2) // prompt.itemsize
+                        self.host_map[key2] = h2
+                        self.host_keys[h2] = (key2, prompt[:ntok].copy())
+                    else:
+                        self.host.free(h2)       # just drop the pin
                 del hits[j:]
                 break
             out.append(b)
         if out:
-            self.drain_swaps()        # pending demote writes may target hits
+            self._drain_tier()        # pending demote/publish writes may
+                                      # target hits — any replica's stream
             hblks = [h for _, h in hits]
             kvs = host_to_mesh(self.host.read_chain(hblks), self._chain_sh)
             self.cache = self._import_chain(self.cache, kvs,
                                             jnp.asarray(out, jnp.int32))
-            for _, h in hits:
-                self.host.free(h)
+            for key, h in hits:
+                self.host.free(h)     # move: releases; copy: drops the pin
+                if not move:
+                    self.host.touch(h)
+                    if self.shared.writer.get(key, self.owner) != self.owner:
+                        self.shared.cross_hits += 1
             self.prefix_promotions += len(out)
             self.bytes_moved += len(out) * self._block_bytes
             for _ in out:
@@ -1008,7 +1167,7 @@ class PagedKV:
         # drain first: the chain's own swap-out transfer may still be in
         # flight — freeing (and reallocating) its target blocks before the
         # deferred write lands would corrupt the new owner's data
-        self.drain_swaps()
+        self._drain_tier()
         if handle.prefetch is not None:
             handle.prefetch = None
             self.prefetch_cancels += 1
@@ -1037,7 +1196,9 @@ class PagedKV:
         if (self.stream is None or handle.dropped or not handle.hblks
                 or handle.prefetch is not None):
             return False
-        self.drain_swaps()            # its own swap-out may be in flight
+        self._drain_tier()            # its swap-out may be in flight — on a
+                                      # shared tier, on ANOTHER replica's
+                                      # stream (a disaggregation handoff)
         handle.prefetch = host_to_mesh(self.host.read_chain(handle.hblks),
                                        self._chain_sh)
         self.prefetch_issued += 1
@@ -1072,7 +1233,9 @@ class PagedKV:
                 self.prefetch_hits += 1
                 self.tel.prefetch(len(dblks), "hit")
             else:
-                self.drain_swaps()    # its own swap-out may be in flight
+                self._drain_tier()    # its swap-out may be in flight — on a
+                                      # shared tier, on the SOURCE replica's
+                                      # stream (a disaggregation handoff)
                 kvs = host_to_mesh(self.host.read_chain(handle.hblks),
                                    self._chain_sh)
             self.cache = self._import_chain(self.cache, kvs,
@@ -1118,7 +1281,7 @@ class PagedKV:
         compressed bytes plus their f32 scale tables (fp8 rides as a uint8
         bitcast — numpy has no float8 dtype in npz). Returns the number of
         entries written."""
-        self.drain_swaps()             # pending demote writes must land
+        self._drain_tier()             # pending demote writes must land
         entries = []                   # (tokens, kvs) in LRU-ish order
         seen = set()
         for key, h in self.host_map.items():
@@ -1256,7 +1419,8 @@ class PagedKV:
                                    jnp.asarray(offs),
                                    jnp.asarray(slot, jnp.int32),
                                    jnp.asarray(P, jnp.int32))
-        self.index.insert(prompt, chain.blocks, P // self.bs, self.pool)
+        self._publish(self.index.insert(prompt, chain.blocks, P // self.bs,
+                                        self.pool))
         self.chains[slot] = chain
         self.pos_host[slot] = P
         first, krow = self._sample(logits, key[None])
@@ -1343,7 +1507,11 @@ class PagedKV:
         prompt = self.prompts[slot]
         n_full = min(start + n, int(prompt.shape[0])) // self.bs
         if n_full:
-            self.index.insert(prompt, chain.blocks, n_full, self.pool)
+            # publish deferred to the end of serve_step: the chunk that
+            # completes these blocks has not been written yet — the insert
+            # here runs at plan time, before the program dispatches
+            self._pending_publish.extend(
+                self.index.insert(prompt, chain.blocks, n_full, self.pool))
         return True
 
     def serve_step(self, chunk_tokens, clen, start, reset, emit0, dec_mask,
@@ -1363,6 +1531,12 @@ class PagedKV:
         self.pos_host[:] = (np.asarray(start, np.int64)
                             + np.asarray(clen, np.int64)
                             + self.K * np.asarray(dec_mask, np.int64))
+        if self._pending_publish:
+            # the updated cache now carries this step's chunk writes; skip
+            # nodes a preemption/eviction replan removed in the meantime
+            nodes, self._pending_publish = self._pending_publish, []
+            self._publish([n for n in nodes
+                           if self.index._by_block.get(n.block) is n])
         return t0, seq
 
     # -- speculative decode -------------------------------------------------
@@ -1446,6 +1620,8 @@ class PagedKV:
                     * self._raw_block_bytes if self._block_bytes else 0),
                 "kv_prefix_demotions": self.prefix_demotions,
                 "kv_prefix_promotions": self.prefix_promotions,
+                "kv_prefix_publishes": self.prefix_publishes,
+                "kv_host_shared": int(self.shared is not None),
                 "kv_swap_fails": self.swap_fails,
                 "kv_async_swap": int(self.stream is not None),
                 "kv_stream_transfers": self.stream_transfers,
@@ -1464,6 +1640,7 @@ class PagedKV:
         self.bytes_moved = 0
         self.prefix_demotions = 0
         self.prefix_promotions = 0
+        self.prefix_publishes = 0
         self.swap_fails = 0
         self.stream_transfers = 0
         self.prefetch_issued = 0

@@ -460,6 +460,18 @@ class SlotScheduler:
         self.active[slot] = st
         return slot, st, handle
 
+    def adopt(self, st: SlotState) -> int:
+        """Install a slot state arriving from *outside* this scheduler —
+        a fleet prefill->decode handoff: the state (with its produced
+        tokens, chunks and timing marks) continues here in the lowest free
+        slot under a fresh ``admit_seq``, exactly like a resumed swap
+        victim. Caller guarantees ``n_free > 0``."""
+        slot = heapq.heappop(self._free)
+        self._admit_seq += 1
+        st.admit_seq = self._admit_seq
+        self.active[slot] = st
+        return slot
+
 
 # ---------------------------------------------------------------------------
 # Synthetic load generation

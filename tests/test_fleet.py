@@ -1,0 +1,200 @@
+"""Fleet serving: router policy, 1-replica identity, disaggregation
+identity, and the shared cross-engine prefix store.
+
+The load-bearing claims, mirroring the engine's own identity bar:
+
+  * a 1-replica fleet is the bare ``ServeEngine`` — bit-identical token
+    streams (the fleet tick's dispatch/commit halves run back to back
+    ARE ``_admit_and_step``);
+  * prefill/decode disaggregation changes *placement only* — handing a
+    finished prompt's KV chain from a prefill cell to a decode cell over
+    the swap lane reproduces the colocated engine's streams bit for bit;
+  * the shared host tier is a cache, not a semantic: prefixes published
+    by one replica warm another without changing any stream.
+
+The router's hypothesis properties live in tests/test_properties.py;
+this file carries their deterministic twins (hypothesis is optional).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import preset
+from repro.models import ModelOptions, init_params
+from repro.serve import (FleetEngine, ReplicaView, ServeEngine, fleet_report,
+                         route_request, synthetic_requests)
+
+CFG = get_config("tinyllama-1.1b").smoke()
+OPTS = ModelOptions(attn_impl="ref", scan_impl="ref", dtype=jnp.float32)
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    lk = preset("nss_shortcut")
+    return lk, lk.model_options(OPTS, on_tpu=False)
+
+
+def _reqs(vocab):
+    return synthetic_requests(4, prompt_len=16, max_new_tokens=8,
+                              vocab_size=vocab, seed=0, shared_prefix_len=8)
+
+
+def _streams(comps):
+    return {c.rid: c.tokens.tolist() for c in comps}
+
+
+# ---------------------------------------------------------------------------
+# Router policy: deterministic twins of the hypothesis properties
+# ---------------------------------------------------------------------------
+
+def _view(i, q=0, a=0, w=0, cap=4, m=0):
+    return ReplicaView(idx=i, queue_depth=q, active=a, swapped=w, cap=cap,
+                       match_tokens=m)
+
+
+def test_router_backpressure_cap():
+    # every replica at its cap -> None (the caller holds the request)
+    assert route_request([_view(0, q=4), _view(1, q=4)]) is None
+    # only the under-cap replica is eligible, even when it is busier
+    assert route_request([_view(0, q=4), _view(1, q=3, a=2)]) == 1
+    # a routed request never lands on a replica at its cap
+    for q0 in range(6):
+        views = [_view(0, q=q0), _view(1, q=2)]
+        idx = route_request(views)
+        if idx is not None:
+            assert views[idx].queue_depth < views[idx].cap
+
+
+def test_router_prefix_affinity_wins_over_load():
+    # the replica holding a resident prefix wins regardless of load...
+    views = [_view(0, a=2, q=2, m=16), _view(1)]
+    assert route_request(views) == 0
+    # ...and identical prompts (identical views) route identically
+    assert route_request(views) == route_request(views)
+    # longest match wins among several holders
+    views = [_view(0, m=8), _view(1, m=24), _view(2, m=16)]
+    assert route_request(views) == 1
+    # affinity never overrides the cap: the holder at cap loses the slot
+    views = [_view(0, q=4, m=32), _view(1)]
+    assert route_request(views) == 1
+
+
+def test_router_least_loaded_then_lowest_index():
+    views = [_view(0, a=2), _view(1, a=1), _view(2, a=1)]
+    assert route_request(views) == 1      # least loaded, lowest index tie
+    assert route_request([_view(0), _view(1)]) == 0
+    # queued + active + swapped all count as load
+    views = [_view(0, q=1, a=1), _view(1, w=1)]
+    assert route_request(views) == 1
+
+
+# ---------------------------------------------------------------------------
+# Fleet identity
+# ---------------------------------------------------------------------------
+
+def test_one_replica_fleet_is_the_bare_engine(params, setup):
+    lk, opts = setup
+    reqs = _reqs(CFG.vocab_size)
+    eng = ServeEngine(CFG, params, opts, lk, 2, MAX_LEN, kv="paged",
+                      block_size=8)
+    base = _streams(eng.run(reqs, load="closed")[0])
+    fleet = FleetEngine(CFG, params, opts, lk, replicas=1, n_slots=2,
+                        max_len=MAX_LEN, kv="paged", block_size=8)
+    comps, wall = fleet.run(reqs, load="closed")
+    assert _streams(comps) == base
+    rep = fleet_report(comps, wall, fleet)
+    assert rep["requests"] == len(reqs) and rep["replicas"] == 1
+    assert len(rep["per_replica"]) == 1
+
+
+def test_disaggregated_matches_colocated(params, setup):
+    """Prefill->decode handoffs over the swap lane change placement only:
+    2-replica disaggregated streams == the colocated engine's, with every
+    request actually handed off (short fused programs so decode spans
+    several programs on the decode cell)."""
+    lk, opts = setup
+    lk = dataclasses.replace(lk, decode_steps=4)
+    reqs = _reqs(CFG.vocab_size)
+    eng = ServeEngine(CFG, params, opts, lk, 2, MAX_LEN, kv="paged",
+                      block_size=8)
+    base = _streams(eng.run(reqs, load="closed")[0])
+    fleet = FleetEngine(CFG, params, opts, lk, replicas=2,
+                        prefill_replicas=1, n_slots=2, max_len=MAX_LEN,
+                        kv="paged", block_size=8)
+    comps, _ = fleet.run(reqs, load="closed")
+    assert _streams(comps) == base
+    assert fleet.handoffs == len(reqs)
+    u = fleet.utilization()
+    assert u["fleet_handoffs"] == len(reqs)
+    assert u["handoffs_out"] == u["handoffs_in"] == len(reqs)
+    # the prefill cell never ran a decode-only program for a handed-off
+    # stream: all its produced tokens are prefill first-tokens
+    pre = fleet.engines[0]
+    assert pre.decode_tokens == 0
+
+
+def test_disaggregated_int8_kv(params, setup):
+    """The handoff moves quantized blocks + scale tables verbatim, so
+    within kv_dtype=int8 the disaggregated fleet still reproduces the
+    colocated int8 engine exactly."""
+    lk, opts = setup
+    lk = dataclasses.replace(lk, decode_steps=4)
+    reqs = _reqs(CFG.vocab_size)
+    eng = ServeEngine(CFG, params, opts, lk, 2, MAX_LEN, kv="paged",
+                      block_size=8, kv_dtype="int8")
+    base = _streams(eng.run(reqs, load="closed")[0])
+    fleet = FleetEngine(CFG, params, opts, lk, replicas=2,
+                        prefill_replicas=1, n_slots=2, max_len=MAX_LEN,
+                        kv="paged", block_size=8, kv_dtype="int8")
+    comps, _ = fleet.run(reqs, load="closed")
+    assert _streams(comps) == base
+    assert fleet.handoffs == len(reqs)
+
+
+def test_shared_store_warms_other_replicas(params, setup):
+    """A prefix prefilled by one replica warms the fleet: the second
+    replica promotes it from the shared store instead of recomputing
+    (cross_hits > 0), and streams are unchanged."""
+    lk, opts = setup
+    reqs = _reqs(CFG.vocab_size)
+    eng = ServeEngine(CFG, params, opts, lk, 2, MAX_LEN, kv="paged",
+                      block_size=8)
+    base = _streams(eng.run(reqs, load="closed")[0])
+    fleet = FleetEngine(CFG, params, opts, lk, replicas=2, n_slots=2,
+                        max_len=MAX_LEN, kv="paged", block_size=8)
+    comps, _ = fleet.run(reqs, load="closed")
+    assert _streams(comps) == base
+    u = fleet.utilization()
+    assert u["kv_prefix_publishes"] > 0      # write-through happened
+    assert u["shared_store_cross_hits"] > 0  # ...and another replica hit it
+    assert u["shared_store_entries"] > 0
+    # drop clears device indexes AND the shared map
+    fleet.drop_prefix_cache()
+    assert fleet.utilization()["shared_store_entries"] == 0
+
+
+def test_fleet_rejects_bad_geometry(params, setup):
+    lk, opts = setup
+    with pytest.raises(ValueError):
+        FleetEngine(CFG, params, opts, lk, replicas=0, n_slots=2,
+                    max_len=MAX_LEN)
+    with pytest.raises(ValueError):     # disaggregation needs the swap lane
+        FleetEngine(CFG, params, opts, lk, replicas=2, prefill_replicas=1,
+                    n_slots=2, max_len=MAX_LEN, kv="slotted")
+    with pytest.raises(ValueError):     # must keep >= 1 decode replica
+        FleetEngine(CFG, params, opts, lk, replicas=2, prefill_replicas=2,
+                    n_slots=2, max_len=MAX_LEN, kv="paged")
+    with pytest.raises(ValueError):     # shared tier needs block structure
+        ServeEngine(CFG, params, opts, lk, 2, MAX_LEN, kv="slotted",
+                    shared_host=object())

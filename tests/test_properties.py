@@ -629,3 +629,63 @@ class ChunkBudgetMachine(RuleBasedStateMachine):
 ChunkBudgetMachine.TestCase.settings = settings(
     max_examples=20, stateful_step_count=30, deadline=None)
 TestChunkBudgetPacker = ChunkBudgetMachine.TestCase
+
+
+# ---------------------------------------------------------------------------
+# Fleet router: affinity + backpressure invariants over the pure policy
+# (deterministic twin in tests/test_fleet.py — hypothesis is optional)
+# ---------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+from repro.serve import ReplicaView, route_request
+
+_views = st.lists(
+    st.tuples(st.integers(0, 8), st.integers(0, 4), st.integers(0, 3),
+              st.integers(1, 8), st.integers(0, 64)),
+    min_size=1, max_size=6).map(
+        lambda rows: [ReplicaView(idx=i, queue_depth=q, active=a, swapped=w,
+                                  cap=c, match_tokens=m)
+                      for i, (q, a, w, c, m) in enumerate(rows)])
+
+
+@settings(**SETTINGS)
+@given(_views)
+def test_router_never_exceeds_admission_cap(views):
+    """Backpressure: a routed request never lands on a replica at its cap,
+    and the router returns None exactly when every replica is at it."""
+    idx = route_request(views)
+    eligible = [v for v in views if v.queue_depth < v.cap]
+    if not eligible:
+        assert idx is None
+    else:
+        assert idx is not None and views[idx].queue_depth < views[idx].cap
+
+
+@settings(**SETTINGS)
+@given(_views, st.integers(0, 5))
+def test_router_prefix_affinity(views, t):
+    """Session affinity: the one eligible replica holding a resident
+    prefix of the prompt wins regardless of relative load — so identical
+    prompts keep routing to the replica that already serves their prefix."""
+    target = t % len(views)
+    views = [_dc.replace(v, match_tokens=32 if v.idx == target else 0,
+                         queue_depth=0 if v.idx == target else v.queue_depth)
+             for v in views]
+    assert route_request(views) == target
+    # and the policy is a pure function: identical prompts (identical
+    # views) land on the identical replica
+    assert route_request(views) == route_request(views)
+
+
+@settings(**SETTINGS)
+@given(_views)
+def test_router_least_loaded_tiebreak(views):
+    """With no prefix anywhere, the router picks the least-loaded eligible
+    replica (lowest index on ties) — deterministic load balancing."""
+    views = [_dc.replace(v, match_tokens=0) for v in views]
+    idx = route_request(views)
+    eligible = [v for v in views if v.queue_depth < v.cap]
+    if eligible:
+        best = min(eligible, key=lambda v: (v.load, v.idx))
+        assert idx == best.idx

@@ -69,6 +69,7 @@ def _one_of_everything() -> TraceRecorder:
     rec.emit("prefetch", 0.65, blocks=3, status="issued")
     rec.emit("overlap", 0.65, kind="drain", hidden_s=0.002)
     rec.emit("demote", 0.7, blocks=1, bytes=1024)
+    rec.emit("handoff", 0.75, rid=7, src=0, dst=1, blocks=3, bytes=3072)
     rec.emit("promote", 0.8, blocks=1, bytes=1024)
     rec.emit("budget", 0.9, old=8, new=12)
     rec.emit("complete", 1.0, rid=7, tokens=8, ttft_s=0.35)
